@@ -1,0 +1,18 @@
+"""Paper Fig. 2: I/O amplification of the CPU-centric model on the six
+data-dependent taxi queries (and BaM's, for contrast)."""
+from repro.analytics import (QUERIES, make_taxi_table, run_query,
+                             run_query_baseline)
+
+
+def run():
+    tbl = make_taxi_table(1 << 16, seed=0)
+    rows = []
+    for q in QUERIES:
+        _, io = run_query(tbl, q)
+        _, iob = run_query_baseline(tbl, q)
+        rows.append((
+            f"amplification/{q}", 0.0,
+            f"cpu_centric={iob['amplification']:.2f}x "
+            f"bam={io['amplification']:.2f}x "
+            f"(paper Q1: 6.34x, Q2: 10.36x cpu-centric)"))
+    return rows

@@ -1,0 +1,22 @@
+"""Shared benchmark helpers: timing + CSV row emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]     # (name, us_per_call, derived)
+
+
+def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    # block on async dispatch if jax arrays
+    try:
+        import jax
+        jax.block_until_ready(out)
+    except Exception:
+        pass
+    return (time.perf_counter() - t0) / iters * 1e6

@@ -1,0 +1,49 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Each module's ``run()`` returns
+``[(name, us_per_call, derived), ...]``.
+
+  littles_law              §II-C   T x L = Q_d worked numbers
+  ssd_cost                 Tab III $/GB advantage over DRAM
+  uvm_bound                Fig 1   UVM fault ceiling vs BaM issue rate
+  analytics_amplification  Fig 2   I/O amplification Q1..Q6
+  iops_scaling             Fig 6   512B random IOPS vs #SSDs
+  graph_analytics          Fig 7   BFS/CC vs DRAM-only target T
+  cacheline_sweep          Fig 8   512B..8KB granularity
+  ssd_scaling              Fig 9   1..8 SSDs
+  taxi_queries             Fig 10  Q1..Q6 end-to-end
+  paged_kv                 (beyond paper) KV spill/fetch
+  moe_paging               (beyond paper) expert paging
+"""
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "littles_law", "ssd_cost", "uvm_bound", "analytics_amplification",
+    "iops_scaling", "graph_analytics", "cacheline_sweep", "ssd_scaling",
+    "taxi_queries", "paged_kv", "moe_paging",
+]
+
+
+def main() -> None:
+    only = sys.argv[1:] or MODULES
+    print("name,us_per_call,derived")
+    failed = []
+    for mod_name in MODULES:
+        if mod_name not in only:
+            continue
+        try:
+            mod = importlib.import_module(f"benchmarks.{mod_name}")
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.2f},{derived}")
+        except Exception as e:
+            failed.append(mod_name)
+            print(f"{mod_name},nan,FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Paper Fig. 9: scaling the number of SSDs behind one accelerator.
+
+Linear until the workload can't generate requests fast enough (paper: ~2
+Optanes for graph analytics) or the accelerator link saturates.
+"""
+from repro.core.ssd import ArrayOfSSDs, INTEL_OPTANE_P5800X
+from repro.graph import BamGraph, bfs, random_graph
+
+
+def run():
+    rows = []
+    indptr, dst = random_graph(2000, 12.0, seed=3)
+    base_t = None
+    for n in (1, 2, 4, 8):
+        g = BamGraph.build(indptr, dst, cacheline_bytes=4096,
+                           cache_bytes=1 << 16,
+                           ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, n))
+        _, st = bfs(g, 0)
+        t = st.metrics.summary()["sim_time_s"]
+        base_t = base_t or t
+        rows.append((f"ssd_scaling/bfs_{n}ssd", t * 1e6,
+                     f"speedup_vs_1ssd={base_t/max(t,1e-12):.2f}x"))
+    return rows

@@ -1,0 +1,47 @@
+"""Paper Fig. 1 / §II-A: the UVM page-fault ceiling vs the BaM queue rate.
+
+The paper measures the CPU-centric UVM fault handler topping out at ~500K
+IOPs (~14.5 GBps of 4K pages, 55% of PCIe), far below one Optane SSD.  We
+reproduce the comparison structurally: the measured BaM software issue rate
+(from the queue stack on this host) against the 500K UVM ceiling and the
+per-SSD device rates.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_us
+from repro.core import enqueue, make_queues, service_all
+from repro.core.ssd import INTEL_OPTANE_P5800X, SAMSUNG_980PRO
+
+UVM_FAULT_IOPS = 500e3            # paper's measured ceiling
+
+
+def run():
+    rng = np.random.default_rng(0)
+    wave = 4096
+    keys = jnp.asarray(rng.integers(0, 1 << 20, wave), jnp.int32)
+
+    @jax.jit
+    def submit_drain(qs, keys):
+        qs, _ = enqueue(qs, keys)
+        qs, comps = service_all(qs)
+        return comps.count
+
+    qs = make_queues(16, 1024)
+    us = time_us(lambda: submit_drain(qs, keys))
+    bam_rate = wave / (us / 1e6)
+    rows = [
+        ("uvm_bound/uvm_fault_ceiling", 0.0,
+         f"{UVM_FAULT_IOPS/1e3:.0f}K IOPs (paper measurement)"),
+        ("uvm_bound/bam_issue_rate", us,
+         f"{bam_rate/1e6:.2f}M IOPs -> {bam_rate/UVM_FAULT_IOPS:.1f}x the "
+         "UVM ceiling"),
+        ("uvm_bound/optane_demand", 0.0,
+         f"1 Optane needs {INTEL_OPTANE_P5800X.read_iops_512/1e6:.1f}M IOPs"
+         f" = {INTEL_OPTANE_P5800X.read_iops_512/UVM_FAULT_IOPS:.0f}x the"
+         " UVM ceiling"),
+        ("uvm_bound/980pro_demand", 0.0,
+         f"1 980pro needs {SAMSUNG_980PRO.read_iops_512/1e6:.2f}M IOPs"),
+    ]
+    return rows

@@ -1,0 +1,58 @@
+"""Quickstart: the BaM core in one page.
+
+Builds a storage-backed BamArray, reads a sparse wavefront on demand
+(coalesce -> cache -> NVMe queues -> gather), and prints the I/O metrics
+that are the paper's whole argument: fine-grain on-demand access moves a
+tiny fraction of the bytes a coarse-grain staging approach would.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ArrayOfSSDs, BamArray, INTEL_OPTANE_P5800X
+
+
+def main():
+    rng = np.random.default_rng(0)
+    # A "massive" structure: 8M floats (32 MB) on the storage tier.
+    big = rng.standard_normal((8 << 20,)).astype(np.float32)
+
+    # BamArray: 4KB cache lines, 1MB on-accelerator software cache,
+    # 16 NVMe queue pairs, one simulated Optane SSD behind it.
+    arr, st = BamArray.build(
+        big.reshape(1, -1), block_elems=1024,
+        num_sets=64, ways=4, num_queues=16, queue_depth=1024,
+        ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, 1))
+
+    # The compute decides what to read: a sparse, data-dependent wavefront.
+    idx = rng.integers(0, big.size, 4096).astype(np.int32)
+
+    read = jax.jit(arr.read)
+    vals, st = read(st, jnp.asarray(idx))
+    np.testing.assert_allclose(np.asarray(vals), big[idx], rtol=1e-6)
+
+    m = st.metrics.summary()
+    print("== BaM quickstart ==")
+    print(f"requests               : {m['requests']:.0f}")
+    print(f"cache-line misses      : {m['misses']:.0f}  (dedup'd by the "
+          "warp coalescer)")
+    print(f"bytes from storage     : {m['bytes_from_storage']:.3e}")
+    print(f"I/O amplification      : {m['amplification']:.1f}x "
+          f"(whole-array staging would be "
+          f"{big.nbytes / m['bytes_requested']:.0f}x)")
+    print(f"simulated device time  : {m['sim_time_s']*1e3:.3f} ms "
+          f"({m['read_iops']/1e6:.2f}M IOPs)")
+    print(f"doorbells rung         : {m['doorbells']:.0f} "
+          "(batched: one per queue per wavefront)")
+
+    # Second touch: the software cache absorbs it.
+    vals, st = read(st, jnp.asarray(idx))
+    m2 = st.metrics.summary()
+    print(f"re-read hit rate       : "
+          f"{(m2['hits']-m['hits'])/max(m2['hits']+m2['misses']-m['hits']-m['misses'],1):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""End-to-end serving driver: continuous batching over the BaM-paged KV
+cache, with cold pages spilling to the storage tier and returning on
+demand (the paper's mechanism applied to LM decode).
+
+    PYTHONPATH=src python examples/serve_lm.py --requests 8
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import smoke_config
+from repro.models.model import build_model, count_params
+from repro.serving import PagedKVManager, ServeEngine
+from repro.serving.engine import Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--hot-window", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = smoke_config("gemma3_12b").replace(
+        window=None, local_ratio=(0, 1), dtype="float32",
+        n_layers=4, d_model=128, n_heads=8, n_kv_heads=4, head_dim=32,
+        d_ff=256, kv_page_size=16)
+    api = build_model(cfg)
+    params, _ = api.init(jax.random.PRNGKey(0), args.max_seq)
+    print(f"serving a {count_params(params)/1e6:.1f}M-param model, "
+          f"{args.slots} slots, page size {cfg.kv_page_size}, hot window "
+          f"{args.hot_window} tokens")
+
+    kv = PagedKVManager(keep_last=args.hot_window)
+    eng = ServeEngine(cfg, params, batch_slots=args.slots,
+                      max_seq=args.max_seq, kv_manager=kv)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(2, cfg.vocab, 16).tolist(),
+                    max_new_tokens=args.new_tokens)
+            for i in range(args.requests)]
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.time()
+    eng.run()
+    dt = time.time() - t0
+    done = sum(r.done for r in reqs)
+    toks = sum(len(r.out) for r in reqs)
+    m = kv.metrics.summary()
+    print(f"completed {done}/{len(reqs)} requests, {toks} tokens in "
+          f"{dt:.1f}s ({toks/dt:.1f} tok/s on CPU)")
+    print(f"BaM paged-KV: spilled {m['write_ops']:.0f} pages, fetched back "
+          f"{m['misses']:.0f}, simulated device time "
+          f"{m['sim_time_s']*1e3:.2f} ms")
+    print("sample:", reqs[0].out)
+
+
+if __name__ == "__main__":
+    main()

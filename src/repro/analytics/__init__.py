@@ -1,0 +1,5 @@
+from repro.analytics.taxi import (TaxiTable, make_taxi_table, run_query,
+                                  run_query_baseline, QUERIES)
+
+__all__ = ["TaxiTable", "make_taxi_table", "run_query",
+           "run_query_baseline", "QUERIES"]

@@ -1,0 +1,5 @@
+from repro.configs.base import (ArchConfig, ShapeCell, SHAPES, get_config,
+                                list_archs, smoke_config)
+
+__all__ = ["ArchConfig", "ShapeCell", "SHAPES", "get_config", "list_archs",
+           "smoke_config"]

@@ -1,0 +1,21 @@
+"""olmoe-1b-7b — 64-expert top-8 MoE (arXiv:2409.02060).
+
+BaM integration: expert weights are paged through the BaM cache at decode
+(`bam_expert_paging`) — routing decides which experts' blocks are fetched,
+the paper's 'compute decides what to read'. long_500k: SKIPPED (full attn).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="olmoe-1b-7b", family="moe",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16, d_ff=1024,
+    vocab=50304, moe=True, n_experts=64, top_k=8, qk_norm=True,
+    bam_expert_paging=True,
+)
+
+SMOKE = ArchConfig(
+    name="olmoe-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=32,
+    vocab=256, moe=True, n_experts=8, top_k=2, qk_norm=True,
+    dtype="float32", kv_page_size=8, bam_expert_paging=True,
+)

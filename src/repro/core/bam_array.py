@@ -1,0 +1,393 @@
+"""``BamArray<T>`` / ``BamKVStore`` — BaM's high-level abstractions (§III-E).
+
+``BamArray`` is the paper's array whose subscript operator transparently:
+coalesces the wavefront's accesses, probes the software cache, issues NVMe
+reads for the misses through the high-throughput queues, fills the cache,
+and returns elements.  Here the subscript is a *functional* ``read``:
+
+    values, state' = bam.read(state, flat_indices)
+
+with every piece of BaM state (cache, queues, I/O metrics, and — for the
+in-graph backend — the storage tier itself) threaded through explicitly.
+
+The life of a wavefront (paper Fig. 3, adapted):
+
+    element idx ──► block key + offset
+        │ coalesce (warp coalescer, §III-D)          -> unique lines, leaders
+        │ probe cache                                 -> hits / misses
+        │ allocate victims (clock)                    -> slots (or bypass)
+        │ gather evicted dirty lines                  -> write-back commands
+        │ enqueue reads+write-backs, ring doorbells   -> SQ rings (§III-C)
+        │ service (simulated NVMe drain + DMA)        -> fetched lines
+        │ fill cache, update tags/dirty
+        ▼ gather elements (hit: cache line, miss: fetched line)
+
+Requests dropped by full rings are still served read-through (and counted),
+so a mis-sized queue config degrades accounting, never correctness.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cache as C
+from repro.core import queues as Q
+from repro.core.coalescer import coalesce
+from repro.core.metrics import IOMetrics
+from repro.core.ssd import ArrayOfSSDs, INTEL_OPTANE_P5800X
+from repro.core.storage import HBMStorage, SimStorage
+from repro.utils import pytree_dataclass
+
+__all__ = ["BamArray", "BamState", "BamKVStore"]
+
+
+@pytree_dataclass
+class BamState:
+    """All mutable BaM state, threaded functionally through reads/writes."""
+
+    cache: C.CacheState
+    queues: Q.QueueState
+    metrics: IOMetrics
+    storage: Any  # HBMStorage pytree for the in-graph backend, else None
+
+
+@dataclasses.dataclass
+class BamArray:
+    """Static description of one BaM-backed array (not a pytree)."""
+
+    storage: Any                    # SimStorage (host) or None (in-graph)
+    shape: tuple
+    dtype: Any
+    block_elems: int
+    ssd: ArrayOfSSDs = dataclasses.field(
+        default_factory=lambda: ArrayOfSSDs(INTEL_OPTANE_P5800X, 1))
+
+    # ---------------------------------------------------------------- init
+    @staticmethod
+    def build(data, block_elems: int, *,
+              num_sets: int, ways: int = 4,
+              num_queues: int = 8, queue_depth: int = 1024,
+              ssd: Optional[ArrayOfSSDs] = None,
+              backend: str = "sim") -> Tuple["BamArray", BamState]:
+        """Create the array + its initial state from a host/jnp array.
+
+        ``backend='sim'``: data lives on the host, fetched via pure_callback
+        (the NVMe DMA stand-in).  ``backend='hbm'``: data is an in-graph cold
+        buffer — used by dry-runs so the compiler sees the traffic.
+        """
+        import numpy as np
+        shape = tuple(data.shape)
+        if backend == "sim":
+            store = SimStorage.from_array(np.asarray(data), block_elems)
+            state_store = None
+            dtype = store.dtype
+        elif backend == "hbm":
+            hs = HBMStorage.from_array(jnp.asarray(data), block_elems)
+            store, state_store, dtype = None, hs, hs.dtype
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+        arr = BamArray(
+            storage=store, shape=shape, dtype=dtype, block_elems=block_elems,
+            ssd=ssd or ArrayOfSSDs(INTEL_OPTANE_P5800X, 1))
+        st = BamState(
+            cache=C.make_cache(num_sets, ways, block_elems, dtype),
+            queues=Q.make_queues(num_queues, queue_depth),
+            metrics=IOMetrics.zeros(),
+            storage=state_store,
+        )
+        return arr, st
+
+    # ------------------------------------------------------------- helpers
+    @property
+    def block_bytes(self) -> int:
+        return self.block_elems * jnp.dtype(self.dtype).itemsize
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= int(d)
+        return n
+
+    def _store(self, st: BamState):
+        return self.storage if self.storage is not None else st.storage
+
+    def _split(self, idx: jax.Array):
+        return (idx // self.block_elems).astype(jnp.int32), \
+               (idx % self.block_elems).astype(jnp.int32)
+
+    # ---------------------------------------------------------------- read
+    def read(self, st: BamState, idx: jax.Array,
+             valid: jax.Array | None = None) -> Tuple[jax.Array, BamState]:
+        """Gather ``self.flat[idx]`` for a wavefront of element indices."""
+        n = idx.shape[0]
+        if valid is None:
+            valid = (idx >= 0) & (idx < self.size)
+        blk, off = self._split(jnp.where(valid, idx, 0))
+        blk = jnp.where(valid, blk, -1)
+
+        # 1) warp-coalesce the wavefront to unique cache lines.
+        co = coalesce(blk, valid)
+        ukeys = co.unique_keys                      # (n,) padded with -1
+        uvalid = ukeys >= 0
+
+        # 2) probe the software cache.
+        pr = C.probe(st.cache, ukeys, uvalid)
+        n_hit = jnp.sum(pr.hit.astype(jnp.int32))
+        cache1 = C.count_hits(st.cache, n_hit)
+        miss = uvalid & ~pr.hit
+
+        # 3) allocate victims for the misses (hits protected this round).
+        cache2, alloc = C.allocate(cache1, ukeys, miss,
+                                   protect_slots=pr.slot)
+
+        # 4) evicted dirty lines -> write-back commands (gather before fill).
+        ev_rows = jnp.where(alloc.ok, alloc.slot, 0)
+        ev_lines = cache2.data[ev_rows]
+        wb = alloc.ok & alloc.evicted_dirty & (alloc.evicted_key >= 0)
+        wb_keys = jnp.where(wb, alloc.evicted_key, -1)
+
+        # 5) submit reads + write-backs to the SQ rings; ring doorbells.
+        qs1, rec_r = Q.enqueue(st.queues, jnp.where(miss, ukeys, -1),
+                               dst=alloc.slot)
+        qs2, rec_w = Q.enqueue(qs1, wb_keys,
+                               is_write=jnp.ones_like(wb))
+        depth_now = Q.in_flight(qs2)
+        qs3, comps = Q.service_all(qs2)
+
+        # 6) the DMA: fetch missed lines / write back dirty lines.
+        store = self._store(st)
+        lines_u = store.fetch_blocks(jnp.where(miss, ukeys, -1))
+        new_storage = st.storage
+        if self.storage is None:                    # in-graph backend
+            new_storage = store.write_blocks(wb_keys, ev_lines)
+        else:
+            self.storage.write_blocks(wb_keys, ev_lines)
+
+        # 7) completion: fill granted slots with fetched lines.
+        cache3 = C.fill(cache2, alloc.slot, alloc.ok, lines_u)
+
+        # 8) gather elements back to every requester (leader broadcast).
+        u = co.inverse_idx                          # (n,) request -> unique row
+        hit_u = pr.hit[u]
+        slot_u = jnp.where(pr.slot[u] >= 0, pr.slot[u], 0)
+        from_cache = cache3.data[slot_u, off]
+        from_fetch = lines_u[u, off]
+        vals = jnp.where(hit_u, from_cache, from_fetch)
+        vals = jnp.where(valid, vals, 0).astype(self.dtype)
+
+        # 9) metrics.
+        n_valid = jnp.sum(valid.astype(jnp.int32))
+        n_miss = jnp.sum(miss.astype(jnp.int32))
+        n_wb = jnp.sum(wb.astype(jnp.int32))
+        itemsize = jnp.dtype(self.dtype).itemsize
+        mt = st.metrics
+        sim_t = self.ssd.service_time_traced(
+            n_miss, self.block_bytes,
+            queue_depth_limit=st.queues.num_queues * st.queues.depth)
+        sim_t = sim_t + self.ssd.service_time_traced(
+            n_wb, self.block_bytes, write=True,
+            queue_depth_limit=st.queues.num_queues * st.queues.depth)
+        metrics = IOMetrics(
+            requests=mt.requests + n_valid,
+            bytes_requested=mt.bytes_requested + n_valid * itemsize,
+            hits=mt.hits + n_hit,
+            misses=mt.misses + n_miss,
+            bytes_from_storage=mt.bytes_from_storage + n_miss * self.block_bytes,
+            write_ops=mt.write_ops + n_wb,
+            bytes_to_storage=mt.bytes_to_storage + n_wb * self.block_bytes,
+            doorbells=mt.doorbells + rec_r.n_doorbells + rec_w.n_doorbells,
+            sim_time_s=mt.sim_time_s + sim_t,
+            max_queue_depth=jnp.maximum(mt.max_queue_depth,
+                                        depth_now.astype(jnp.int32)),
+        )
+        return vals, BamState(cache=cache3, queues=qs3, metrics=metrics,
+                              storage=new_storage)
+
+    # --------------------------------------------------------------- write
+    def write(self, st: BamState, idx: jax.Array, values: jax.Array,
+              valid: jax.Array | None = None) -> BamState:
+        """Element-level writes: read-modify-write with write-allocate.
+
+        Duplicate element indices within one wavefront are last-writer-wins
+        with unspecified order (as on the GPU).
+        """
+        n = idx.shape[0]
+        if valid is None:
+            valid = (idx >= 0) & (idx < self.size)
+        blk, off = self._split(jnp.where(valid, idx, 0))
+        blk = jnp.where(valid, blk, -1)
+
+        co = coalesce(blk, valid)
+        ukeys = co.unique_keys
+        uvalid = ukeys >= 0
+        pr = C.probe(st.cache, ukeys, uvalid)
+        n_hit = jnp.sum(pr.hit.astype(jnp.int32))
+        cache1 = C.count_hits(st.cache, n_hit)
+        miss = uvalid & ~pr.hit
+
+        cache2, alloc = C.allocate(cache1, ukeys, miss, protect_slots=pr.slot)
+        ev_rows = jnp.where(alloc.ok, alloc.slot, 0)
+        ev_lines = cache2.data[ev_rows]
+        wb = alloc.ok & alloc.evicted_dirty & (alloc.evicted_key >= 0)
+        wb_keys = jnp.where(wb, alloc.evicted_key, -1)
+
+        qs1, rec_r = Q.enqueue(st.queues, jnp.where(miss, ukeys, -1),
+                               dst=alloc.slot)
+        qs2, rec_w = Q.enqueue(qs1, wb_keys, is_write=jnp.ones_like(wb))
+        depth_now = Q.in_flight(qs2)
+        qs3, _ = Q.service_all(qs2)
+
+        store = self._store(st)
+        lines_u = store.fetch_blocks(jnp.where(miss, ukeys, -1))  # write-allocate
+        new_storage = st.storage
+        if self.storage is None:
+            new_storage = store.write_blocks(wb_keys, ev_lines)
+        else:
+            self.storage.write_blocks(wb_keys, ev_lines)
+        cache3 = C.fill(cache2, alloc.slot, alloc.ok, lines_u)
+
+        # Scatter the new element values into their lines *in the cache*.
+        u = co.inverse_idx
+        slot_r = jnp.where(pr.hit[u], pr.slot[u], alloc.slot[u])  # (n,)
+        in_cache = slot_r >= 0
+        rows = jnp.where(valid & in_cache, slot_r, cache3.num_lines)
+        cols = jnp.where(valid & in_cache, off, 0)
+        data = cache3.data.at[rows, cols].set(
+            values.astype(self.dtype), mode="drop")
+        cache4 = C._replace_data(cache3, data=data)
+        touched_slots = jnp.where(valid & in_cache, slot_r, -1)
+        cache5 = C.mark_dirty(cache4, touched_slots)
+
+        # Bypassed lines (no slot granted): write-through directly.
+        byp = miss & ~alloc.ok
+        byp_any = byp[u] & valid
+        byp_rows = jnp.where(byp_any, u, lines_u.shape[0])
+        byp_lines = lines_u.at[byp_rows, jnp.where(byp_any, off, 0)].set(
+            values.astype(self.dtype), mode="drop")
+        bt_keys = jnp.where(byp, ukeys, -1)
+        if self.storage is None:
+            new_storage = new_storage.write_blocks(bt_keys, byp_lines)
+        else:
+            self.storage.write_blocks(bt_keys, byp_lines)
+
+        n_valid = jnp.sum(valid.astype(jnp.int32))
+        n_miss = jnp.sum(miss.astype(jnp.int32))
+        n_wb = jnp.sum(wb.astype(jnp.int32)) + jnp.sum(byp.astype(jnp.int32))
+        itemsize = jnp.dtype(self.dtype).itemsize
+        mt = st.metrics
+        sim_t = self.ssd.service_time_traced(
+            n_miss, self.block_bytes,
+            queue_depth_limit=st.queues.num_queues * st.queues.depth)
+        sim_t = sim_t + self.ssd.service_time_traced(
+            n_wb, self.block_bytes, write=True,
+            queue_depth_limit=st.queues.num_queues * st.queues.depth)
+        metrics = IOMetrics(
+            requests=mt.requests + n_valid,
+            bytes_requested=mt.bytes_requested + n_valid * itemsize,
+            hits=mt.hits + n_hit,
+            misses=mt.misses + n_miss,
+            bytes_from_storage=mt.bytes_from_storage + n_miss * self.block_bytes,
+            write_ops=mt.write_ops + n_wb,
+            bytes_to_storage=mt.bytes_to_storage + n_wb * self.block_bytes,
+            doorbells=mt.doorbells + rec_r.n_doorbells + rec_w.n_doorbells,
+            sim_time_s=mt.sim_time_s + sim_t,
+            max_queue_depth=jnp.maximum(mt.max_queue_depth,
+                                        depth_now.astype(jnp.int32)),
+        )
+        return BamState(cache=cache5, queues=qs3, metrics=metrics,
+                        storage=new_storage)
+
+    def flush(self, st: BamState) -> BamState:
+        """Write back every dirty resident line (shutdown / barrier path)."""
+        tags = st.cache.tags.reshape(-1)
+        dirty = st.cache.dirty.reshape(-1)
+        keys = jnp.where(dirty & (tags >= 0), tags, -1)
+        store = self._store(st)
+        new_storage = st.storage
+        if self.storage is None:
+            new_storage = store.write_blocks(keys, st.cache.data)
+        else:
+            self.storage.write_blocks(keys, st.cache.data)
+        n_wb = jnp.sum((keys >= 0).astype(jnp.int32))
+        cache = C._replace_data(st.cache, dirty=jnp.zeros_like(st.cache.dirty))
+        mt = st.metrics
+        metrics = dataclasses.replace(
+            mt,
+            write_ops=mt.write_ops + n_wb,
+            bytes_to_storage=mt.bytes_to_storage + n_wb * self.block_bytes,
+            sim_time_s=mt.sim_time_s + self.ssd.service_time_traced(
+                n_wb, self.block_bytes, write=True),
+        )
+        return BamState(cache=cache, queues=st.queues, metrics=metrics,
+                        storage=new_storage)
+
+
+@dataclasses.dataclass
+class BamKVStore:
+    """Key-value abstraction: device-resident open-addressed index over
+    storage-resident fixed-width values (the paper's 'key-value store').
+
+    The index (one int32 per capacity slot) is small and lives in device
+    memory; the values — the massive structure — live behind a
+    :class:`BamArray`.  This is exactly the split used by the framework's
+    on-demand embedding feature.
+    """
+
+    array: BamArray                 # values: (capacity, value_elems) flattened
+    capacity: int
+    value_elems: int
+    probes: int = 8
+
+    @staticmethod
+    def build(keys, values, *, capacity: int | None = None,
+              probes: int = 8, **bam_kw):
+        """Host-side bulk build; returns (kv, index_table, BamState)."""
+        import numpy as np
+        keys = np.asarray(keys, np.int32)
+        values = np.asarray(values)
+        n, value_elems = values.shape
+        capacity = capacity or max(2 * n, 16)
+        table = np.full((capacity,), -1, np.int32)     # key per slot
+        rows = np.full((capacity,), -1, np.int32)      # value row per slot
+        store_vals = np.zeros((capacity, value_elems), values.dtype)
+        for i, k in enumerate(keys):
+            h = (int(k) * 2654435761) % capacity
+            for j in range(capacity):
+                s = (h + j) % capacity
+                if table[s] == -1 or table[s] == k:
+                    table[s] = k
+                    rows[s] = i
+                    store_vals[s] = values[i]
+                    break
+            else:
+                raise ValueError("kv store full")
+        bam_kw.setdefault("block_elems", value_elems)
+        arr, st = BamArray.build(store_vals, **bam_kw)
+        kv = BamKVStore(array=arr, capacity=capacity,
+                        value_elems=value_elems, probes=probes)
+        return kv, jnp.asarray(table), st
+
+    def lookup(self, st: BamState, table: jax.Array, keys: jax.Array
+               ) -> Tuple[jax.Array, jax.Array, BamState]:
+        """Return (values, found_mask, state') for a wavefront of keys."""
+        cap = self.capacity
+        h = (keys.astype(jnp.uint32) * jnp.uint32(2654435761)).astype(jnp.int32)
+        h = jnp.abs(h) % cap
+        slot = jnp.full_like(keys, -1)
+        for j in range(self.probes):                   # static unroll, small
+            s = (h + j) % cap
+            match = (table[s] == keys) & (slot < 0)
+            slot = jnp.where(match, s, slot)
+        found = slot >= 0
+        base = jnp.where(found, slot, 0) * self.value_elems
+        # one wavefront read per value element column (value_elems small) —
+        # flatten to a single wavefront of element indices instead:
+        idx = (base[:, None] + jnp.arange(self.value_elems)[None, :]).reshape(-1)
+        vmask = jnp.repeat(found, self.value_elems)
+        flat, st = self.array.read(st, idx, vmask)
+        vals = flat.reshape(keys.shape[0], self.value_elems)
+        return vals, found, st

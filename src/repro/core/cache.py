@@ -1,0 +1,232 @@
+"""BaM software cache (§III-D) — set-associative, clock replacement, functional.
+
+The paper's cache is a GPU-resident, lock-minimal cache keyed by block
+offset: per-line atomic state + reference counts; a global clock hand picks
+victims; line locks prevent duplicate fetches of the same line.
+
+TPU adaptation.  The unit of concurrency is the wavefront, and the BaM
+coalescer (``core/coalescer.py``) runs *before* the cache, so by construction
+at most one requester per line reaches the cache — the paper's per-line lock
+becomes a static guarantee.  All state transitions are vectorized scatters
+over a functional :class:`CacheState`:
+
+* probe      — hash(key) -> set, compare the set's ``ways`` tags at once;
+* allocate   — per-set clock sweep; concurrent misses that collide on a set
+  are rank-ordered with a segmented prefix-sum so each takes a distinct way
+  (or bypasses the cache when the set has no evictable way — the paper's
+  "thread moves on and retries" becomes read-through-without-insert);
+* fill       — scatter fetched lines into the data array;
+* refcounts  — ``acquire``/``release`` pin lines against eviction, and a
+  transient ``protect`` overlay guards this wavefront's hits.
+
+The clock hand is per-set (a sharded fine-grain analogue of the paper's
+single global counter — same policy, no cross-set serialization).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import mix_hash, pytree_dataclass, segment_rank
+
+__all__ = [
+    "CacheState", "make_cache", "probe", "allocate", "fill",
+    "acquire", "release", "pin_keys", "mark_dirty",
+]
+
+
+@pytree_dataclass(meta_fields=("num_sets", "ways", "line_elems"))
+class CacheState:
+    num_sets: int
+    ways: int
+    line_elems: int
+    tags: jax.Array        # (num_sets, ways) int32 block key, -1 invalid
+    refcount: jax.Array    # (num_sets, ways) int32 — pinned lines have >0
+    dirty: jax.Array       # (num_sets, ways) bool — needs write-back on evict
+    clock_hand: jax.Array  # (num_sets,) int32 in [0, ways)
+    data: jax.Array        # (num_sets*ways, line_elems)
+    hits: jax.Array        # () int32 cumulative line hits (post-coalesce)
+    misses: jax.Array      # () int32 cumulative line misses
+    bypasses: jax.Array    # () int32 misses that could not be inserted
+
+    @property
+    def num_lines(self) -> int:
+        return self.num_sets * self.ways
+
+
+def make_cache(num_sets: int, ways: int, line_elems: int,
+               dtype=jnp.float32) -> CacheState:
+    z = lambda: jnp.zeros((), jnp.int32)
+    return CacheState(
+        num_sets=num_sets, ways=ways, line_elems=line_elems,
+        tags=jnp.full((num_sets, ways), -1, jnp.int32),
+        refcount=jnp.zeros((num_sets, ways), jnp.int32),
+        dirty=jnp.zeros((num_sets, ways), bool),
+        clock_hand=jnp.zeros((num_sets,), jnp.int32),
+        data=jnp.zeros((num_sets * ways, line_elems), dtype),
+        hits=z(), misses=z(), bypasses=z(),
+    )
+
+
+def _set_of(cache: CacheState, keys: jax.Array) -> jax.Array:
+    return mix_hash(keys) % cache.num_sets
+
+
+@pytree_dataclass
+class ProbeResult:
+    hit: jax.Array    # (m,) bool
+    slot: jax.Array   # (m,) int32 flat line slot (set*ways+way); -1 on miss
+    set_idx: jax.Array  # (m,) int32 (reused by allocate)
+
+
+def probe(cache: CacheState, keys: jax.Array,
+          valid: jax.Array | None = None) -> ProbeResult:
+    """Vectorized set-associative lookup for a wavefront of (unique) keys."""
+    if valid is None:
+        valid = keys >= 0
+    sets = _set_of(cache, keys)                         # (m,)
+    tag_rows = cache.tags[sets]                         # (m, ways)
+    eq = (tag_rows == keys[:, None]) & valid[:, None]
+    hit = eq.any(axis=1)
+    way = jnp.argmax(eq, axis=1).astype(jnp.int32)
+    slot = jnp.where(hit, sets * cache.ways + way, -1).astype(jnp.int32)
+    return ProbeResult(hit=hit, slot=slot, set_idx=sets.astype(jnp.int32))
+
+
+_segment_rank = segment_rank
+
+
+@pytree_dataclass
+class AllocResult:
+    slot: jax.Array          # (m,) int32 flat slot granted; -1 if bypassed/invalid
+    ok: jax.Array            # (m,) bool — inserted into the cache
+    evicted_key: jax.Array   # (m,) int32 key previously in the slot (-1 none)
+    evicted_dirty: jax.Array  # (m,) bool — evicted line needs write-back
+
+
+def allocate(cache: CacheState, keys: jax.Array,
+             valid: jax.Array,
+             protect_slots: jax.Array | None = None,
+             ) -> Tuple[CacheState, AllocResult]:
+    """Grant a victim slot per missed key (clock sweep, rank-disambiguated).
+
+    ``protect_slots`` is a wavefront-transient list of flat slots that must
+    not be evicted (this round's hits); pass the probe hits' slots.
+    """
+    m = keys.shape[0]
+    ways = cache.ways
+    sets = _set_of(cache, keys)
+
+    # Eviction eligibility per line: not referenced, not protected this round.
+    elig_line = (cache.refcount == 0).reshape(-1)
+    if protect_slots is not None:
+        psafe = jnp.where(protect_slots >= 0, protect_slots,
+                          cache.num_lines)           # OOB -> dropped
+        overlay = jnp.zeros((cache.num_lines,), bool).at[psafe].set(
+            True, mode="drop")
+        elig_line = elig_line & ~overlay
+    elig = elig_line.reshape(cache.num_sets, ways)
+
+    rank = _segment_rank(sets, valid)                   # (m,)
+    hand = cache.clock_hand[sets]                       # (m,)
+    way_order = (hand[:, None] + jnp.arange(ways, dtype=jnp.int32)[None, :]) % ways
+    elig_rot = elig[sets[:, None], way_order]           # (m, ways) in sweep order
+    csum = jnp.cumsum(elig_rot.astype(jnp.int32), axis=1)
+    want = (rank + 1)[:, None]
+    sel = elig_rot & (csum == want)                     # first way with cum count == rank+1
+    ok = valid & (csum[:, -1] >= rank + 1)
+    way_pos = jnp.argmax(sel, axis=1).astype(jnp.int32)
+    way = way_order[jnp.arange(m), way_pos]
+    slot = (sets * ways + way).astype(jnp.int32)
+
+    evicted_key = jnp.where(ok, cache.tags[sets, way], -1).astype(jnp.int32)
+    evicted_dirty = jnp.where(ok, cache.dirty[sets, way], False)
+
+    # Scatter the new tags (distinct (set,way) per ok-row by construction;
+    # non-granted rows scatter out of bounds and are dropped).
+    s_i = jnp.where(ok, sets, cache.num_sets)
+    w_i = jnp.where(ok, way, 0)
+    tags = cache.tags.at[s_i, w_i].set(keys, mode="drop")
+    dirty = cache.dirty.at[s_i, w_i].set(False, mode="drop")
+
+    # Advance each touched set's hand past the last examined position.
+    adv = jnp.zeros((cache.num_sets,), jnp.int32).at[s_i].max(
+        way_pos + 1, mode="drop")
+    clock_hand = (cache.clock_hand + adv) % ways
+
+    n_ok = jnp.sum(ok.astype(jnp.int32))
+    n_valid = jnp.sum(valid.astype(jnp.int32))
+    cache2 = CacheState(
+        num_sets=cache.num_sets, ways=ways, line_elems=cache.line_elems,
+        tags=tags, refcount=cache.refcount, dirty=dirty,
+        clock_hand=clock_hand, data=cache.data,
+        hits=cache.hits, misses=cache.misses + n_valid,
+        bypasses=cache.bypasses + (n_valid - n_ok),
+    )
+    return cache2, AllocResult(
+        slot=jnp.where(ok, slot, -1), ok=ok,
+        evicted_key=evicted_key, evicted_dirty=evicted_dirty)
+
+
+def fill(cache: CacheState, slots: jax.Array, ok: jax.Array,
+         lines: jax.Array) -> CacheState:
+    """DMA-completion analogue: scatter fetched lines into granted slots."""
+    idx = jnp.where(ok, slots, cache.num_lines)          # OOB -> dropped
+    data = cache.data.at[idx].set(lines.astype(cache.data.dtype),
+                                  mode="drop")
+    return _replace_data(cache, data=data)
+
+
+def count_hits(cache: CacheState, n_hits: jax.Array) -> CacheState:
+    return _replace_data(cache, hits=cache.hits + n_hits)
+
+
+def acquire(cache: CacheState, slots: jax.Array) -> CacheState:
+    """refcount++ on the given flat slots (slot<0 ignored)."""
+    ok = slots >= 0
+    idx = jnp.where(ok, slots, 0)
+    rc = cache.refcount.reshape(-1).at[idx].add(ok.astype(jnp.int32))
+    return _replace_data(cache, refcount=rc.reshape(cache.num_sets, cache.ways))
+
+
+def release(cache: CacheState, slots: jax.Array) -> CacheState:
+    ok = slots >= 0
+    idx = jnp.where(ok, slots, 0)
+    rc = cache.refcount.reshape(-1).at[idx].add(-ok.astype(jnp.int32))
+    rc = jnp.maximum(rc, 0)
+    return _replace_data(cache, refcount=rc.reshape(cache.num_sets, cache.ways))
+
+
+def pin_keys(cache: CacheState, keys: jax.Array) -> CacheState:
+    """User-directed residency control (paper: 'fine-grain control of cache
+    residency'): pin resident lines for the given keys."""
+    pr = probe(cache, keys)
+    return acquire(cache, pr.slot)
+
+
+def mark_dirty(cache: CacheState, slots: jax.Array) -> CacheState:
+    ok = slots >= 0
+    idx = jnp.where(ok, slots, cache.num_lines)          # OOB -> dropped
+    d = cache.dirty.reshape(-1)
+    d = d.at[idx].set(True, mode="drop")
+    return _replace_data(cache, dirty=d.reshape(cache.num_sets, cache.ways))
+
+
+def write_line(cache: CacheState, slots: jax.Array, ok: jax.Array,
+               lines: jax.Array) -> CacheState:
+    """Update resident lines in place and mark them dirty (write hit path)."""
+    cache = fill(cache, slots, ok, lines)
+    return mark_dirty(cache, jnp.where(ok, slots, -1))
+
+
+def _replace_data(cache: CacheState, **kw) -> CacheState:
+    fields = dict(
+        num_sets=cache.num_sets, ways=cache.ways, line_elems=cache.line_elems,
+        tags=cache.tags, refcount=cache.refcount, dirty=cache.dirty,
+        clock_hand=cache.clock_hand, data=cache.data,
+        hits=cache.hits, misses=cache.misses, bypasses=cache.bypasses,
+    )
+    fields.update(kw)
+    return CacheState(**fields)

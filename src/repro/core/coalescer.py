@@ -1,0 +1,88 @@
+"""Wavefront coalescer — the TPU analogue of BaM's warp coalescing (§III-D).
+
+On the GPU, BaM uses ``__match_any_sync`` so that threads in a warp that
+request the same cache line elect a leader; only the leader touches cache
+state, and the line address is broadcast back with ``__shfl_sync``.
+
+On a TPU there are no divergent threads: the whole *wavefront* of requests
+(every index a compute step touches) arrives as one dense vector.  The
+coalescer is therefore a sort-based vectorized ``unique``:
+
+  1. sort the block keys (invalid keys, < 0, sort to the end),
+  2. the first occurrence of each run is the "leader",
+  3. an exclusive prefix-sum over leader flags assigns each unique key a
+     compact slot — this same prefix sum is BaM's atomic *ticket counter*,
+     now computed in O(log n) depth with no atomics,
+  4. an inverse permutation maps every requester to its leader's slot
+     (the ``__shfl_sync`` broadcast).
+
+Everything is fixed-shape: ``unique_keys`` is padded with the sentinel to
+the wavefront length and ``num_unique`` is a traced scalar.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import pytree_dataclass
+
+
+@pytree_dataclass
+class CoalesceResult:
+    unique_keys: jax.Array   # (n,) int32, first num_unique valid, rest -1
+    num_unique: jax.Array    # () int32
+    inverse_idx: jax.Array   # (n,) int32: original position -> slot in unique_keys
+                             #   (invalid requests map to slot of a sentinel, vals masked upstream)
+    leader_mask: jax.Array   # (n,) bool over *original* positions: True for one requester per line
+
+
+def coalesce(keys: jax.Array, valid: jax.Array | None = None) -> CoalesceResult:
+    """Deduplicate a wavefront of block keys.
+
+    Args:
+      keys: (n,) int32 block keys; entries may repeat.
+      valid: optional (n,) bool; invalid entries are ignored (treated as no
+        request).  Defaults to ``keys >= 0``.
+    """
+    n = keys.shape[0]
+    if valid is None:
+        valid = keys >= 0
+    else:
+        valid = valid & (keys >= 0)
+
+    # Invalid keys get +inf-like key so they sort last; stable sort keeps
+    # deterministic leader election (lowest original index wins).
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    masked = jnp.where(valid, keys, big)
+    order = jnp.argsort(masked, stable=True)          # (n,) original index per sorted pos
+    sorted_keys = masked[order]
+
+    prev = jnp.concatenate([jnp.full((1,), -2, sorted_keys.dtype), sorted_keys[:-1]])
+    is_first = (sorted_keys != prev) & (sorted_keys != big)   # leader per run, invalid excluded
+
+    # Ticket counter: exclusive cumsum of leader flags == compact slot id.
+    slot_sorted = jnp.cumsum(is_first.astype(jnp.int32)) - 1  # (n,) slot per sorted pos
+    num_unique = jnp.maximum(slot_sorted[-1] + 1, 0).astype(jnp.int32)
+    num_unique = jnp.where(is_first.any(), num_unique, jnp.int32(0))
+
+    # Compact unique keys into the first num_unique positions.
+    unique_keys = jnp.full((n,), -1, jnp.int32)
+    scatter_pos = jnp.where(is_first, slot_sorted, n - 1)  # n-1 may be clobbered; fix below
+    # Use a safe scatter: drop non-leaders by scattering to a dump row then slicing.
+    dump = jnp.full((n + 1,), -1, jnp.int32)
+    scatter_pos = jnp.where(is_first, slot_sorted, n)
+    unique_keys = dump.at[scatter_pos].set(jnp.where(is_first, sorted_keys, -1),
+                                           mode="drop")[:n]
+
+    # Inverse map: original position -> slot. Invalid requests map to slot 0
+    # arbitrarily (callers mask with `valid`).
+    inverse = jnp.zeros((n,), jnp.int32)
+    inverse = inverse.at[order].set(jnp.where(slot_sorted >= 0, slot_sorted, 0))
+
+    leader_mask = jnp.zeros((n,), bool).at[order].set(is_first)
+    return CoalesceResult(
+        unique_keys=unique_keys,
+        num_unique=num_unique,
+        inverse_idx=inverse,
+        leader_mask=leader_mask,
+    )

@@ -1,0 +1,67 @@
+"""I/O accounting — hit rates, queue depths and I/O amplification (paper §II-B).
+
+I/O amplification = bytes moved from the storage tier / bytes the compute
+actually consumed.  The paper's headline data-analytics result is that the
+CPU-centric model ships whole columns (6.34x-10.36x amplification on the
+taxi queries) while BaM ships cache lines on demand.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import pytree_dataclass
+
+
+@pytree_dataclass
+class IOMetrics:
+    requests: jax.Array          # element-level requests issued by compute
+    bytes_requested: jax.Array   # bytes the compute consumed (useful bytes)
+    hits: jax.Array              # cache-line hits (post-coalescing)
+    misses: jax.Array            # cache-line misses -> storage reads
+    bytes_from_storage: jax.Array
+    write_ops: jax.Array
+    bytes_to_storage: jax.Array
+    doorbells: jax.Array         # batched ring-tail updates (1 per queue per round)
+    sim_time_s: jax.Array        # simulated device service time accumulated
+    max_queue_depth: jax.Array   # high-watermark of in-flight requests
+
+    @staticmethod
+    def zeros() -> "IOMetrics":
+        f = lambda: jnp.zeros((), jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32)
+        i = lambda: jnp.zeros((), jnp.int32)
+        return IOMetrics(
+            requests=f(), bytes_requested=f(), hits=f(), misses=f(),
+            bytes_from_storage=f(), write_ops=f(), bytes_to_storage=f(),
+            doorbells=f(), sim_time_s=f(), max_queue_depth=i(),
+        )
+
+    # Derived quantities (host-side, after device_get) -------------------
+    def amplification(self) -> float:
+        br = float(self.bytes_requested)
+        return float(self.bytes_from_storage) / br if br > 0 else 0.0
+
+    def hit_rate(self) -> float:
+        tot = float(self.hits) + float(self.misses)
+        return float(self.hits) / tot if tot > 0 else 0.0
+
+    def read_iops(self) -> float:
+        t = float(self.sim_time_s)
+        return float(self.misses) / t if t > 0 else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "requests": float(self.requests),
+            "bytes_requested": float(self.bytes_requested),
+            "hits": float(self.hits),
+            "misses": float(self.misses),
+            "hit_rate": self.hit_rate(),
+            "bytes_from_storage": float(self.bytes_from_storage),
+            "write_ops": float(self.write_ops),
+            "bytes_to_storage": float(self.bytes_to_storage),
+            "amplification": self.amplification(),
+            "doorbells": float(self.doorbells),
+            "sim_time_s": float(self.sim_time_s),
+            "read_iops": self.read_iops(),
+            "max_queue_depth": int(self.max_queue_depth),
+        }

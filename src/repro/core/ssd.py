@@ -1,0 +1,176 @@
+"""Storage-device models and the Little's-law throughput math (paper §II-C, Table III).
+
+The paper's design analysis is governed by Little's law::
+
+    T x L = Q_d
+
+where ``T`` is target IOPs, ``L`` the mean device latency, and ``Q_d`` the
+queue depth that must be kept in flight.  On this container there is no real
+NVMe device, so the *device* is an explicit, parameterised cost model; every
+number in the presets below is lifted from the paper (Table III and §II-C
+measurements).  The BaM software stack (queues/cache/coalescer) is agnostic
+to which preset backs it — exactly the paper's claim (d): "BaM design is
+agnostic to the SSD storage medium used".
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+# Measured peak PCIe Gen4 x16 bandwidth from the paper (26.3 GBps measured,
+# 32 GBps nominal); per-SSD links are Gen4 x4.
+PCIE_GEN4_X16_BW = 26.3e9  # bytes/s, measured (paper §II-A)
+PCIE_GEN4_X4_BW = 6.575e9  # bytes/s, x16/4
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDSpec:
+    """One storage technology row of Table III."""
+
+    name: str
+    read_iops_512: float
+    read_iops_4k: float
+    write_iops_512: float
+    write_iops_4k: float
+    latency_s: float
+    dwpd: float
+    dollars_per_gb: float
+    link_bw: float = PCIE_GEN4_X4_BW  # per-device link
+
+    def read_iops(self, block_bytes: int) -> float:
+        """Interpolate peak random-read IOPs for a block size (512B..4KB anchor points)."""
+        return _interp_iops(block_bytes, self.read_iops_512, self.read_iops_4k)
+
+    def write_iops(self, block_bytes: int) -> float:
+        return _interp_iops(block_bytes, self.write_iops_512, self.write_iops_4k)
+
+
+def _interp_iops(block_bytes: int, iops_512: float, iops_4k: float) -> float:
+    if block_bytes <= 512:
+        return iops_512
+    if block_bytes >= 4096:
+        # Beyond 4KB the device is bandwidth-bound: scale down by size.
+        return iops_4k * 4096.0 / block_bytes
+    # Log-linear interpolation between the two anchor points.
+    t = (math.log2(block_bytes) - 9.0) / 3.0  # 2^9=512, 2^12=4096
+    return iops_512 * (iops_4k / iops_512) ** t
+
+
+# --- Table III presets -------------------------------------------------------
+DRAM_DIMM = SSDSpec(
+    name="dram-dimm",
+    read_iops_512=10e6, read_iops_4k=10e6,
+    write_iops_512=10e6, write_iops_4k=10e6,
+    latency_s=0.1e-6, dwpd=1000.0, dollars_per_gb=11.13,
+    link_bw=PCIE_GEN4_X16_BW,
+)
+INTEL_OPTANE_P5800X = SSDSpec(
+    name="intel-optane-p5800x",
+    read_iops_512=5.1e6, read_iops_4k=1.5e6,
+    write_iops_512=1.0e6, write_iops_4k=1.5e6,
+    latency_s=11e-6, dwpd=100.0, dollars_per_gb=2.54,
+)
+SAMSUNG_ZNAND_P1735 = SSDSpec(
+    name="samsung-znand-p1735",
+    read_iops_512=1.1e6, read_iops_4k=1.6e6,
+    write_iops_512=351e3, write_iops_4k=351e3,
+    latency_s=25e-6, dwpd=3.0, dollars_per_gb=2.56,
+)
+SAMSUNG_980PRO = SSDSpec(
+    name="samsung-980pro",
+    read_iops_512=750e3, read_iops_4k=750e3,
+    write_iops_512=172e3, write_iops_4k=172e3,
+    latency_s=324e-6, dwpd=0.3, dollars_per_gb=0.51,
+)
+
+SSD_PRESETS: dict[str, SSDSpec] = {
+    s.name: s
+    for s in (DRAM_DIMM, INTEL_OPTANE_P5800X, SAMSUNG_ZNAND_P1735, SAMSUNG_980PRO)
+}
+
+
+# --- Little's law ------------------------------------------------------------
+def required_queue_depth(target_iops: float, latency_s: float) -> int:
+    """Q_d = T x L (paper §II-C)."""
+    return int(math.ceil(target_iops * latency_s))
+
+
+def sustained_rate(concurrent: float, latency_s: float, peak_iops: float) -> float:
+    """Delivery rate for X concurrently-serviceable requests: X / (L + X/T).
+
+    Approaches ``peak_iops`` when X >> T*L (paper §II-C).
+    """
+    if concurrent <= 0:
+        return 0.0
+    return concurrent / (latency_s + concurrent / peak_iops)
+
+
+def target_iops_for_link(link_bw: float, block_bytes: int) -> float:
+    """T such that T x block = link bandwidth (e.g. 26GBps/512B = 51M/s)."""
+    return link_bw / block_bytes
+
+
+def min_ssds_for_target(spec: SSDSpec, block_bytes: int, target_iops: float,
+                        write: bool = False) -> int:
+    per_dev = spec.write_iops(block_bytes) if write else spec.read_iops(block_bytes)
+    per_dev = min(per_dev, spec.link_bw / block_bytes)
+    return int(math.ceil(target_iops / per_dev))
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayOfSSDs:
+    """N identical devices behind one accelerator link (the BaM prototype shape)."""
+
+    spec: SSDSpec
+    n_devices: int = 1
+    accel_link_bw: float = PCIE_GEN4_X16_BW  # GPU/TPU-side ingest bound
+
+    def peak_read_iops(self, block_bytes: int) -> float:
+        dev = self.n_devices * min(
+            self.spec.read_iops(block_bytes), self.spec.link_bw / block_bytes
+        )
+        return min(dev, self.accel_link_bw / block_bytes)
+
+    def peak_write_iops(self, block_bytes: int) -> float:
+        dev = self.n_devices * min(
+            self.spec.write_iops(block_bytes), self.spec.link_bw / block_bytes
+        )
+        return min(dev, self.accel_link_bw / block_bytes)
+
+    def service_time(self, n_requests: int, block_bytes: int, *,
+                     queue_depth_limit: int | None = None,
+                     write: bool = False) -> float:
+        """Simulated wall-clock to drain ``n_requests`` random accesses.
+
+        X/(L + X/T) delivery rate, optionally capped by the total in-flight
+        budget (num queues x depth) — the knob the IOPS benchmark sweeps.
+        """
+        if n_requests <= 0:
+            return 0.0
+        peak = (self.peak_write_iops if write else self.peak_read_iops)(block_bytes)
+        concurrent = float(n_requests)
+        if queue_depth_limit is not None:
+            concurrent = min(concurrent, float(queue_depth_limit))
+        rate = sustained_rate(concurrent, self.spec.latency_s, peak)
+        return n_requests / rate
+
+    def service_time_traced(self, n_requests, block_bytes: int, *,
+                            queue_depth_limit: int | None = None,
+                            write: bool = False):
+        """Jit-safe version of :meth:`service_time` for traced request counts.
+
+        All device constants are Python floats (static); only ``n_requests``
+        is traced.  Returns a float32 scalar array of simulated seconds.
+        """
+        import jax.numpy as jnp
+
+        peak = (self.peak_write_iops if write else self.peak_read_iops)(block_bytes)
+        n = n_requests.astype(jnp.float32)
+        concurrent = n
+        if queue_depth_limit is not None:
+            concurrent = jnp.minimum(concurrent, float(queue_depth_limit))
+        rate = concurrent / (self.spec.latency_s + concurrent / peak)
+        return jnp.where(n > 0, n / jnp.maximum(rate, 1e-30), 0.0)
+
+    def cost_usd(self, capacity_gb: float) -> float:
+        return capacity_gb * self.spec.dollars_per_gb

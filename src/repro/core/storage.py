@@ -1,0 +1,138 @@
+"""Block-store backends for the BaM storage tier.
+
+Two interchangeable backends sit below the BaM queues/cache:
+
+* ``SimStorage`` — the data lives on the host (a numpy array or ``np.memmap``)
+  and is fetched with ``jax.pure_callback`` from inside jitted code.  This is
+  the *functional* backend used by the application examples and tests: real
+  data, real gathers, host round-trip standing in for the NVMe DMA.
+
+* ``HBMStorage`` — the data is an in-graph ``jnp`` array (shardable across the
+  mesh).  This is the *dry-run/roofline* backend: the compiler sees the gather
+  traffic of on-demand fetches, so ``cost_analysis()`` and the HLO collective
+  schedule account for the BaM data path.  On a real deployment this tier is
+  host/remote memory reached by DMA; the software above is identical.
+
+Both expose ``fetch_blocks(keys) -> (n, block_elems)`` with sentinel keys
+(< 0) returning zeros, and a write path for the BaM write support.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Protocol
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import io_callback as _io_callback
+
+
+class BlockStore(Protocol):
+    num_blocks: int
+    block_elems: int
+    dtype: jnp.dtype
+
+    def fetch_blocks(self, keys: jax.Array) -> jax.Array: ...
+    def write_blocks(self, keys: jax.Array, lines: jax.Array) -> None: ...
+
+
+@dataclasses.dataclass
+class SimStorage:
+    """Host-resident block store fetched via pure_callback (the 'SSD')."""
+
+    data: np.ndarray  # (num_blocks, block_elems)
+
+    def __post_init__(self):
+        assert self.data.ndim == 2, "block store must be (num_blocks, block_elems)"
+
+    @property
+    def num_blocks(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def block_elems(self) -> int:
+        return self.data.shape[1]
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.data.dtype)
+
+    def _host_fetch(self, keys: np.ndarray) -> np.ndarray:
+        keys = np.asarray(keys)
+        safe = np.clip(keys, 0, self.num_blocks - 1)
+        out = self.data[safe]
+        out[keys < 0] = 0
+        return out
+
+    def fetch_blocks(self, keys: jax.Array) -> jax.Array:
+        out_shape = jax.ShapeDtypeStruct((keys.shape[0], self.block_elems), self.dtype)
+        return jax.pure_callback(self._host_fetch, out_shape, keys, vmap_method="sequential")
+
+    def _host_write(self, keys: np.ndarray, lines: np.ndarray) -> np.ndarray:
+        keys = np.asarray(keys)
+        mask = keys >= 0
+        self.data[keys[mask]] = np.asarray(lines)[mask]
+        return np.zeros((), np.int32)
+
+    def write_blocks(self, keys: jax.Array, lines: jax.Array) -> jax.Array:
+        # io_callback: ordered side effect (a write IOP).
+        return _io_callback(
+            self._host_write, jax.ShapeDtypeStruct((), jnp.int32), keys, lines,
+            ordered=True,
+        )
+
+    @staticmethod
+    def from_array(arr: np.ndarray, block_elems: int) -> "SimStorage":
+        flat = np.ascontiguousarray(arr).reshape(-1)
+        pad = (-flat.shape[0]) % block_elems
+        if pad:
+            flat = np.concatenate([flat, np.zeros(pad, flat.dtype)])
+        return SimStorage(flat.reshape(-1, block_elems))
+
+
+@jax.tree_util.register_pytree_node_class
+class HBMStorage:
+    """In-graph block store (a shardable cold tier the compiler can see)."""
+
+    def __init__(self, data: jax.Array):
+        self.data = data  # (num_blocks, block_elems)
+
+    @property
+    def num_blocks(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def block_elems(self) -> int:
+        return self.data.shape[1]
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def fetch_blocks(self, keys: jax.Array) -> jax.Array:
+        safe = jnp.clip(keys, 0, self.num_blocks - 1)
+        out = jnp.take(self.data, safe, axis=0)
+        return jnp.where((keys >= 0)[:, None], out, 0)
+
+    def write_blocks(self, keys: jax.Array, lines: jax.Array) -> "HBMStorage":
+        safe = jnp.clip(keys, 0, self.num_blocks - 1)
+        cur = jnp.take(self.data, safe, axis=0)
+        lines = jnp.where((keys >= 0)[:, None], lines, cur)
+        return HBMStorage(self.data.at[safe].set(lines))
+
+    # pytree plumbing -----------------------------------------------------
+    def tree_flatten(self):
+        return (self.data,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    @staticmethod
+    def from_array(arr: jax.Array, block_elems: int) -> "HBMStorage":
+        flat = arr.reshape(-1)
+        pad = (-flat.shape[0]) % block_elems
+        if pad:
+            flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+        return HBMStorage(flat.reshape(-1, block_elems))

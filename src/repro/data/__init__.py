@@ -1,0 +1,5 @@
+from repro.data.pipeline import DataConfig, Loader, make_loader
+from repro.data.tokens import TokenStore, synth_corpus
+
+__all__ = ["DataConfig", "Loader", "make_loader", "TokenStore",
+           "synth_corpus"]

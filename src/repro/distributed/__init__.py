@@ -1,0 +1,9 @@
+from repro.distributed.sharding import (
+    AxisRules, DEFAULT_RULES, activate, axes_to_spec, constrain,
+    current_mesh, current_rules, param_shardings, spec_for,
+)
+
+__all__ = [
+    "AxisRules", "DEFAULT_RULES", "activate", "axes_to_spec", "constrain",
+    "current_mesh", "current_rules", "param_shardings", "spec_for",
+]

@@ -1,0 +1,198 @@
+"""Logical-axis sharding: one rule table maps model-space axis names onto
+mesh axes, giving DP / FSDP(ZeRO-3) / TP / EP / SP from a single config.
+
+Model code annotates every parameter and key activation with *logical*
+axis names (``("batch", "seq", None)``); the active :class:`AxisRules`
+resolves them to ``PartitionSpec``s for the active mesh.  Swapping the rule
+table (not the model code) is how §Perf hillclimbs re-shard.
+
+Default placement on the production mesh (pod, data, model):
+
+=============  =====================  =============================
+logical axis   mesh axes              gives
+=============  =====================  =============================
+batch          ("pod", "data")        DP over pods × data groups
+w_embed        "data"                 ZeRO-3/FSDP weight sharding
+heads/kv/ffn   "model"                Megatron TP
+vocab          "model"                TP'd embedding + logits
+experts        "model"                expert parallelism (EP)
+kv_pages       "model"                BaM-paged KV pool striping —
+                                      the paper's blocks-over-SSDs
+                                      round-robin, mapped onto chips
+long_seq       "model"                SP for 500k decode state
+=============  =====================  =============================
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rule = Union[None, str, Tuple[str, ...]]
+
+DEFAULT_RULES: dict[str, Rule] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv_heads": "model",
+    "head_dim": None,
+    "act_ffn": "model",
+    "enc_seq": None,
+    # weights
+    "w_embed": "data",          # ZeRO-3: shard the d_model dim of weights
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "w_inner": "model",         # xlstm/mamba inner dim
+    "conv": None,
+    # serving state
+    "kv_pages": "model",        # paged KV pool striped over chips
+    "kv_seq": "model",          # dense long-context KV sharded on seq (SP)
+    "state_head": "model",      # recurrent state heads
+    # data pipeline
+    "host_batch": ("pod", "data"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    rules: Mapping[str, Rule]
+
+    def resolve(self, name: Optional[str], mesh: Optional[Mesh]) -> Rule:
+        if name is None:
+            return None
+        rule = self.rules.get(name, None)
+        if rule is None or mesh is None:
+            return None
+        axes = mesh.axis_names
+        if isinstance(rule, str):
+            return rule if rule in axes else None
+        picked = tuple(a for a in rule if a in axes)
+        return picked if picked else None
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: AxisRules = AxisRules(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def activate(mesh: Optional[Mesh], rules: Mapping[str, Rule] | None = None):
+    """Enter a mesh + rule context; model annotations become constraints."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    if rules is not None:
+        _CTX.rules = AxisRules(dict(rules))
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def current_rules() -> AxisRules:
+    return _CTX.rules
+
+
+def axes_to_spec(axes: Sequence[Optional[str]],
+                 mesh: Optional[Mesh] = None,
+                 rules: Optional[AxisRules] = None) -> P:
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    return P(*[rules.resolve(a, mesh) for a in axes])
+
+
+def spec_for(axes, mesh=None, rules=None) -> P:
+    return axes_to_spec(axes, mesh, rules)
+
+
+def _axis_size(mesh: Mesh, rule: Rule) -> int:
+    if rule is None:
+        return 1
+    if isinstance(rule, str):
+        return mesh.shape[rule]
+    n = 1
+    for a in rule:
+        n *= mesh.shape[a]
+    return n
+
+
+def _spec_for_shape(axes, shape, mesh, rules) -> P:
+    """Resolve axes -> spec, dropping mesh axes that don't divide the dim.
+
+    (e.g. hymba's 25 query heads over a 16-way model axis: the weight's
+    flattened 1600 dim shards; the (B, 25, S, hd) activation skips it.)
+    """
+    parts = []
+    for a, d in zip(axes, shape):
+        rule = rules.resolve(a, mesh)
+        if rule is not None and d % _axis_size(mesh, rule) != 0:
+            rule = None
+        parts.append(rule)
+    return P(*parts)
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Annotate an activation with logical axes (no-op outside a mesh).
+
+    Axes that don't divide the corresponding dim are silently dropped.
+    """
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = _spec_for_shape(axes, x.shape, mesh, _CTX.rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def param_shardings(axes_tree: Any, mesh: Optional[Mesh] = None,
+                    rules: Optional[AxisRules] = None,
+                    shapes_tree: Any = None) -> Any:
+    """Map a tree of logical-axes tuples to a tree of NamedShardings.
+
+    If ``shapes_tree`` (a matching tree of arrays/ShapeDtypeStructs) is
+    given, mesh axes that don't divide a dim are dropped per-leaf.
+    """
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    if mesh is None:
+        raise ValueError("param_shardings requires a mesh")
+    is_axes_leaf = lambda x: x is None or (
+        isinstance(x, tuple) and all(a is None or isinstance(a, str)
+                                     for a in x))
+
+    if shapes_tree is None:
+        def one(axes):
+            if axes is None:
+                return NamedSharding(mesh, P())
+            return NamedSharding(mesh, axes_to_spec(axes, mesh, rules))
+        return jax.tree_util.tree_map(one, axes_tree, is_leaf=is_axes_leaf)
+
+    def one2(axes, leaf):
+        if axes is None:
+            return NamedSharding(mesh, P())
+        return NamedSharding(
+            mesh, _spec_for_shape(axes, leaf.shape, mesh, rules))
+
+    return jax.tree_util.tree_map(one2, axes_tree, shapes_tree,
+                                  is_leaf=is_axes_leaf)

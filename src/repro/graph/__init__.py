@@ -1,0 +1,5 @@
+from repro.graph.analytics import (BamGraph, bfs, bfs_oracle, cc, cc_oracle,
+                                   random_graph)
+
+__all__ = ["BamGraph", "bfs", "bfs_oracle", "cc", "cc_oracle",
+           "random_graph"]

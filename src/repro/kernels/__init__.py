@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the BaM data path + attention hot spots.
+
+Each kernel ships as ``<name>.py`` (pl.pallas_call + BlockSpec tiling),
+with ``ops.py`` as the jit'd public wrapper (auto interpret off-TPU) and
+``ref.py`` the pure-jnp oracles tests compare against.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import (cache_probe, flash_attention, gather_blocks,
+                               paged_attention)
+
+__all__ = ["ops", "ref", "cache_probe", "flash_attention", "gather_blocks",
+           "paged_attention"]

@@ -1,0 +1,99 @@
+"""Set-associative cache probe Pallas-TPU kernel.
+
+BaM's GPU probe is a per-thread hash + tag compare with warp coalescing.
+The TPU-native adaptation replaces the random tag-row *gather* (a poor fit
+for the TPU memory system) with a **one-hot MXU matmul**: the wavefront's
+set indices become a one-hot matrix that multiplies the tag directory, so
+the probe rides the systolic array instead of scalar loads.
+
+int32 tags are exact-gathered by splitting into two 16-bit halves (each
+exactly representable in f32), gathering both halves with the same one-hot
+matmul, and recombining — a standard exact-gather-by-matmul trick.
+
+Grid: one step per block of requests; the tag directory block is the whole
+``(num_sets, ways)`` array resident in VMEM (directories used by the BaM
+cache are ≤ a few MB; larger directories shard over a second grid axis).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _hash(k):
+    k = k.astype(jnp.uint32)
+    k = (k * jnp.uint32(2654435761)) & jnp.uint32(0xFFFFFFFF)
+    k = k ^ (k >> 16)
+    return (k.astype(jnp.int32) & jnp.int32(0x7FFFFFFF))
+
+
+def _probe_kernel(keys_ref, tags_ref, hit_ref, slot_ref, *, num_sets: int,
+                  ways: int, bm: int):
+    keys = keys_ref[0]                               # (bm,)
+    valid = keys >= 0
+    sets = _hash(jnp.where(valid, keys, 0)) % num_sets  # (bm,)
+
+    tags = tags_ref[...]                             # (S, W) int32
+    t_u = tags.astype(jnp.uint32)
+    lo = (t_u & jnp.uint32(0xFFFF)).astype(jnp.float32)       # (S, W)
+    hi = (t_u >> 16).astype(jnp.float32)                      # (S, W)
+
+    onehot = (sets[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (bm, num_sets), 1)
+              ).astype(jnp.float32)                  # (bm, S)
+    row_lo = jax.lax.dot_general(onehot, lo, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    row_hi = jax.lax.dot_general(onehot, hi, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    rows = (row_hi.astype(jnp.uint32) << 16) | row_lo.astype(jnp.uint32)
+    rows = rows.astype(jnp.int32)                    # (bm, W) gathered tags
+
+    eq = (rows == keys[:, None]) & valid[:, None]
+    hit = eq.any(axis=1)
+    way = jnp.argmax(eq, axis=1).astype(jnp.int32)
+    slot = jnp.where(hit, sets * ways + way, -1).astype(jnp.int32)
+    hit_ref[0] = hit.astype(jnp.int32)
+    slot_ref[0] = slot
+
+
+def cache_probe_pallas(tags: jax.Array, keys: jax.Array, *,
+                       block_m: int = 512, interpret: bool = False):
+    """tags: (num_sets, ways) int32; keys: (m,) int32.
+
+    Returns (hit (m,) bool, slot (m,) int32 flat line slot, -1 on miss) —
+    bit-identical to :func:`repro.core.cache.probe`.
+    """
+    num_sets, ways = tags.shape
+    m = keys.shape[0]
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    kp = jnp.pad(keys, (0, pad), constant_values=-1) if pad else keys
+    nb = kp.shape[0] // bm
+    kp2 = kp.reshape(nb, bm)
+
+    kernel = functools.partial(_probe_kernel, num_sets=num_sets, ways=ways,
+                               bm=bm)
+    hit, slot = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, bm), lambda i: (i, 0)),
+            pl.BlockSpec((num_sets, ways), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm), lambda i: (i, 0)),
+            pl.BlockSpec((1, bm), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, bm), jnp.int32),
+            jax.ShapeDtypeStruct((nb, bm), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(kp2, tags)
+    return hit.reshape(-1)[:m].astype(bool), slot.reshape(-1)[:m]

@@ -1,0 +1,70 @@
+"""Paged block gather Pallas-TPU kernel — the BamArray data path.
+
+``out[i] = data[slots[i]]`` with the slot vector scalar-prefetched so the
+``BlockSpec`` index map *is* the page table walk: each grid step's input DMA
+is redirected at a dynamic physical line while the previous line streams
+out.  This is the literal TPU translation of BaM's "SSD DMA engine delivers
+the requested block into the assigned buffer": HBM→VMEM DMA indexed by the
+request wavefront.
+
+Negative slots (invalid / bypassed requests) are clamped in the index map
+and zero-filled in the kernel body.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(slots_ref, data_ref, out_ref, *, rows_per_block: int):
+    i = pl.program_id(0)
+    base = i * rows_per_block
+    # one requested line per row of this block
+    for r in range(rows_per_block):            # static unroll, small
+        ok = slots_ref[base + r] >= 0
+        line = data_ref[r]                     # (line_elems,) — already DMA'd
+        out_ref[r] = jnp.where(ok, line, jnp.zeros_like(line))
+
+
+def _index_one(i, slots_ref, *, rows_per_block, r):
+    return (jnp.maximum(slots_ref[i * rows_per_block + r], 0), 0)
+
+
+def gather_blocks_pallas(data: jax.Array, slots: jax.Array, *,
+                         interpret: bool = False) -> jax.Array:
+    """data: (num_lines, line_elems); slots: (n,) int32 -> (n, line_elems).
+
+    Each grid step gathers one line (rows_per_block=1): the scalar-prefetched
+    slot feeds the input index map, so consecutive steps' DMAs pipeline.
+    """
+    n = slots.shape[0]
+    _, line_elems = data.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((None, line_elems),
+                         lambda i, slots_ref: (jnp.maximum(slots_ref[i], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((None, line_elems), lambda i, slots_ref: (i, 0)),
+    )
+
+    def kernel(slots_ref, data_ref, out_ref):
+        i = pl.program_id(0)
+        ok = slots_ref[i] >= 0
+        out_ref[...] = jnp.where(ok, data_ref[...],
+                                 jnp.zeros_like(data_ref[...]))
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, line_elems), data.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(slots, data)

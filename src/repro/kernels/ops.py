@@ -1,0 +1,85 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Backend policy: on TPU the Pallas kernels compile natively; everywhere else
+(this CPU container) they run under ``interpret=True``, which executes the
+kernel body in Python per grid step — bit-faithful, slow.  Because interpret
+mode is too slow for the big model graphs, the model code calls these
+wrappers with ``impl='auto'`` which picks:
+
+  * 'pallas'    on TPU backends,
+  * 'ref'       (the pure-jnp oracle, an XLA graph) elsewhere — so smoke
+                tests and the CPU dry-run use honest XLA HLO that
+                ``cost_analysis()`` can account.
+
+Tests pin ``impl='pallas', interpret=True`` and sweep shapes/dtypes against
+``impl='ref'``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.cache_probe import cache_probe_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gather_blocks import gather_blocks_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
+
+Impl = Literal["auto", "pallas", "ref"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: Impl) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    block_q=256, block_kv=256, tile_f32: bool = True,
+                    impl: Impl = "auto", interpret: bool | None = None):
+    if _resolve(impl) == "ref":
+        # blockwise XLA path once the score matrix would exceed ~16M elems
+        # per (batch, head) — bounded memory for the 32k/500k cells.
+        if q.shape[2] * k.shape[2] > (1 << 22):
+            return _ref.flash_attention_xla(q, k, v, causal=causal,
+                                            window=window, scale=scale,
+                                            tile_f32=tile_f32)
+        return _ref.flash_attention_ref(q, k, v, causal=causal,
+                                        window=window, scale=scale)
+    itp = (not _on_tpu()) if interpret is None else interpret
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, scale=scale,
+        block_q=block_q, block_kv=block_kv, interpret=itp)
+
+
+def paged_attention(q, k_pages, v_pages, page_table, seq_lens, *, scale=None,
+                    impl: Impl = "auto", interpret: bool | None = None):
+    if _resolve(impl) == "ref":
+        return _ref.paged_attention_ref(q, k_pages, v_pages, page_table,
+                                        seq_lens, scale=scale)
+    itp = (not _on_tpu()) if interpret is None else interpret
+    return paged_attention_pallas(q, k_pages, v_pages, page_table, seq_lens,
+                                  scale=scale, interpret=itp)
+
+
+def gather_blocks(data, slots, *, impl: Impl = "auto",
+                  interpret: bool | None = None):
+    if _resolve(impl) == "ref":
+        return _ref.gather_blocks_ref(data, slots)
+    itp = (not _on_tpu()) if interpret is None else interpret
+    return gather_blocks_pallas(data, slots, interpret=itp)
+
+
+def cache_probe(tags, keys, *, block_m=512, impl: Impl = "auto",
+                interpret: bool | None = None):
+    if _resolve(impl) == "ref":
+        return _ref.cache_probe_ref(tags, keys)
+    itp = (not _on_tpu()) if interpret is None else interpret
+    return cache_probe_pallas(tags, keys, block_m=block_m, interpret=itp)

@@ -1,0 +1,238 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``assert_allclose`` refs)."""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D). Plain masked softmax."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Sq)[:, None]
+    kv_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window is not None:
+        mask &= kv_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows -> zeros, matching the kernel's l=0 guard
+    any_live = mask.any(axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    out = jnp.where(any_live[None, None, :, None], out, 0.0)
+    return out.astype(q.dtype)
+
+
+def _fa_mask(iq, jk, bq, bkv, skv, causal, window):
+    q_pos = iq * bq + jnp.arange(bq)[:, None]
+    kv_pos = jk * bkv + jnp.arange(bkv)[None, :]
+    mask = kv_pos < skv
+    if causal:
+        mask &= kv_pos <= q_pos
+    mask &= kv_pos > q_pos - window
+    return mask
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _fa_core(q, k, v, window, causal, scale, bq, bkv, kv_len):
+    out, _ = _fa_fwd_inner(q, k, v, window, causal, scale, bq, bkv, kv_len)
+    return out
+
+
+def _fa_fwd_inner(q, k, v, window, causal, scale, bq, bkv, kv_len=None):
+    """Blockwise online-softmax forward. q: (B,Hkv,G,Sq,D) (padded);
+    k, v: (B,Hkv,Skv,D). Tiles keep the input dtype (bf16 tiles when the
+    config sets attn_f32=False); accumulation is f32 via
+    preferred_element_type. Returns (out, logsumexp L)."""
+    B, Hkv, G, Sq, D = q.shape
+    Skv_pad = k.shape[2]
+    Skv = Skv_pad if kv_len is None else kv_len     # mask bound (true len)
+    nq, nkv = Sq // bq, Skv_pad // bkv
+    qs = q.reshape(B, Hkv, G, nq, bq, D).transpose(3, 0, 1, 2, 4, 5)
+    ks = k.reshape(B, Hkv, nkv, bkv, D).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(B, Hkv, nkv, bkv, D).transpose(2, 0, 1, 3, 4)
+
+    def one_q(_, qi):
+        qb, iq = qi                                     # (B,Hkv,G,bq,D)
+
+        def kv_step(carry, kvj):
+            m, l, acc = carry
+            kb, vb, jk = kvj
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _fa_mask(iq, jk, bq, bkv, Skv, causal, window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m2 = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m2)
+            p = jnp.where(mask[None, None, None], jnp.exp(s - m2[..., None]),
+                          0.0)
+            l2 = l * alpha + p.sum(-1)
+            acc2 = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(qb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m2, l2, acc2), None
+
+        m0 = jnp.full((B, Hkv, G, bq), NEG_INF, jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, jnp.zeros_like(m0),
+                      jnp.zeros((B, Hkv, G, bq, D), jnp.float32)),
+            (ks, vs, jnp.arange(nkv)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(one_q, None, (qs, jnp.arange(nq)))
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hkv, G, Sq, D)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, Hkv, G, Sq)
+    return out, lse
+
+
+def _fa_vjp_fwd(q, k, v, window, causal, scale, bq, bkv, kv_len):
+    out, lse = _fa_fwd_inner(q, k, v, window, causal, scale, bq, bkv,
+                             kv_len)
+    return out, (q, k, v, window, out, lse)
+
+
+def _fa_vjp_bwd(causal, scale, bq, bkv, kv_len, res, dout):
+    """Manual flash backward: recompute P per block; O(S) memory."""
+    q, k, v, window, out, lse = res
+    B, Hkv, G, Sq, D = q.shape
+    Skv_pad = k.shape[2]
+    nq, nkv = Sq // bq, Skv_pad // bkv
+    delta = jnp.sum(dout * out, axis=-1)                # (B,Hkv,G,Sq)
+    qs = q.reshape(B, Hkv, G, nq, bq, D).transpose(3, 0, 1, 2, 4, 5)
+    dos = dout.reshape(B, Hkv, G, nq, bq, D).transpose(3, 0, 1, 2, 4, 5)
+    ls = lse.reshape(B, Hkv, G, nq, bq).transpose(3, 0, 1, 2, 4)
+    ds = delta.reshape(B, Hkv, G, nq, bq).transpose(3, 0, 1, 2, 4)
+    ks = k.reshape(B, Hkv, nkv, bkv, D).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(B, Hkv, nkv, bkv, D).transpose(2, 0, 1, 3, 4)
+
+    def one_q(carry, xs):
+        dk_all, dv_all = carry                          # (nkv,B,Hkv,bkv,D)
+        qb, dob, lb, db, iq = xs
+
+        def kv_step(carry2, jk):
+            dqi, dk_a, dv_a = carry2
+            kb, vb = ks[jk], vs[jk]
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb) * scale
+            mask = _fa_mask(iq, jk, bq, bkv, kv_len, causal, window)
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(s - lb[..., None]), 0.0)
+            dv_j = jnp.einsum("bhgqk,bhgqd->bhkd", p, dob)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", dob, vb)
+            dsij = p * (dp - db[..., None]) * scale
+            dqi = dqi + jnp.einsum("bhgqk,bhkd->bhgqd", dsij, kb)
+            dk_j = jnp.einsum("bhgqk,bhgqd->bhkd", dsij, qb)
+            dk_a = dk_a.at[jk].add(dk_j)
+            dv_a = dv_a.at[jk].add(dv_j)
+            return (dqi, dk_a, dv_a), None
+
+        dq0 = jnp.zeros_like(qb)
+        (dqi, dk_all, dv_all), _ = jax.lax.scan(
+            kv_step, (dq0, dk_all, dv_all), jnp.arange(nkv))
+        return (dk_all, dv_all), dqi
+
+    dk0 = jnp.zeros((nkv, B, Hkv, bkv, D))
+    dv0 = jnp.zeros((nkv, B, Hkv, bkv, D))
+    (dk_all, dv_all), dqs = jax.lax.scan(
+        one_q, (dk0, dv0), (qs, dos, ls, ds, jnp.arange(nq)))
+    dq = dqs.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hkv, G, Sq, D)
+    dk = dk_all.transpose(1, 2, 0, 3, 4).reshape(B, Hkv, Skv_pad, D)
+    dv = dv_all.transpose(1, 2, 0, 3, 4).reshape(B, Hkv, Skv_pad, D)
+    return dq, dk, dv, None
+
+
+_fa_core.defvjp(_fa_vjp_fwd, _fa_vjp_bwd)
+
+
+def flash_attention_xla(q, k, v, *, causal=True, window=None, scale=None,
+                        block_q: int = 1024, block_kv: int = 1024,
+                        tile_f32: bool = True):
+    """Blockwise attention in pure XLA ops with a **manual flash backward**
+    (custom_vjp) — bounded memory in fwd AND bwd, honest HLO for the
+    dry-run/roofline.  Handles traced ``window`` (scanned per-layer)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    pq, pkv = (-Sq) % bq, (-Skv) % bkv
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pkv), (0, 0))) if pkv else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pkv), (0, 0))) if pkv else v
+    if window is None:
+        window = jnp.int32(1 << 30)
+    tdt = jnp.float32 if tile_f32 else jnp.bfloat16
+    qg = qp.reshape(B, Hkv, group, qp.shape[2], D).astype(tdt)
+    out = _fa_core(qg, kp.astype(tdt), vp.astype(tdt),
+                   jnp.asarray(window, jnp.int32), causal, scale, bq, bkv,
+                   Skv)
+    out = out.reshape(B, Hq, qp.shape[2], D)[:, :, :Sq, :]
+    return out.astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens, *,
+                        scale=None):
+    """q: (B, Hq, D); pools (B, P, page, Hkv, D); table (B, NP); lens (B,)."""
+    B, Hq, D = q.shape
+    _, P, page, Hkv, _ = k_pages.shape
+    NP = page_table.shape[1]
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    safe = jnp.maximum(page_table, 0)                          # (B, NP)
+    idx = safe[:, :, None, None, None]
+    k = jnp.take_along_axis(k_pages, idx, axis=1)              # (B, NP, page, Hkv, D)
+    v = jnp.take_along_axis(v_pages, idx, axis=1)
+    S = NP * page
+    k = k.transpose(0, 3, 1, 2, 4).reshape(B, Hkv, S, D)
+    v = v.transpose(0, 3, 1, 2, 4).reshape(B, Hkv, S, D)
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)[None, :]                               # (1, S)
+    hole = jnp.repeat(page_table < 0, page, axis=1)            # (B, S)
+    live = (pos < seq_lens[:, None]) & ~hole
+    s = jnp.where(live[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(live[:, None], p, 0.0)
+    out = jnp.einsum("bhk,bhkd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def gather_blocks_ref(data, slots):
+    """data: (num_lines, line_elems); slots: (n,) -> (n, line_elems)."""
+    safe = jnp.maximum(slots, 0)
+    out = data[safe]
+    return jnp.where((slots >= 0)[:, None], out, 0)
+
+
+def cache_probe_ref(tags, keys):
+    """Mirror of repro.core.cache.probe on a raw tag directory."""
+    from repro.utils import mix_hash
+    num_sets, ways = tags.shape
+    valid = keys >= 0
+    sets = mix_hash(jnp.where(valid, keys, 0)) % num_sets
+    rows = tags[sets]                                          # (m, ways)
+    eq = (rows == keys[:, None]) & valid[:, None]
+    hit = eq.any(axis=1)
+    way = jnp.argmax(eq, axis=1).astype(jnp.int32)
+    slot = jnp.where(hit, sets * ways + way, -1).astype(jnp.int32)
+    return hit, slot

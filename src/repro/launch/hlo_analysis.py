@@ -1,0 +1,279 @@
+"""Trip-count-aware analysis of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` visits each ``while`` body **once**, so a
+scan-over-48-layers model under-reports FLOPs/bytes by ~48x and collective
+bytes are absent entirely.  This module parses ``compiled.as_text()`` and
+walks the computation graph recursively, multiplying loop bodies by their
+trip counts (recovered from the loop-condition constants), to produce the
+three roofline inputs per device:
+
+  * dot FLOPs              (MXU term)
+  * memory traffic bytes   (operand+result bytes of top-level instructions
+                            of the post-fusion HLO — the XLA fusion
+                            boundary approximates HBM round-trips)
+  * collective bytes       (by op kind, ring-factor-adjusted)
+
+Validated against cost_analysis() on loop-free graphs in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# effective wire bytes per device ≈ factor × result bytes (ring algorithms)
+_COLL_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+_ZERO_COST_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id",
+    "opt-barrier", "custom-call",
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"([\w\-]+)\((.*)$")
+# computation headers end with "{" and contain "->"; parameter lists may
+# nest tuples arbitrarily, so only the leading name token is parsed.
+_COMP_NAME_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Total bytes of all array shapes appearing in an HLO type string."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    args: str
+    line: str
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    mem_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.mem_bytes += other.mem_bytes
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v
+        return self
+
+    def scaled(self, t: float) -> "Cost":
+        return Cost(self.flops * t, self.mem_bytes * t,
+                    {k: v * t for k, v in self.coll_bytes.items()})
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(_COLL_FACTOR.get(k, 1.0) * v
+                   for k, v in self.coll_bytes.items())
+
+
+def parse_computations(text: str) -> Tuple[Dict[str, List[Instr]], str]:
+    """Split HLO text into computations. Returns (comps, entry_name)."""
+    comps: Dict[str, List[Instr]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if "/*" in line:
+            line = re.sub(r"/\*.*?\*/", "", line)  # strip /*index=N*/ etc.
+        if cur is None:
+            stripped = line.strip()
+            if stripped.endswith("{") and "->" in stripped \
+                    and not stripped.startswith("HloModule"):
+                m = _COMP_NAME_RE.match(stripped)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+                    if stripped.startswith("ENTRY"):
+                        entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            comps[cur].append(Instr(
+                name=m.group(1), type_str=m.group(2).strip(),
+                op=m.group(3), args=m.group(4), line=line))
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return comps, entry
+
+
+def _called_comps(instr: Instr) -> List[str]:
+    out = []
+    for key in ("calls=", "body=", "condition=", "branch_computations={",
+                "to_apply="):
+        for m in re.finditer(re.escape(key) + r"%?([\w\.\-]+)", instr.line):
+            out.append(m.group(1))
+    return out
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    """Largest integer constant in the loop condition (scan bound)."""
+    best = 1
+    seen = set()
+    stack = [cond_name]
+    while stack:
+        c = stack.pop()
+        if c in seen or c not in comps:
+            continue
+        seen.add(c)
+        for ins in comps[c]:
+            if ins.op == "constant":
+                m = re.search(r"constant\((-?\d+)\)", ins.line)
+                if m:
+                    best = max(best, int(m.group(1)))
+            for cc in _called_comps(ins):
+                stack.append(cc)
+    return best
+
+
+def _dot_flops(instr: Instr, shapes: Dict[str, str]) -> float:
+    out_dims = _shape_dims(instr.type_str)
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    m = re.search(r"lhs_contracting_dims={([0-9,]*)}", instr.line)
+    lhs_name = None
+    am = re.match(r"\s*%?([\w\.\-]+)", instr.args)
+    if am:
+        lhs_name = am.group(1)
+    contract = 1
+    if m and lhs_name and lhs_name in shapes:
+        lhs_dims = _shape_dims(shapes[lhs_name])
+        idxs = [int(i) for i in m.group(1).split(",") if i != ""]
+        for i in idxs:
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return 2.0 * n_out * contract
+
+
+def _operand_names(instr: Instr) -> List[str]:
+    # operands appear before any ", key=value" attribute in the args string
+    head = instr.args.split("),")[0]
+    return [m.group(1) for m in re.finditer(r"%([\w\.\-]+)", head)]
+
+
+def _instr_mem_bytes(instr: Instr, shapes: Dict[str, str]) -> float:
+    """HBM round-trip bytes for one top-level instruction.
+
+    Sliced/scattered accesses touch only the moved window, not the whole
+    operand; loop carries are in-place and cost nothing per se.
+    """
+    out_b = _shape_bytes(instr.type_str)
+    ops = _operand_names(instr)
+    if instr.op in ("dynamic-slice", "slice", "gather"):
+        return 2.0 * out_b                       # read window + write out
+    if instr.op in ("dynamic-update-slice", "scatter"):
+        # read+write the update window (operand 1), plus index traffic
+        upd = shapes.get(ops[1], "") if len(ops) > 1 else ""
+        return 3.0 * _shape_bytes(upd) if upd else out_b
+    total = out_b
+    for nm in ops:
+        if nm in shapes:
+            total += _shape_bytes(shapes[nm])
+    return total
+
+
+def analyze_text(text: str) -> Cost:
+    comps, entry = parse_computations(text)
+    shape_tables = {
+        cname: {i.name: i.type_str for i in instrs}
+        for cname, instrs in comps.items()
+    }
+    memo: Dict[str, Cost] = {}
+
+    def walk(cname: str, count_mem: bool = True) -> Cost:
+        key = (cname, count_mem)
+        if key in memo:
+            return memo[key]
+        memo[key] = Cost()            # cycle guard
+        cost = Cost()
+        shapes = shape_tables.get(cname, {})
+        for ins in comps.get(cname, []):
+            if ins.op == "while":
+                body = cond = None
+                for m in re.finditer(r"(body|condition)=%?([\w\.\-]+)",
+                                     ins.line):
+                    if m.group(1) == "body":
+                        body = m.group(2)
+                    else:
+                        cond = m.group(2)
+                trip = _trip_count(comps, cond) if cond else 1
+                if body:
+                    cost += walk(body, count_mem).scaled(trip)
+            elif ins.op in ("fusion", "call"):
+                for cc in _called_comps(ins):
+                    # fusions execute as one kernel: internals contribute
+                    # FLOPs/collectives but no extra HBM round trips
+                    inner = walk(cc, count_mem=False)
+                    cost += inner
+                if count_mem:
+                    cost += Cost(mem_bytes=_instr_mem_bytes(ins, shapes))
+            elif ins.op == "conditional":
+                branches = _called_comps(ins)
+                if branches:
+                    worst = max((walk(b, count_mem) for b in branches),
+                                key=lambda c: c.flops + c.mem_bytes)
+                    cost += worst
+            elif ins.op in ("dot", "dot-general", "convolution"):
+                cost += Cost(flops=_dot_flops(ins, shapes),
+                             mem_bytes=_instr_mem_bytes(ins, shapes)
+                             if count_mem else 0.0)
+            elif any(ins.op.startswith(c) for c in COLLECTIVES):
+                kind = next(c for c in COLLECTIVES if ins.op.startswith(c))
+                if ins.op.endswith("-done"):
+                    continue
+                b = _shape_bytes(ins.type_str)
+                cost += Cost(mem_bytes=b if count_mem else 0.0,
+                             coll_bytes={kind: b})
+            elif ins.op in _ZERO_COST_OPS:
+                pass
+            else:
+                if count_mem:
+                    cost += Cost(mem_bytes=_instr_mem_bytes(ins, shapes))
+        memo[key] = cost
+        return cost
+
+    return walk(entry)
+
+
+def analyze_compiled(compiled) -> Cost:
+    return analyze_text(compiled.as_text())

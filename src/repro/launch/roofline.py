@@ -1,0 +1,110 @@
+"""Roofline terms from compiled dry-run artifacts (TPU v5e-class target).
+
+  compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM_bw)
+  collective term = collective_bytes / (chips x link_bw)
+
+FLOPs/bytes come from the trip-count-aware HLO walk
+(:mod:`repro.launch.hlo_analysis`) — ``cost_analysis()`` alone visits scan
+bodies once.  All quantities are **per device** already (post-SPMD HLO), so
+the terms divide by per-chip peaks, not by chip count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (per-chip effective)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    mem_bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops: float = 0.0       # 6*N*D (or 6*N_active*D) global
+    chips: int = 1
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.mem_bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Perfect-overlap model: the dominant term is the step time."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (global): remat/redundancy waste."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total > 0 else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the modelled step
+        time: (MODEL_FLOPS / step_s) / (chips x peak)."""
+        if self.step_s <= 0:
+            return 0.0
+        ach = self.model_flops / self.step_s
+        return ach / (self.chips * PEAK_FLOPS)
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "mem_bytes_per_device": self.mem_bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "model_flops": self.model_flops,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bound": self.bound,
+            "step_s": self.step_s,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for_cell(cfg, cell) -> float:
+    """MODEL_FLOPS per step: 6*N_active*tokens (train), 2*N_active*tokens
+    (prefill), 2*N_active*batch (decode) + attention read terms."""
+    from repro.models.model import active_params
+    n = active_params(cfg)
+    tokens = cell.global_batch * (cell.seq_len
+                                  if cell.kind in ("train", "prefill") else 1)
+    mult = 6.0 if cell.kind == "train" else 2.0
+    base = mult * n * tokens
+    # attention score+value FLOPs
+    attn = 0.0
+    if cell.kind in ("train", "prefill"):
+        for w in cfg.layer_windows(cell.seq_len):
+            s_eff = min(w, cell.seq_len)
+            # average causal context ~ s_eff/2 (window: ~w)
+            ctx = s_eff / 2 if w >= cell.seq_len else s_eff
+            attn += 2 * 2 * ctx * cfg.n_heads * cfg.hd * tokens
+        if cell.kind == "train":
+            attn *= 3  # fwd + 2x bwd
+    else:
+        for w in cfg.layer_windows(cell.seq_len):
+            ctx = min(w, cell.seq_len)
+            attn += 2 * 2 * ctx * cfg.n_heads * cfg.hd * cell.global_batch
+    if cfg.family == "ssm":
+        attn = 0.0  # recurrent state term is part of N_active math
+    return base + attn

@@ -1,0 +1,103 @@
+"""Cluster training launcher: ``--arch <id>`` on the production mesh.
+
+On real TPU pods this runs under ``jax.distributed.initialize()`` (one
+process per host; the mesh spans all chips).  On this container it runs
+the same code on however many devices exist — the dry-run proves the
+production mesh compiles.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b \
+        --seq 128 --batch 8 --steps 50 --workdir /tmp/run1
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, smoke_config
+from repro.data import DataConfig, Loader, TokenStore, synth_corpus
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_mesh
+from repro.models.model import build_model, count_params
+from repro.training import checkpoint as ckpt
+from repro.training import optimizer as opt
+from repro.training.fault_tolerance import run_training
+from repro.training.train_loop import (batch_shardings, make_train_step,
+                                       state_shardings)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--workdir", default="/tmp/bam_launch")
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. '2x4' -> (data=2, model=4)")
+    ap.add_argument("--pod-compression", action="store_true")
+    args = ap.parse_args()
+
+    cfg = (smoke_config(args.arch) if args.smoke
+           else get_config(args.arch)).replace(dtype="float32")
+    api = build_model(cfg)
+
+    mesh = None
+    if args.mesh:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = make_mesh((d, m), ("data", "model"))
+
+    wd = Path(args.workdir)
+    corpus = wd / "corpus.bin"
+    if not corpus.exists():
+        synth_corpus(corpus, n_tokens=1_000_000, vocab=cfg.vocab)
+    loader = Loader(TokenStore.open(corpus),
+                    DataConfig(seq_len=args.seq, global_batch=args.batch))
+    acfg = opt.AdamWConfig(lr=args.lr, warmup=10, total_steps=args.steps,
+                           pod_compression=args.pod_compression)
+
+    def batch_for_step(s):
+        return {"tokens": jnp.asarray(loader.batch_for_step(s)["tokens"])}
+
+    with shd.activate(mesh, None):
+        params, axes = api.init(jax.random.PRNGKey(0), args.seq)
+        print(f"[train] {cfg.name}: {count_params(params)/1e6:.1f}M params "
+              f"on {jax.device_count()} device(s)")
+        state0 = {"params": params, "opt": opt.adamw_init(params, acfg)}
+        step = make_train_step(cfg, api, adamw=acfg,
+                               microbatches=args.microbatches, mesh=mesh)
+        shardings = None
+        if mesh is not None:
+            st_sh = state_shardings(cfg, axes, mesh, params, acfg)
+            state0 = jax.device_put(state0, st_sh)
+            step = jax.jit(step, in_shardings=(st_sh, None),
+                           out_shardings=(st_sh, None),
+                           donate_argnums=(0,))
+            shardings = st_sh
+        else:
+            step = jax.jit(step, donate_argnums=(0,))
+
+        t0 = time.time()
+
+        def on_metrics(s, m):
+            if s % 10 == 0:
+                print(f"step {s:5d} loss {m['loss']:.4f} "
+                      f"({s*args.batch*args.seq/(time.time()-t0):,.0f} "
+                      "tok/s)")
+
+        res = run_training(step, lambda: state0, batch_for_step, args.steps,
+                           ckpt_dir=wd / "ckpt", ckpt_every=25,
+                           shardings=shardings, on_metrics=on_metrics)
+        print(f"[train] finished at step {res.step}, "
+              f"final loss {res.metrics_history[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

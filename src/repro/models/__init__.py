@@ -1,0 +1,5 @@
+from repro.models.model import (build_model, count_params, init_model,
+                                model_flops_per_token)
+
+__all__ = ["build_model", "count_params", "init_model",
+           "model_flops_per_token"]

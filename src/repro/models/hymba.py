@@ -1,0 +1,333 @@
+"""Hymba — hybrid-head architecture: parallel attention + Mamba (SSM) heads.
+
+Every layer runs a sliding-window GQA attention path and a selective-SSM
+(Mamba) path *in parallel* on the same input; their normalised outputs are
+averaged (the paper's fusion), followed by a standard MLP.  A small set of
+layers ({first, middle, last}) uses global attention.  128 learnable *meta
+tokens* are prepended to the sequence (and never scored in the loss).
+
+The SSM path uses a chunked associative scan: chunk boundaries carry the
+(d_inner, ssm_state) state, intra-chunk runs vectorised — same
+latency-hiding shape as the BaM pipeline (state = the in-flight window).
+
+Uniform layers -> scan-over-layers with a scanned per-layer window array.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.utils import Tagged
+from repro.models.transformer import BIG_WINDOW
+
+CONV_K = 4  # causal conv width in the mamba path
+
+
+# ------------------------------------------------------------- SSM (S6) ----
+def init_mamba(cfg: ArchConfig, key, dtype=jnp.float32):
+    D = cfg.d_model
+    d_inner = 2 * D
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    p = {
+        "w_in": L._normal(ks[0], (D, 2 * d_inner), 1 / math.sqrt(D), dtype),
+        "conv": L._normal(ks[1], (CONV_K, d_inner), 0.5, dtype),
+        "w_bc": L._normal(ks[2], (d_inner, 2 * N), 1 / math.sqrt(d_inner),
+                          dtype),
+        "w_dt": L._normal(ks[3], (d_inner, d_inner), 0.01, dtype),
+        "dt_bias": jnp.zeros((d_inner,), dtype) - 4.0,  # softplus ~ 0.018
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (d_inner, N))
+        ).astype(dtype),
+        "d_skip": jnp.ones((d_inner,), dtype),
+        "w_out": L._normal(ks[4], (d_inner, D), 1 / math.sqrt(d_inner),
+                           dtype),
+    }
+    a = {
+        "w_in": ("w_embed", "w_inner"), "conv": ("conv", "w_inner"),
+        "w_bc": ("w_inner", None), "w_dt": ("w_inner", None),
+        "dt_bias": ("w_inner",), "a_log": ("w_inner", None),
+        "d_skip": ("w_inner",), "w_out": ("w_inner", "w_embed"),
+    }
+    return p, a
+
+
+def _ssm_scan_chunked(a, b, state, chunk):
+    """h_t = a_t * h_{t-1} + b_t, scanned over axis 1 (time).
+
+    a, b: (B, S, d_inner, N) f32; state: (B, d_inner, N).
+    Returns (h (B,S,d_inner,N), final state).
+    """
+    B, S, DI, N = a.shape
+    Lc = min(chunk, S)
+    pad = (-S) % Lc
+    if pad:                         # identity steps: a=1, b=0 keep state
+        a = jnp.concatenate(
+            [a, jnp.ones((B, pad, DI, N), a.dtype)], axis=1)
+        b = jnp.concatenate(
+            [b, jnp.zeros((B, pad, DI, N), b.dtype)], axis=1)
+    NC = a.shape[1] // Lc
+    ac = a.reshape(B, NC, Lc, DI, N).transpose(1, 0, 2, 3, 4)
+    bc = b.reshape(B, NC, Lc, DI, N).transpose(1, 0, 2, 3, 4)
+
+    def chunk_fn(h0, xs):
+        ach, bch = xs                                 # (B, Lc, DI, N)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, br + ar * bl
+
+        hs = jax.lax.associative_scan(combine, (ach, bch), axis=1)
+        a_all, b_all = hs
+        h = b_all + a_all * h0[:, None]               # fold in carry
+        return h[:, -1], h
+
+    chunk_fn = jax.checkpoint(chunk_fn, prevent_cse=False)
+    state, hs = jax.lax.scan(chunk_fn, state, (ac, bc))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, NC * Lc, DI, N)[:, :S]
+    return h, state
+
+
+def mamba_apply(cfg: ArchConfig, p, x, *, conv_state=None, ssm_state=None,
+                chunk=256):
+    """x: (B, S, D) -> (B, S, D). If states given, S must be 1 (decode)."""
+    dtype = cfg.compute_dtype
+    B, S, D = x.shape
+    N = cfg.ssm_state
+    up = x.astype(dtype) @ p["w_in"].astype(dtype)
+    d_inner = up.shape[-1] // 2
+    xm, z = up[..., :d_inner], up[..., d_inner:]
+
+    # causal conv1d
+    w = p["conv"].astype(dtype)                       # (K, d_inner)
+    if conv_state is None:
+        pad = jnp.zeros((B, CONV_K - 1, d_inner), dtype)
+        xp = jnp.concatenate([pad, xm], axis=1)
+    else:
+        xp = jnp.concatenate([conv_state.astype(dtype), xm], axis=1)
+    new_conv_state = xp[:, -(CONV_K - 1):]
+    xc = sum(xp[:, i:i + S] * w[i] for i in range(CONV_K))
+    xc = jax.nn.silu(xc)
+
+    # selective params
+    bc = (xc @ p["w_bc"].astype(dtype)).astype(jnp.float32)
+    Bp, Cp = bc[..., :N], bc[..., N:]                 # (B,S,N)
+    dt = jax.nn.softplus(
+        (xc @ p["w_dt"].astype(dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))           # (B,S,d_inner)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))      # (d_inner,N)
+
+    da = jnp.exp(dt[..., None] * A)                   # (B,S,d_inner,N)
+    db = (dt * xc.astype(jnp.float32))[..., None] * Bp[..., None, :]
+
+    if ssm_state is None:
+        state0 = jnp.zeros((B, d_inner, N), jnp.float32)
+    else:
+        state0 = ssm_state
+    if S == 1:
+        h = da[:, 0] * state0 + db[:, 0]              # (B,d_inner,N)
+        new_state = h
+        y = jnp.einsum("bdn,bn->bd", h, Cp[:, 0].astype(jnp.float32))
+        y = y[:, None]
+    else:
+        hs, new_state = _ssm_scan_chunked(da, db, state0, chunk)
+        hs = hs[:, :S]
+        y = jnp.einsum("bsdn,bsn->bsd", hs, Cp.astype(jnp.float32))
+    y = y + xc.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    y = y.astype(dtype) * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(dtype)
+    return out, (new_conv_state, new_state)
+
+
+# ------------------------------------------------------------------ block --
+def init_block(cfg: ArchConfig, key, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["ln1"], a["ln1"] = L.init_norm(cfg, cfg.d_model, dtype)
+    p["attn"], a["attn"] = L.init_attention(cfg, ks[0], dtype)
+    p["mamba"], a["mamba"] = init_mamba(cfg, ks[1], dtype)
+    p["n_attn"] = jnp.ones((cfg.d_model,), dtype)
+    p["n_ssm"] = jnp.ones((cfg.d_model,), dtype)
+    a["n_attn"] = ("act_embed",)
+    a["n_ssm"] = ("act_embed",)
+    p["ln2"], a["ln2"] = L.init_norm(cfg, cfg.d_model, dtype)
+    p["mlp"], a["mlp"] = L.init_mlp(cfg, ks[2], dtype)
+    return p, a
+
+
+def block_apply(cfg: ArchConfig, p, x, *, window, positions, impl="auto"):
+    xn = L.norm_apply(cfg, p["ln1"], x)
+    h_attn = L.attention(cfg, p["attn"], xn, window=window,
+                         positions=positions, impl=impl)
+    h_ssm, _ = mamba_apply(cfg, p["mamba"], xn)
+    fused = 0.5 * (L.rms_norm_simple(h_attn, p["n_attn"])
+                   + L.rms_norm_simple(h_ssm, p["n_ssm"]))
+    x = x + fused
+    x = x + L.mlp(cfg, p["mlp"], L.norm_apply(cfg, p["ln2"], x))
+    return x
+
+
+# --------------------------------------------------------------------- LM --
+def _global_layers(cfg: ArchConfig):
+    return {0, cfg.n_layers // 2, cfg.n_layers - 1}
+
+
+def layer_window_array(cfg: ArchConfig, seq_len: int) -> jax.Array:
+    g = _global_layers(cfg)
+    w = cfg.window or 1024
+    return jnp.asarray(
+        [BIG_WINDOW if i in g else w for i in range(cfg.n_layers)],
+        jnp.int32)
+
+
+def init_lm(cfg: ArchConfig, key, max_seq: int = 0):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["embed"], a["embed"] = L.init_embedding(cfg, ks[0], dtype)
+    p["meta"] = L._normal(ks[1], (cfg.n_meta_tokens, cfg.d_model), 0.02,
+                          dtype)
+    a["meta"] = (None, "w_embed")
+    _, ba = init_block(cfg, ks[2], dtype)
+    p["blocks"] = jax.vmap(lambda k: init_block(cfg, k, dtype)[0])(
+        jax.random.split(ks[3], cfg.n_layers))
+    a["blocks"] = jax.tree_util.tree_map(
+        lambda ax: (None,) + ax, ba, is_leaf=lambda x: isinstance(x, tuple))
+    p["ln_f"], a["ln_f"] = L.init_norm(cfg, cfg.d_model, dtype)
+    p["head"], a["head"] = L.init_dense(ks[4], cfg.d_model, cfg.vocab,
+                                        ("w_embed", "vocab"), dtype=dtype)
+    return p, a
+
+
+def forward(cfg: ArchConfig, params, batch, impl: str = "auto",
+            last_only: bool = False, return_hidden: bool = False):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(cfg, params["embed"], tokens)
+    M = cfg.n_meta_tokens
+    meta = jnp.broadcast_to(params["meta"][None].astype(cfg.compute_dtype),
+                            (B, M, cfg.d_model))
+    x = jnp.concatenate([meta, x], axis=1)
+    x = constrain(x, ("batch", "seq", "act_embed"))
+    positions = jnp.arange(S + M)
+    windows = layer_window_array(cfg, S + M)
+
+    def body(xc, layer):
+        bp, w = layer
+        xc = block_apply(cfg, bp, xc, window=w, positions=positions,
+                         impl=impl)
+        return constrain(xc, ("batch", "seq", "act_embed")), None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, (params["blocks"], windows))
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    x = x[:, M:]
+    if last_only:
+        x = x[:, -1:, :]
+    if return_hidden:
+        return x, {}
+    logits = L.logits_head(cfg, params.get("head"), params["embed"], x)
+    return logits, {}
+
+
+def loss_fn(cfg: ArchConfig, params, batch, impl: str = "auto"):
+    hidden, _ = forward(cfg, params, batch, impl, return_hidden=True)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros((B, 1), tokens.dtype)], axis=1)
+    mask = jnp.concatenate([jnp.ones((B, S - 1)), jnp.zeros((B, 1))], axis=1)
+    loss = L.lm_loss_from_hidden(cfg, params.get("head"), params["embed"],
+                                 hidden, labels, mask)
+    return loss, {"nll": loss}
+
+
+# ---------------------------------------------------------------- decode ---
+def init_decode_cache(cfg: ArchConfig, B: int, max_seq: int):
+    from repro.models.transformer import (_PAGED_AXES, _RING_AXES,
+                                          _paged_spec, _ring_spec)
+    d_inner = 2 * cfg.d_model
+    g = _global_layers(cfg)
+    w = cfg.window or 1024
+    layers, axes = [], []
+    total = max_seq + cfg.n_meta_tokens
+    for i in range(cfg.n_layers):
+        if i in g:
+            attn = Tagged("paged", _paged_spec(cfg, B, total))
+            attn_axes = Tagged("paged", _PAGED_AXES)
+        else:
+            attn = Tagged("ring", _ring_spec(cfg, B, w))
+            attn_axes = Tagged("ring", _RING_AXES)
+        ssm = {
+            "conv": jnp.zeros((B, CONV_K - 1, d_inner), cfg.compute_dtype),
+            "state": jnp.zeros((B, d_inner, cfg.ssm_state), jnp.float32),
+        }
+        ssm_axes = {"conv": ("batch", None, "w_inner"),
+                    "state": ("batch", "w_inner", None)}
+        layers.append((attn, ssm))
+        axes.append((attn_axes, ssm_axes))
+    cache = {"seq_lens": jnp.zeros((B,), jnp.int32), "layers": tuple(layers)}
+    cache_axes = {"seq_lens": ("batch",), "layers": tuple(axes)}
+    return cache, cache_axes
+
+
+def decode_embed_step(cfg: ArchConfig, params, cache, x,
+                      impl: str = "auto"):
+    """One decode step on an already-embedded input x: (B, 1, D)."""
+    from repro.models.transformer import (_decode_attn_paged,
+                                          _decode_attn_ring)
+    B = x.shape[0]
+    pos = cache["seq_lens"]
+    new_layers = []
+    for i, (tagged, ssm) in enumerate(cache["layers"]):
+        kind, entry = tagged.kind, tagged.value
+        bp = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+        xn = L.norm_apply(cfg, bp["ln1"], x)
+        if kind == "ring":
+            h_attn, entry2 = _decode_attn_ring(cfg, bp["attn"], xn, entry,
+                                               pos, impl)
+        else:
+            h_attn, entry2 = _decode_attn_paged(cfg, bp["attn"], xn, entry,
+                                                pos, impl)
+        h_ssm, (conv2, state2) = mamba_apply(
+            cfg, bp["mamba"], xn, conv_state=ssm["conv"],
+            ssm_state=ssm["state"])
+        fused = 0.5 * (L.rms_norm_simple(h_attn, bp["n_attn"])
+                       + L.rms_norm_simple(h_ssm, bp["n_ssm"]))
+        x = x + fused
+        x = x + L.mlp(cfg, bp["mlp"], L.norm_apply(cfg, bp["ln2"], x))
+        new_layers.append((Tagged(kind, entry2),
+                           {"conv": conv2, "state": state2}))
+    cache2 = dict(cache)
+    cache2["layers"] = tuple(new_layers)
+    cache2["seq_lens"] = pos + 1
+    return x, cache2
+
+
+def prime_cache(cfg: ArchConfig, params, cache, impl: str = "auto"):
+    """Run the learnable meta tokens through the cache before any prompt
+    token (hymba's signature feature: the meta tokens are position 0..M-1
+    of every sequence)."""
+    B = cache["seq_lens"].shape[0]
+    for m in range(cfg.n_meta_tokens):
+        x = jnp.broadcast_to(
+            params["meta"][m][None, None].astype(cfg.compute_dtype),
+            (B, 1, cfg.d_model))
+        _, cache = decode_embed_step(cfg, params, cache, x, impl)
+    return cache
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, impl: str = "auto"):
+    x = L.embed(cfg, params["embed"], tokens[:, None])
+    x, cache2 = decode_embed_step(cfg, params, cache, x, impl)
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    logits = L.logits_head(cfg, params.get("head"), params["embed"], x)
+    return logits[:, 0, :], cache2

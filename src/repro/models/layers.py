@@ -1,0 +1,364 @@
+"""Composable layer library: norms, RoPE, GQA attention, MLP, MoE.
+
+Conventions:
+  * params are nested dicts of arrays; every ``init_*`` returns
+    ``(params, axes)`` where ``axes`` mirrors the structure with tuples of
+    *logical* axis names per dimension (resolved to mesh axes by
+    :mod:`repro.distributed.sharding`).
+  * ``apply`` functions are pure; compute dtype comes from the config, and
+    parameters are cast at use (fp32 master weights, bf16 compute).
+  * attention goes through :mod:`repro.kernels.ops` so the same model code
+    hits the Pallas kernels on TPU and honest XLA reference HLO on CPU.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.kernels import ops
+from repro.utils import segment_rank
+
+Params = Any
+Axes = Any
+
+
+# ------------------------------------------------------------------ init ---
+def _normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_dense(key, in_dim: int, out_dim: int, axes: Tuple, *,
+               bias: bool = False, dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    p = {"w": _normal(key, (in_dim, out_dim), scale, dtype)}
+    a = {"w": axes}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+        a["b"] = (axes[-1],)
+    return p, a
+
+
+def dense(p, x, dtype):
+    y = x.astype(dtype) @ p["w"].astype(dtype)
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+# ----------------------------------------------------------------- norms ---
+def init_norm(cfg: ArchConfig, dim: int, dtype=jnp.float32):
+    if cfg.norm == "layer":
+        return ({"scale": jnp.ones((dim,), dtype),
+                 "bias": jnp.zeros((dim,), dtype)},
+                {"scale": ("act_embed",), "bias": ("act_embed",)})
+    return ({"scale": jnp.ones((dim,), dtype)}, {"scale": ("act_embed",)})
+
+
+def norm_apply(cfg: ArchConfig, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layer":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_simple(x, scale):
+    xf = x.astype(jnp.float32)
+    ms = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + 1e-6) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ rope ---
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, D) with D even; positions: (S,) or broadcastable."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    y = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention ---
+def init_attention(cfg: ArchConfig, key, dtype=jnp.float32):
+    hd = cfg.hd
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["wq"], a["wq"] = init_dense(ks[0], cfg.d_model, cfg.n_heads * hd,
+                                  ("w_embed", "heads"), bias=cfg.qkv_bias,
+                                  dtype=dtype)
+    p["wk"], a["wk"] = init_dense(ks[1], cfg.d_model, cfg.n_kv_heads * hd,
+                                  ("w_embed", "kv_heads"), bias=cfg.qkv_bias,
+                                  dtype=dtype)
+    p["wv"], a["wv"] = init_dense(ks[2], cfg.d_model, cfg.n_kv_heads * hd,
+                                  ("w_embed", "kv_heads"), bias=cfg.qkv_bias,
+                                  dtype=dtype)
+    p["wo"], a["wo"] = init_dense(ks[3], cfg.n_heads * hd, cfg.d_model,
+                                  ("heads", "w_embed"), dtype=dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+        a["q_norm"] = ("head_dim",)
+        a["k_norm"] = ("head_dim",)
+    return p, a
+
+
+def attention_qkv(cfg: ArchConfig, p, x, positions, dtype):
+    """Project to (B, H, S, hd) q and (B, Hkv, S, hd) k, v with RoPE."""
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = dense(p["wq"], x, dtype).reshape(B, S, cfg.n_heads, hd)
+    k = dense(p["wk"], x, dtype).reshape(B, S, cfg.n_kv_heads, hd)
+    v = dense(p["wv"], x, dtype).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm_simple(q, p["q_norm"])
+        k = rms_norm_simple(k, p["k_norm"])
+    if cfg.pos_emb == "rope":
+        q = rope(q.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+        k = rope(k.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+    else:
+        q = q.transpose(0, 2, 1, 3)
+        k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    q = constrain(q, ("batch", "act_heads", "seq", "head_dim"))
+    k = constrain(k, ("batch", "act_kv_heads", "seq", "head_dim"))
+    v = constrain(v, ("batch", "act_kv_heads", "seq", "head_dim"))
+    return q, k, v
+
+
+def attention(cfg: ArchConfig, p, x, *, window=None, positions=None,
+              causal: bool = True, impl: str = "auto",
+              kv_override=None) -> jax.Array:
+    """Full-sequence attention (train/prefill). x: (B, S, D)."""
+    B, S, _ = x.shape
+    dtype = cfg.compute_dtype
+    if positions is None:
+        positions = jnp.arange(S)
+    q, k, v = attention_qkv(cfg, p, x, positions, dtype)
+    if kv_override is not None:          # cross-attention (enc-dec)
+        k, v = kv_override
+    o = ops.flash_attention(q, k, v, causal=causal, window=window,
+                            tile_f32=cfg.attn_f32,
+                            impl=impl if impl else cfg.use_pallas)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.hd)
+    o = constrain(o, ("batch", "seq", None))
+    return dense(p["wo"], o, dtype)
+
+
+# ------------------------------------------------------------------- mlp ---
+def init_mlp(cfg: ArchConfig, key, dtype=jnp.float32, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["w1"], a["w1"] = init_dense(ks[0], cfg.d_model, d_ff,
+                                  ("w_embed", "ffn"), dtype=dtype)
+    p["w2"], a["w2"] = init_dense(ks[1], d_ff, cfg.d_model,
+                                  ("ffn", "w_embed"), dtype=dtype)
+    if cfg.gated_mlp:
+        p["w3"], a["w3"] = init_dense(ks[2], cfg.d_model, d_ff,
+                                      ("w_embed", "ffn"), dtype=dtype)
+    return p, a
+
+
+def _act(cfg: ArchConfig, x):
+    return jax.nn.gelu(x) if cfg.act == "gelu" else jax.nn.silu(x)
+
+
+def mlp(cfg: ArchConfig, p, x):
+    dtype = cfg.compute_dtype
+    h = dense(p["w1"], x, dtype)
+    if cfg.gated_mlp:
+        h = _act(cfg, h) * dense(p["w3"], x, dtype)
+    else:
+        h = _act(cfg, h)
+    h = constrain(h, ("batch", "seq", "act_ffn"))
+    return dense(p["w2"], h, dtype)
+
+
+# ------------------------------------------------------------------- moe ---
+def init_moe(cfg: ArchConfig, key, dtype=jnp.float32):
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    s1, s2 = 1.0 / math.sqrt(D), 1.0 / math.sqrt(F)
+    p = {
+        "router": _normal(ks[0], (D, E), s1, dtype),
+        "w1": _normal(ks[1], (E, D, F), s1, dtype),
+        "w2": _normal(ks[2], (E, F, D), s2, dtype),
+        "w3": _normal(ks[3], (E, D, F), s1, dtype),
+    }
+    a = {
+        "router": ("w_embed", None),
+        "w1": ("experts", "w_embed", None),
+        "w2": ("experts", None, "w_embed"),
+        "w3": ("experts", "w_embed", None),
+    }
+    return p, a
+
+
+def moe_ffn(cfg: ArchConfig, p, x, *, capacity_factor=None):
+    """Group-local scatter-based top-k MoE (EP-shardable).
+
+    Dispatch is computed **per sequence** (the dispatch group): capacity,
+    expert-queue ranking (the same prefix-sum ranking the BaM cache uses
+    for its clock sets) and the scatter all stay inside the batch shard, so
+    SPMD keeps everything batch-sharded over ``data`` — no global sort, no
+    replicated (T*K, D) gathers.  The expert einsums shard over ``model``
+    (EP); XLA inserts the dispatch all-to-all/all-gather between the two.
+    x: (B, S, D) -> (B, S, D), plus aux losses dict.
+    """
+    B, S, D = x.shape
+    dtype = cfg.compute_dtype
+    E, K = cfg.n_experts, cfg.top_k
+    cf = capacity_factor or cfg.capacity_factor
+    C = max(8, int(math.ceil(S * K * cf / E / 8.0)) * 8)  # per-seq capacity
+
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)              # (B, S, E)
+    topv, topi = jax.lax.top_k(probs, K)                 # (B, S, K)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    fe = topi.reshape(B, S * K).astype(jnp.int32)        # (B, S*K)
+    rank = jax.vmap(lambda f: segment_rank(f, jnp.ones_like(f, bool)))(fe)
+    keep = rank < C
+    dest = jnp.where(keep, fe * C + rank, E * C)         # (B, S*K)
+    tok = jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)  # (S*K,)
+
+    xg = jnp.take(x.astype(dtype), tok, axis=1)          # (B, S*K, D)
+
+    def scatter_one(dest_b, xg_b):
+        return jnp.zeros((E * C + 1, D), dtype).at[dest_b].set(
+            xg_b, mode="drop")
+
+    buf = jax.vmap(scatter_one)(dest, xg)                # (B, E*C+1, D)
+    h = buf[:, :E * C, :].reshape(B, E, C, D)
+    h = constrain(h, ("batch", "experts", None, None))
+    up = jnp.einsum("becd,edf->becf", h, p["w1"].astype(dtype))
+    gate = jnp.einsum("becd,edf->becf", h, p["w3"].astype(dtype))
+    hh = _act(cfg, up) * gate
+    y = jnp.einsum("becf,efd->becd", hh, p["w2"].astype(dtype))
+    y = constrain(y, ("batch", "experts", None, None))
+    y = jnp.concatenate([y.reshape(B, E * C, D),
+                         jnp.zeros((B, 1, D), dtype)], axis=1)
+    w = (topv.reshape(B, S * K, 1).astype(dtype) *
+         keep.astype(dtype)[..., None])
+    if cfg.moe_combine == "scatter":
+        # Scatter-add combine: per-slot weight and destination token are
+        # scattered with *batch-local* indices; the expert-sharded y then
+        # scatter-adds into a partial (B, S, D) that XLA reduces over
+        # `model` — an O(B*S*D) psum per layer instead of replicating or
+        # all-gathering the O(B*E*C*D) expert buffer.
+        tok = jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)     # (S*K,)
+        w_slot = jax.vmap(lambda d, ww: jnp.zeros(
+            (E * C + 1,), dtype).at[d].set(ww, mode="drop"))(
+                dest, w[..., 0])                                # (B,E*C+1)
+        tok_slot = jax.vmap(lambda d: jnp.full(
+            (E * C + 1,), S, jnp.int32).at[d].set(tok, mode="drop"))(
+                dest)                                           # (B,E*C+1)
+        contrib = y * w_slot[..., None]
+        out = jax.vmap(lambda t, c: jnp.zeros((S + 1, D), dtype)
+                       .at[t].add(c, mode="drop"))(tok_slot, contrib)
+        out = out[:, :S, :]
+    else:
+        if cfg.moe_combine == "allgather":
+            # one explicit all-gather of expert outputs over `model`, so
+            # the combine gather stays batch-local
+            y = constrain(y, ("batch", None, None))
+        out_slots = jnp.take_along_axis(y, dest[..., None], axis=1)
+        out = (out_slots * w).reshape(B, S, K, D).sum(axis=2)
+
+    # aux: load-balance (Switch) + router z-loss
+    me = probs.mean(axis=(0, 1))                         # (E,)
+    ce = jax.vmap(lambda f, kp: jnp.zeros((E,)).at[f].add(
+        kp.astype(jnp.float32)))(fe, keep).mean(0) / max(S * K, 1)
+    lb = E * jnp.sum(me * ce)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return out, {"load_balance": lb, "router_z": z}
+
+
+# ----------------------------------------------------------- lm utilities --
+def init_embedding(cfg: ArchConfig, key, dtype=jnp.float32):
+    p = {"table": _normal(key, (cfg.vocab, cfg.d_model), 1.0, dtype)}
+    a = {"table": ("vocab", "w_embed")}
+    return p, a
+
+
+def embed(cfg: ArchConfig, p, tokens):
+    e = jnp.take(p["table"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.name.startswith("gemma"):
+        e = e * math.sqrt(cfg.d_model)
+    return e
+
+
+def logits_head(cfg: ArchConfig, head_p, embed_p, x):
+    dtype = cfg.compute_dtype
+    if cfg.tie_embeddings:
+        w = embed_p["table"].astype(dtype)
+        out = x @ w.T
+    else:
+        out = x @ head_p["w"].astype(dtype)
+    out = constrain(out, ("batch", "seq", "vocab"))
+    if cfg.logit_softcap:
+        out = jnp.tanh(out / cfg.logit_softcap) * cfg.logit_softcap
+    return out
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean next-token NLL; logits (B,S,V), labels (B,S) int32, mask (B,S)."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def lm_loss_from_hidden(cfg, head_p, embed_p, x, labels, mask, *,
+                        chunk: int = 512):
+    """Chunked LM cross-entropy: never materialises (B, S, V).
+
+    The (B, chunk, V) logits slab is transient per scan step (and sharded
+    over batch x vocab), which keeps the 262k-vocab archs inside HBM —
+    standard production-LM memory optimisation.
+    """
+    B, S, D = x.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    NC = x.shape[1] // c
+    xc = x.reshape(B, NC, c, D).swapaxes(0, 1)
+    lc = labels.reshape(B, NC, c).swapaxes(0, 1)
+    mc = mask.astype(jnp.float32).reshape(B, NC, c).swapaxes(0, 1)
+
+    def body(acc, xs):
+        xch, lch, mch = xs
+        logits = logits_head(cfg, head_p, embed_p, xch).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lch[..., None], axis=-1)[..., 0]
+        nll = (lse - ll) * mch
+        return (acc[0] + nll.sum(), acc[1] + mch.sum()), None
+
+    # remat: the (B, chunk, V) logits slab is recomputed in backward, never
+    # stored per scan step.
+    body = jax.checkpoint(body, prevent_cse=False)
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros(()), jnp.zeros(())), (xc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,118 @@
+"""Model dispatcher: one API over all assigned architecture families."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import hymba, transformer, xlstm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ArchConfig
+    init: Callable          # (key, max_seq) -> (params, axes)
+    forward: Callable       # (params, batch) -> (logits, aux)
+    loss: Callable          # (params, batch) -> (loss, metrics)
+    init_decode_cache: Callable  # (B, max_seq) -> (cache, axes)
+    decode_step: Callable   # (params, cache, tokens) -> (logits, cache)
+    prime: Optional[Callable] = None  # (params, cache) -> cache (hymba
+    #                                   meta tokens before any prompt)
+
+
+def build_model(cfg: ArchConfig, impl: str = "auto") -> ModelApi:
+    if cfg.family == "ssm":
+        mod = xlstm
+    elif cfg.family == "hybrid":
+        mod = hymba
+    else:
+        mod = transformer
+    prime = None
+    if cfg.family == "hybrid" and cfg.n_meta_tokens:
+        prime = lambda p, c: mod.prime_cache(cfg, p, c, impl)
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key, max_seq=0: mod.init_lm(cfg, key, max_seq),
+        forward=lambda p, b: mod.forward(cfg, p, b, impl),
+        loss=lambda p, b: mod.loss_fn(cfg, p, b, impl),
+        init_decode_cache=lambda B, max_seq: mod.init_decode_cache(
+            cfg, B, max_seq),
+        decode_step=lambda p, c, t: mod.decode_step(cfg, p, c, t, impl),
+        prime=prime,
+    )
+
+
+def init_model(cfg: ArchConfig, key=None, max_seq: int = 0):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return build_model(cfg).init(key, max_seq)
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params)
+               if hasattr(x, "size"))
+
+
+def model_flops_per_token(cfg: ArchConfig, seq_len: int) -> float:
+    """MODEL_FLOPS per token: 6*N_active for training, 2*N_active for a
+    forward pass is handled by the caller (this returns N_active — the
+    parameter count that touches each token — plus attention terms)."""
+    n = active_params(cfg)
+    # attention FLOPs per token: 2 * 2 * S_eff * H * hd (qk^T and pv)
+    windows = cfg.layer_windows(seq_len)
+    attn = 0.0
+    if cfg.family not in ("ssm",):
+        for w in windows:
+            s_eff = min(w, seq_len) if w < (1 << 29) else seq_len
+            # causal average: half the context
+            attn += 2 * 2 * (s_eff / 2) * cfg.n_heads * cfg.hd
+    return n, attn
+
+
+def active_params(cfg: ArchConfig) -> float:
+    """Parameters touched per token (MoE counts top_k experts only)."""
+    D, F, V, L = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_layers
+    hd = cfg.hd
+    if cfg.family == "ssm":
+        inner = int(cfg.proj_factor * D)
+        per_m = 2 * D * inner + 3 * inner * 4 + inner * 2 * cfg.n_heads \
+            + inner * D
+        per_s = 4 * D * inner + 4 * (inner // cfg.n_heads) * inner \
+            + inner * D
+        n_s = sum(1 for i in range(L)
+                  if cfg.slstm_every and i % cfg.slstm_every
+                  == cfg.slstm_every - 1)
+        n = (L - n_s) * per_m + n_s * per_s
+        n += V * D * 2
+        return float(n)
+    attn = D * cfg.n_heads * hd + 2 * D * cfg.n_kv_heads * hd \
+        + cfg.n_heads * hd * D
+    if cfg.moe:
+        ffn = cfg.top_k * 3 * D * F + D * cfg.n_experts
+    elif cfg.gated_mlp:
+        ffn = 3 * D * F
+    else:
+        ffn = 2 * D * F
+    per_layer = attn + ffn
+    if cfg.family == "hybrid":
+        d_inner = 2 * D
+        per_layer += 2 * D * d_inner + d_inner * (
+            2 * cfg.ssm_state + d_inner) + d_inner * D
+    if cfg.enc_dec:
+        per_layer += attn  # cross attention
+    n = L * per_layer
+    if cfg.enc_dec:
+        enc_ffn = 2 * D * F if not cfg.gated_mlp else 3 * D * F
+        n += cfg.n_enc_layers * (attn + enc_ffn)
+    n += V * D * (1 if cfg.tie_embeddings else 2)
+    return float(n)
+
+
+def total_params(cfg: ArchConfig) -> float:
+    if not cfg.moe:
+        return active_params(cfg)
+    D, F, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    extra = (cfg.n_experts - cfg.top_k) * 3 * D * F * L
+    return active_params(cfg) + extra

@@ -1,0 +1,403 @@
+"""xLSTM (sLSTM + mLSTM blocks) — the [ssm] architecture of the pool.
+
+mLSTM: matrix-memory cell with exponential gating.  Training/prefill uses
+the **chunkwise-parallel** form (intra-chunk attention-like matmuls +
+inter-chunk recurrent state), the TPU-friendly formulation — the seq scan
+carries only (C, n, m) per chunk boundary.  Decode uses the exact recurrent
+step.  The two are validated against each other in tests.
+
+sLSTM: scalar-memory cell with hidden-state recurrence (R per head) — no
+parallel form exists (that is *why* the 7:1 interleave exists), so it runs
+as a chunked ``lax.scan`` over time with rematerialised chunks.
+
+Layer interleave: one sLSTM per ``cfg.slstm_every`` blocks.  Blocks are
+heterogeneous, so the layer loop is unrolled (params are per-layer tuples).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.utils import Tagged
+
+NEG_INF = -1e30
+QKV_BLOCK = 4
+
+
+def _block_linear(w, x, dtype):
+    """Block-diagonal linear: w (n_blocks, bs, bs); x (..., n_blocks*bs)."""
+    nb, bs, _ = w.shape
+    xb = x.reshape(x.shape[:-1] + (nb, bs))
+    y = jnp.einsum("...nb,nbc->...nc", xb.astype(dtype), w.astype(dtype))
+    return y.reshape(x.shape)
+
+
+# ------------------------------------------------------------ mLSTM cell ---
+def mlstm_chunkwise(q, k, v, ilog, glog, *, chunk: int = 256,
+                    state=None):
+    """Chunkwise mLSTM. q,k,v: (B,H,S,d) (q pre-scaled by 1/sqrt(d));
+    ilog, glog: (B,H,S) input-gate preact and logsigmoid(forget).
+    Returns (h (B,H,S,d), final_state (C (B,H,d,d), n (B,H,d), m (B,H)))."""
+    B, H, S, d = q.shape
+    Lc = min(chunk, S)
+    assert S % Lc == 0, (S, Lc)
+    NC = S // Lc
+
+    qc = q.reshape(B, H, NC, Lc, d)
+    kc = k.reshape(B, H, NC, Lc, d)
+    vc = v.reshape(B, H, NC, Lc, d)
+    ic = ilog.reshape(B, H, NC, Lc)
+    gc = glog.reshape(B, H, NC, Lc)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, d, d), jnp.float32)
+        n0 = jnp.zeros((B, H, d), jnp.float32)
+        m0 = jnp.full((B, H), NEG_INF, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    tril = jnp.tril(jnp.ones((Lc, Lc), bool))
+
+    def chunk_step(carry, xs):
+        C, n, m = carry                       # (B,H,d,d),(B,H,d),(B,H)
+        Q, K, V, il, gl = xs                  # (B,H,Lc,d) / (B,H,Lc)
+        Q = Q.astype(jnp.float32)
+        K = K.astype(jnp.float32)
+        V = V.astype(jnp.float32)
+        b = jnp.cumsum(gl, axis=-1)           # (B,H,Lc) inclusive
+        btot = b[..., -1]                     # (B,H)
+
+        D = b[..., :, None] - b[..., None, :] + il[..., None, :]
+        D = jnp.where(tril, D, NEG_INF)       # (B,H,Lc,Lc)
+        m_intra = jnp.max(D, axis=-1)         # (B,H,Lc)
+        m_inter = b + m[..., None]            # (B,H,Lc)
+        mt = jnp.maximum(m_intra, m_inter)
+        mt = jnp.maximum(mt, -60.0)           # keep exp(-mt) finite at start
+
+        Sij = jnp.einsum("bhtd,bhsd->bhts", Q, K) * jnp.exp(
+            D - mt[..., None])
+        w_inter = jnp.exp(m_inter - mt)       # (B,H,Lc)
+        num = jnp.einsum("bhts,bhsd->bhtd", Sij, V) \
+            + w_inter[..., None] * jnp.einsum("bhtd,bhde->bhte", Q, C)
+        den = jnp.einsum("bhts->bht", Sij) \
+            + w_inter * jnp.einsum("bhtd,bhd->bht", Q, n)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-mt))
+        Hc = num / den[..., None]             # (B,H,Lc,d)
+
+        # state update to the end of the chunk
+        dec = btot[..., None] - b + il        # (B,H,Lc) decay s -> end
+        m_next = jnp.maximum(btot + m, jnp.max(dec, axis=-1))
+        sc_old = jnp.exp(btot + m - m_next)   # (B,H)
+        wv = jnp.exp(dec - m_next[..., None])  # (B,H,Lc)
+        C2 = sc_old[..., None, None] * C + jnp.einsum(
+            "bhsd,bhse->bhde", K * wv[..., None], V)
+        n2 = sc_old[..., None] * n + jnp.einsum("bhsd->bhd",
+                                                K * wv[..., None])
+        return (C2, n2, m_next), Hc
+
+    xs = (qc.transpose(2, 0, 1, 3, 4), kc.transpose(2, 0, 1, 3, 4),
+          vc.transpose(2, 0, 1, 3, 4), ic.transpose(2, 0, 1, 3),
+          gc.transpose(2, 0, 1, 3))
+    (C, n, m), hs = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, d)
+    return h, (C, n, m)
+
+
+def mlstm_step(state, q, k, v, ilog, glog):
+    """Exact recurrent step. q,k,v: (B,H,d) (q pre-scaled); gates (B,H)."""
+    C, n, m = state
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    m_new = jnp.maximum(glog + m, ilog)
+    m_new = jnp.maximum(m_new, -60.0)
+    fp = jnp.exp(glog + m - m_new)            # (B,H)
+    ip = jnp.exp(ilog - m_new)
+    C2 = fp[..., None, None] * C + ip[..., None, None] * (
+        k[..., :, None] * v[..., None, :])    # (B,H,d,d) [k-index first]
+    n2 = fp[..., None] * n + ip[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C2)
+    den = jnp.einsum("bhd,bhd->bh", q, n2)
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))
+    h = num / den[..., None]
+    return (C2, n2, m_new), h
+
+
+# ----------------------------------------------------------- mLSTM block ---
+def init_mlstm_block(cfg: ArchConfig, key, dtype=jnp.float32):
+    d = cfg.d_model
+    inner = int(cfg.proj_factor * d)
+    ks = jax.random.split(key, 8)
+    p, a = {}, {}
+    p["ln"], a["ln"] = L.init_norm(cfg, d, dtype)
+    p["w_up"], a["w_up"] = L.init_dense(ks[0], d, 2 * inner,
+                                        ("w_embed", "w_inner"), dtype=dtype)
+    # q,k,v are block-diagonal with blocksize 4 (the official xLSTM
+    # "qkv_proj_blocksize=4" BlockLinear) — near-free in params, keeps the
+    # 1.3B budget honest.
+    bs = QKV_BLOCK
+    import math as _math
+    for nm, kk in (("wq", 1), ("wk", 2), ("wv", 3)):
+        p[nm] = L._normal(ks[kk], (inner // bs, bs, bs),
+                          1.0 / _math.sqrt(bs), dtype)
+        a[nm] = ("w_inner", None, None)
+    p["w_if"], a["w_if"] = L.init_dense(ks[4], inner, 2 * cfg.n_heads,
+                                        ("w_inner", None), dtype=dtype)
+    p["hn"] = jnp.ones((inner,), dtype)       # per-head output norm
+    a["hn"] = (None,)
+    p["w_down"], a["w_down"] = L.init_dense(ks[5], inner, d,
+                                            ("w_inner", "w_embed"),
+                                            dtype=dtype)
+    return p, a
+
+
+def _mlstm_qkv_gates(cfg, p, x):
+    """x: (B,S,D) -> q,k,v (B,H,S,hd), ilog/glog (B,H,S), z (B,S,inner)."""
+    dtype = cfg.compute_dtype
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    xn = L.norm_apply(cfg, p["ln"], x)
+    up = L.dense(p["w_up"], xn, dtype)
+    inner = up.shape[-1] // 2
+    xm, z = up[..., :inner], up[..., inner:]
+    hd = inner // H
+    q = _block_linear(p["wq"], xm, dtype).reshape(
+        B, S, H, hd).transpose(0, 2, 1, 3)
+    k = _block_linear(p["wk"], xm, dtype).reshape(
+        B, S, H, hd).transpose(0, 2, 1, 3)
+    v = _block_linear(p["wv"], xm, dtype).reshape(
+        B, S, H, hd).transpose(0, 2, 1, 3)
+    gates = L.dense(p["w_if"], xm, dtype).astype(jnp.float32)
+    ilog = gates[..., :H].transpose(0, 2, 1)
+    glog = jax.nn.log_sigmoid(gates[..., H:]).transpose(0, 2, 1)
+    q = q / math.sqrt(hd)
+    return q, k, v, ilog, glog, z, inner, hd
+
+
+def mlstm_block(cfg: ArchConfig, p, x, *, chunk=256):
+    B, S, _ = x.shape
+    dtype = cfg.compute_dtype
+    q, k, v, ilog, glog, z, inner, hd = _mlstm_qkv_gates(cfg, p, x)
+    h, _ = mlstm_chunkwise(q, k, v, ilog, glog, chunk=min(chunk, S))
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, inner)
+    # per-head norm then gate
+    hn = L.rms_norm_simple(h.reshape(B, S, cfg.n_heads, hd),
+                           p["hn"].reshape(cfg.n_heads, hd)[None, None])
+    h = hn.reshape(B, S, inner).astype(dtype) * jax.nn.silu(z)
+    return x + L.dense(p["w_down"], h, dtype)
+
+
+def mlstm_block_step(cfg: ArchConfig, p, x, state):
+    """Decode step. x: (B,1,D); state (C,n,m)."""
+    B = x.shape[0]
+    dtype = cfg.compute_dtype
+    q, k, v, ilog, glog, z, inner, hd = _mlstm_qkv_gates(cfg, p, x)
+    state2, h = mlstm_step(state, q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                           ilog[:, :, 0], glog[:, :, 0])   # (B,H,hd)
+    hn = L.rms_norm_simple(h.reshape(B, 1, cfg.n_heads, hd),
+                           p["hn"].reshape(cfg.n_heads, hd)[None, None])
+    h = hn.reshape(B, 1, inner).astype(dtype) * jax.nn.silu(z)
+    return x + L.dense(p["w_down"], h, dtype), state2
+
+
+def mlstm_state_spec(cfg: ArchConfig, B: int):
+    inner = int(cfg.proj_factor * cfg.d_model)
+    hd = inner // cfg.n_heads
+    return (jnp.zeros((B, cfg.n_heads, hd, hd), jnp.float32),
+            jnp.zeros((B, cfg.n_heads, hd), jnp.float32),
+            jnp.full((B, cfg.n_heads), NEG_INF, jnp.float32))
+
+
+_MLSTM_STATE_AXES = (("batch", "state_head", None, None),
+                     ("batch", "state_head", None),
+                     ("batch", "state_head"))
+
+
+# ----------------------------------------------------------- sLSTM block ---
+def init_slstm_block(cfg: ArchConfig, key, dtype=jnp.float32):
+    d = cfg.d_model
+    inner = int(cfg.proj_factor * d)
+    H = cfg.n_heads
+    hd = inner // H
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["ln"], a["ln"] = L.init_norm(cfg, d, dtype)
+    p["w_in"], a["w_in"] = L.init_dense(ks[0], d, 4 * inner,
+                                        ("w_embed", "w_inner"), dtype=dtype)
+    p["r"] = L._normal(ks[1], (4, H, hd, hd), 1.0 / math.sqrt(hd), dtype)
+    a["r"] = (None, "state_head", None, None)
+    p["w_down"], a["w_down"] = L.init_dense(ks[2], inner, d,
+                                            ("w_inner", "w_embed"),
+                                            dtype=dtype)
+    return p, a
+
+
+def _slstm_gate_step(p, xs_t, h, c, n, m, H, hd):
+    """One sLSTM time step in f32. xs_t: (B, 4*inner) preacts."""
+    B = xs_t.shape[0]
+    inner = H * hd
+    hh = h.reshape(B, H, hd)
+    rec = jnp.einsum("bhd,ghde->gbhe", hh, p["r"].astype(jnp.float32))
+    rec = rec.reshape(4, B, inner)
+    pre = xs_t.reshape(B, 4, inner).transpose(1, 0, 2) + rec
+    i_t, f_t, z_t, o_t = pre[0], pre[1], pre[2], pre[3]
+    flog = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(flog + m, i_t)
+    ip = jnp.exp(i_t - m_new)
+    fp = jnp.exp(flog + m - m_new)
+    c2 = fp * c + ip * jnp.tanh(z_t)
+    n2 = fp * n + ip
+    h2 = jax.nn.sigmoid(o_t) * c2 / jnp.maximum(n2, 1e-6)
+    return h2, c2, n2, m_new
+
+
+def slstm_block(cfg: ArchConfig, p, x, *, chunk=128):
+    """Sequential sLSTM over time (chunked scan, remat per chunk)."""
+    B, S, D = x.shape
+    dtype = cfg.compute_dtype
+    H = cfg.n_heads
+    inner = int(cfg.proj_factor * D)
+    hd = inner // H
+    xn = L.norm_apply(cfg, p["ln"], x)
+    xs = L.dense(p["w_in"], xn, dtype).astype(jnp.float32)  # (B,S,4*inner)
+
+    Lc = min(chunk, S)
+    NC = S // Lc
+    xsc = xs.reshape(B, NC, Lc, 4 * inner).transpose(1, 2, 0, 3)
+
+    def chunk_fn(carry, xs_chunk):
+        def step(carry, xt):
+            h, c, n, m = carry
+            h2, c2, n2, m2 = _slstm_gate_step(p, xt, h, c, n, m, H, hd)
+            return (h2, c2, n2, m2), h2
+        return jax.lax.scan(step, carry, xs_chunk)
+
+    chunk_fn = jax.checkpoint(chunk_fn, prevent_cse=False)
+    z = jnp.zeros((B, inner), jnp.float32)
+    m0 = jnp.full((B, inner), NEG_INF, jnp.float32)
+    carry, hs = jax.lax.scan(chunk_fn, (z, z, z, m0), xsc)
+    h = hs.reshape(NC * Lc, B, inner).transpose(1, 0, 2)     # (B,S,inner)
+    return x + L.dense(p["w_down"], h.astype(dtype), dtype)
+
+
+def slstm_block_step(cfg: ArchConfig, p, x, state):
+    B = x.shape[0]
+    dtype = cfg.compute_dtype
+    H = cfg.n_heads
+    inner = int(cfg.proj_factor * cfg.d_model)
+    hd = inner // H
+    xn = L.norm_apply(cfg, p["ln"], x)
+    xs = L.dense(p["w_in"], xn, dtype).astype(jnp.float32)[:, 0]
+    h, c, n, m = state
+    h2, c2, n2, m2 = _slstm_gate_step(p, xs, h, c, n, m, H, hd)
+    out = x + L.dense(p["w_down"], h2[:, None].astype(dtype), dtype)
+    return out, (h2, c2, n2, m2)
+
+
+def slstm_state_spec(cfg: ArchConfig, B: int):
+    inner = int(cfg.proj_factor * cfg.d_model)
+    z = jnp.zeros((B, inner), jnp.float32)
+    return (z, z, z, jnp.full((B, inner), NEG_INF, jnp.float32))
+
+
+_SLSTM_STATE_AXES = tuple(("batch", "w_inner") for _ in range(4))
+
+
+# ------------------------------------------------------------------- LM ----
+def _is_slstm(cfg: ArchConfig, i: int) -> bool:
+    return cfg.slstm_every > 0 and (i % cfg.slstm_every
+                                    == cfg.slstm_every - 1)
+
+
+def init_lm(cfg: ArchConfig, key, max_seq: int = 0):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    p, a = {}, {}
+    p["embed"], a["embed"] = L.init_embedding(cfg, ks[0], dtype)
+    blocks, baxes = [], []
+    for i in range(cfg.n_layers):
+        if _is_slstm(cfg, i):
+            bp, ba = init_slstm_block(cfg, ks[i + 1], dtype)
+        else:
+            bp, ba = init_mlstm_block(cfg, ks[i + 1], dtype)
+        blocks.append(bp)
+        baxes.append(ba)
+    p["blocks"] = tuple(blocks)
+    a["blocks"] = tuple(baxes)
+    p["ln_f"], a["ln_f"] = L.init_norm(cfg, cfg.d_model, dtype)
+    p["head"], a["head"] = L.init_dense(ks[-1], cfg.d_model, cfg.vocab,
+                                        ("w_embed", "vocab"), dtype=dtype)
+    return p, a
+
+
+def forward(cfg: ArchConfig, params, batch, impl: str = "auto",
+            last_only: bool = False, return_hidden: bool = False):
+    tokens = batch["tokens"]
+    x = L.embed(cfg, params["embed"], tokens)
+    x = constrain(x, ("batch", "seq", "act_embed"))
+
+    for i, bp in enumerate(params["blocks"]):
+        fn = slstm_block if _is_slstm(cfg, i) else mlstm_block
+        if cfg.remat != "none":
+            fn = jax.checkpoint(fn, static_argnums=(0,), prevent_cse=False)
+        x = fn(cfg, bp, x)
+        x = constrain(x, ("batch", "seq", "act_embed"))
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    if last_only:
+        x = x[:, -1:, :]
+    if return_hidden:
+        return x, {}
+    logits = L.logits_head(cfg, params.get("head"), params["embed"], x)
+    return logits, {}
+
+
+def loss_fn(cfg: ArchConfig, params, batch, impl: str = "auto"):
+    hidden, _ = forward(cfg, params, batch, impl, return_hidden=True)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros((B, 1), tokens.dtype)], axis=1)
+    mask = jnp.concatenate([jnp.ones((B, S - 1)), jnp.zeros((B, 1))], axis=1)
+    loss = L.lm_loss_from_hidden(cfg, params.get("head"), params["embed"],
+                                 hidden, labels, mask)
+    return loss, {"nll": loss}
+
+
+def init_decode_cache(cfg: ArchConfig, B: int, max_seq: int):
+    layers, axes = [], []
+    for i in range(cfg.n_layers):
+        if _is_slstm(cfg, i):
+            layers.append(Tagged("slstm", slstm_state_spec(cfg, B)))
+            axes.append(Tagged("slstm", _SLSTM_STATE_AXES))
+        else:
+            layers.append(Tagged("mlstm", mlstm_state_spec(cfg, B)))
+            axes.append(Tagged("mlstm", _MLSTM_STATE_AXES))
+    cache = {"seq_lens": jnp.zeros((B,), jnp.int32), "layers": tuple(layers)}
+    cache_axes = {"seq_lens": ("batch",), "layers": tuple(axes)}
+    return cache, cache_axes
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, impl: str = "auto"):
+    B = tokens.shape[0]
+    x = L.embed(cfg, params["embed"], tokens[:, None])
+    new_layers = []
+    for i, tagged in enumerate(cache["layers"]):
+        kind, state = tagged.kind, tagged.value
+        bp = params["blocks"][i]
+        if kind == "slstm":
+            x, st2 = slstm_block_step(cfg, bp, x, state)
+        else:
+            x, st2 = mlstm_block_step(cfg, bp, x, state)
+        new_layers.append(Tagged(kind, st2))
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    logits = L.logits_head(cfg, params.get("head"), params["embed"], x)
+    cache2 = dict(cache)
+    cache2["layers"] = tuple(new_layers)
+    cache2["seq_lens"] = cache["seq_lens"] + 1
+    return logits[:, 0, :], cache2

@@ -1,0 +1,6 @@
+from repro.serving.engine import ServeEngine
+from repro.serving.kv_cache import (PagedKVManager, spill_cold_pages,
+                                    fetch_holes)
+
+__all__ = ["ServeEngine", "PagedKVManager", "spill_cold_pages",
+           "fetch_holes"]

@@ -1,0 +1,135 @@
+"""Serving engine: fixed-slot continuous batching over the model decode
+step, with BaM paged-KV spill/fetch between steps.
+
+The engine owns ``B`` sequence slots.  Each step:
+
+  1. admit queued requests into free slots (prefill via the decode path,
+     token-at-a-time — exact, simple; chunked prefill is a TODO flag),
+  2. ``ensure_resident`` — BaM-fetch any spilled pages decode will touch,
+  3. one jitted ``decode_step`` for the whole batch,
+  4. greedy/temperature sampling, retire finished sequences,
+  5. ``maybe_spill`` cold pages to the storage tier.
+
+This is the paper's compute model inverted onto serving: the *accelerator*
+decides which pages move, the host is just the storage service.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.model import ModelApi, build_model
+from repro.serving.kv_cache import PagedKVManager
+
+__all__ = ["ServeEngine", "Request"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0
+    pending_prompt: List[int] = dataclasses.field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, batch_slots: int = 4,
+                 max_seq: int = 512, kv_manager: PagedKVManager | None = None,
+                 greedy: bool = True, impl: str = "auto"):
+        self.cfg = cfg
+        self.api: ModelApi = build_model(cfg, impl)
+        self.params = params
+        self.B = batch_slots
+        self.max_seq = max_seq
+        self.kv = kv_manager
+        self.greedy = greedy
+        self.slots = [_Slot() for _ in range(batch_slots)]
+        self.queue: List[Request] = []
+        self.cache, _ = self.api.init_decode_cache(batch_slots, max_seq)
+        if self.api.prime is not None:
+            self.cache = self.api.prime(params, self.cache)
+        # snapshot (post-prime) for per-slot resets; leaves are batch-first
+        self._cache0 = jax.tree_util.tree_map(lambda x: x, self.cache)
+        self._step = jax.jit(self.api.decode_step)
+        self.n_steps = 0
+
+    # ------------------------------------------------------------- admin --
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in self.slots:
+            if slot.req is None and self.queue:
+                req = self.queue.pop(0)
+                slot.req = req
+                slot.pos = 0
+                slot.pending_prompt = list(req.prompt)
+
+    def _reset_slot_cache(self, b: int):
+        """Restore slot b to the (post-prime) initial cache state."""
+        def one(cur, init):
+            if hasattr(cur, "at") and cur.ndim >= 1 \
+                    and cur.shape[0] == self.B:
+                return cur.at[b].set(init[b])
+            return cur
+        self.cache = jax.tree_util.tree_map(one, self.cache, self._cache0)
+
+    # -------------------------------------------------------------- step --
+    def step(self) -> int:
+        """One engine step; returns number of active slots."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s.req is not None]
+        if not active:
+            return 0
+        if self.kv is not None:
+            self.cache, _ = self.kv.ensure_resident(self.cache)
+
+        tokens = np.zeros((self.B,), np.int32)
+        for i, slot in enumerate(self.slots):
+            if slot.req is None:
+                continue
+            if slot.pending_prompt:
+                tokens[i] = slot.pending_prompt.pop(0)   # prefill token
+            elif slot.req.out:
+                tokens[i] = slot.req.out[-1]
+            else:
+                tokens[i] = slot.req.prompt[-1]
+        logits, self.cache = self._step(self.params, self.cache,
+                                        jnp.asarray(tokens))
+        self.n_steps += 1
+        lg = np.asarray(logits, np.float32)
+        for i, slot in enumerate(self.slots):
+            if slot.req is None:
+                continue
+            slot.pos += 1
+            if slot.pending_prompt:
+                continue                                # still prefilling
+            tok = int(lg[i].argmax())
+            slot.req.out.append(tok)
+            if len(slot.req.out) >= slot.req.max_new_tokens \
+                    or slot.pos >= self.max_seq - 1:
+                slot.req.done = True
+                slot.req = None
+                self._reset_slot_cache(i)
+        if self.kv is not None and self.n_steps % 16 == 0:
+            self.cache, _ = self.kv.maybe_spill(self.cache)
+        return len(active)
+
+    def run(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.queue and all(s.req is None for s in self.slots):
+                break
+            self.step()

@@ -1,0 +1,166 @@
+"""BaM-paged KV cache management: the serving-side face of the BaM cache.
+
+The decode caches built by the model modules hold, per global-attention
+layer, a paged pool ``(B, P_phys, page, Hkv, hd)`` plus a page table
+``(B, NP_logical)``.  This module adds the BaM mechanics on top:
+
+* **spill** — evict cold pages (oldest-first = the clock policy under
+  monotonic access recency) to the storage tier, leaving a hole (-1) in
+  the page table; the physical page is recycled.
+* **fetch** — bring spilled pages back on demand before a decode step that
+  needs them (holes inside the live window), through the same
+  coalesce -> allocate -> DMA path as ``BamArray``.
+
+The pool *is* the BaM cache data array; the page table *is* the tag store;
+the storage tier is an :class:`~repro.core.storage.HBMStorage` /
+``SimStorage`` block store whose block key is ``(seq, layer, logical_page,
+k_or_v)`` flattened.  I/O accounting reuses ``IOMetrics``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.metrics import IOMetrics
+from repro.core.ssd import ArrayOfSSDs, INTEL_OPTANE_P5800X
+from repro.utils import Tagged
+
+__all__ = ["PagedKVManager", "spill_cold_pages", "fetch_holes"]
+
+
+def _paged_entries(cache):
+    """Yield (layer_idx, entry) for every paged layer entry in a cache."""
+    for i, item in enumerate(cache["layers"]):
+        tagged = item[0] if isinstance(item, tuple) else item
+        if isinstance(tagged, Tagged) and tagged.kind == "paged":
+            yield i, tagged
+
+
+def spill_cold_pages(cache, keep_last: int, store_fn) -> Tuple[Any, int]:
+    """Evict logical pages older than the last ``keep_last`` tokens.
+
+    ``store_fn(layer, b, lpage, k_page, v_page)`` persists a page (host
+    side).  Returns (cache', n_spilled).  Holes are marked -1 in the page
+    table; the decode path masks holes out (local-window semantics) or
+    re-fetches them via :func:`fetch_holes`.
+    """
+    import numpy as np
+    seq_lens = np.asarray(cache["seq_lens"])
+    n_spilled = 0
+    new_layers = list(cache["layers"])
+    for li, tagged in _paged_entries(cache):
+        entry = dict(tagged.value)
+        pt = np.asarray(entry["page_table"]).copy()
+        page = entry["k_pages"].shape[2]
+        kp = np.asarray(entry["k_pages"])
+        vp = np.asarray(entry["v_pages"])
+        B, NP = pt.shape
+        for b in range(B):
+            last_live = max(int(seq_lens[b]) - keep_last, 0) // page
+            for lp in range(last_live):
+                phys = pt[b, lp]
+                if phys >= 0:
+                    store_fn(li, b, lp, kp[b, phys], vp[b, phys])
+                    pt[b, lp] = -1
+                    n_spilled += 1
+        entry["page_table"] = jnp.asarray(pt)
+        item = cache["layers"][li]
+        if isinstance(item, tuple):
+            new_layers[li] = (Tagged("paged", entry),) + item[1:]
+        else:
+            new_layers[li] = Tagged("paged", entry)
+    cache2 = dict(cache)
+    cache2["layers"] = tuple(new_layers)
+    return cache2, n_spilled
+
+
+def fetch_holes(cache, load_fn) -> Tuple[Any, int]:
+    """Re-materialise spilled pages (``load_fn(layer, b, lpage) ->
+    (k_page, v_page) or None``). Returns (cache', n_fetched)."""
+    import numpy as np
+    n = 0
+    new_layers = list(cache["layers"])
+    for li, tagged in _paged_entries(cache):
+        entry = dict(tagged.value)
+        pt = np.asarray(entry["page_table"]).copy()
+        kp = np.asarray(entry["k_pages"]).copy()
+        vp = np.asarray(entry["v_pages"]).copy()
+        B, NP = pt.shape
+        free = [set(range(kp.shape[1])) - set(int(x) for x in pt[b]
+                                              if x >= 0)
+                for b in range(B)]
+        for b in range(B):
+            for lp in range(NP):
+                if pt[b, lp] < 0:
+                    got = load_fn(li, b, lp)
+                    if got is None:
+                        continue
+                    if not free[b]:
+                        continue                 # pool full: stays a hole
+                    phys = free[b].pop()
+                    kp[b, phys], vp[b, phys] = got
+                    pt[b, lp] = phys
+                    n += 1
+        entry.update(page_table=jnp.asarray(pt), k_pages=jnp.asarray(kp),
+                     v_pages=jnp.asarray(vp))
+        item = cache["layers"][li]
+        if isinstance(item, tuple):
+            new_layers[li] = (Tagged("paged", entry),) + item[1:]
+        else:
+            new_layers[li] = Tagged("paged", entry)
+    cache2 = dict(cache)
+    cache2["layers"] = tuple(new_layers)
+    return cache2, n
+
+
+@dataclasses.dataclass
+class PagedKVManager:
+    """Host-side page store + spill/fetch policy around a decode cache.
+
+    The PAPER mapping: pool pages = BaM cache lines in GPU memory; this
+    host store = the NVMe tier; spill/fetch = BaM write/read I/O; the
+    Little's-law cost model charges simulated device time per page moved.
+    """
+
+    ssd: ArrayOfSSDs = dataclasses.field(
+        default_factory=lambda: ArrayOfSSDs(INTEL_OPTANE_P5800X, 1))
+    keep_last: int = 4096            # hot window kept resident
+    store: dict = dataclasses.field(default_factory=dict)
+    metrics: IOMetrics = dataclasses.field(
+        default_factory=IOMetrics.zeros)
+    page_bytes: int = 0
+
+    def _store_fn(self, layer, b, lp, k_page, v_page):
+        self.store[(layer, b, lp)] = (k_page.copy(), v_page.copy())
+        self.page_bytes = k_page.nbytes + v_page.nbytes
+
+    def _load_fn(self, layer, b, lp):
+        return self.store.get((layer, b, lp))
+
+    def maybe_spill(self, cache):
+        cache, n = spill_cold_pages(cache, self.keep_last, self._store_fn)
+        if n:
+            import dataclasses as dc
+            m = self.metrics
+            self.metrics = dc.replace(
+                m, write_ops=m.write_ops + n,
+                bytes_to_storage=m.bytes_to_storage + n * self.page_bytes,
+                sim_time_s=m.sim_time_s + self.ssd.service_time(
+                    n, max(self.page_bytes, 1), write=True))
+        return cache, n
+
+    def ensure_resident(self, cache):
+        cache, n = fetch_holes(cache, self._load_fn)
+        if n:
+            import dataclasses as dc
+            m = self.metrics
+            self.metrics = dc.replace(
+                m, misses=m.misses + n,
+                bytes_from_storage=m.bytes_from_storage
+                + n * self.page_bytes,
+                sim_time_s=m.sim_time_s + self.ssd.service_time(
+                    n, max(self.page_bytes, 1)))
+        return cache, n

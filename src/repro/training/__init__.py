@@ -1,0 +1,6 @@
+from repro.training.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                      cosine_schedule, global_norm)
+from repro.training.train_loop import make_train_step, TrainState
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm", "make_train_step", "TrainState"]

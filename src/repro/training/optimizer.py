@@ -1,0 +1,129 @@
+"""AdamW (+grad clip, wd masks, schedules) and int8 error-feedback gradient
+compression for the cross-pod reduction — pure JAX, no optax.
+
+The compression is the hierarchical trick production systems use: the
+intra-pod gradient reduce-scatter stays full precision (fast ICI), while
+the *inter-pod* all-reduce — the slow link — carries int8 with per-tensor
+scales and an error-feedback residual (so the quantisation error is
+re-injected next step instead of lost; unbiased over time).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import pytree_dataclass
+
+
+# --------------------------------------------------------------- schedule ---
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+# ------------------------------------------------------------------ adamw ---
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup: int = 100
+    total_steps: int = 10_000
+    # int8 error-feedback compression of the cross-pod reduction
+    pod_compression: bool = False
+
+
+def _decay_mask(params):
+    """No weight decay on 1-D params (norm scales, biases)."""
+    return jax.tree_util.tree_map(lambda p: p.ndim >= 2, params)
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    zeros = lambda: jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    state = {"step": jnp.zeros((), jnp.int32), "mu": zeros(), "nu": zeros()}
+    if cfg.pod_compression:
+        state["ef"] = zeros()      # error-feedback residual
+    return state
+
+
+def quantize_int8(x: jax.Array):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def pod_compressed_mean(grads, ef, axis: str = "pod"):
+    """int8 EF all-reduce-mean over the pod axis (inside shard_map/jit with
+    a mesh whose ``pod`` axis is in scope).  Returns (grads', ef')."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        # shared scale: one tiny max-reduce, then exact int32 accumulation
+        local_scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        scale = jax.lax.pmax(local_scale, axis)
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        # wire bytes: int8 payload (+ one f32 scale per tensor)
+        q_sum = jax.lax.psum(q.astype(jnp.int32), axis)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+        mean = q_sum.astype(jnp.float32) * scale / n
+        e2 = gf - q.astype(jnp.float32) * scale
+        return mean.astype(g.dtype), e2
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = tdef.flatten_up_to(ef)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    g2 = tdef.unflatten([o[0] for o in out])
+    e2 = tdef.unflatten([o[1] for o in out])
+    return g2, e2
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig,
+                 lr_fn: Optional[Callable] = None):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    lr_fn = lr_fn or cosine_schedule(cfg.lr, cfg.warmup, cfg.total_steps)
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree_util.tree_map(
+        lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+    nu = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * g * g, state["nu"], grads)
+    t = step.astype(jnp.float32)
+    mu_hat_scale = 1.0 / (1 - b1 ** t)
+    nu_hat_scale = 1.0 / (1 - b2 ** t)
+    lr = lr_fn(step)
+    mask = _decay_mask(params)
+
+    def upd(p, m, v, use_wd):
+        u = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + cfg.eps)
+        if cfg.weight_decay:
+            u = u + jnp.where(use_wd, cfg.weight_decay, 0.0) * \
+                p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, mu, nu, mask)
+    new_state = dict(state)
+    new_state.update(step=step, mu=mu, nu=nu)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

@@ -1,0 +1,9 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real CPU device; only launch/dryrun.py (its own process) forces 512.
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,100 @@
+"""Property tests: the BaM software cache against a model-checker oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cache as C
+
+
+def make(num_sets=4, ways=2, line=4):
+    return C.make_cache(num_sets, ways, line)
+
+
+@given(st.lists(st.lists(st.integers(0, 30), min_size=1, max_size=12),
+                min_size=1, max_size=8))
+@settings(max_examples=100, deadline=None)
+def test_cache_invariants_over_rounds(rounds):
+    """After any sequence of probe/allocate/fill rounds:
+    - no duplicate tags across the whole cache,
+    - probe(k) hits iff k is resident,
+    - resident lines hold the lines written for them."""
+    cache = make()
+    resident = {}                             # key -> expected line value
+    for rnd in rounds:
+        keys = np.unique(np.asarray(rnd, np.int32))      # coalesced
+        kj = jnp.asarray(keys)
+        pr = C.probe(cache, kj)
+        hit = np.asarray(pr.hit)
+        # hits must be exactly the resident keys
+        for i, k in enumerate(keys):
+            assert hit[i] == (int(k) in resident), (k, resident)
+        miss = ~hit
+        cache, alloc = C.allocate(cache, kj, jnp.asarray(miss),
+                                  protect_slots=pr.slot)
+        ok = np.asarray(alloc.ok)
+        ev = np.asarray(alloc.evicted_key)
+        lines = jnp.asarray(
+            np.repeat(keys.astype(np.float32)[:, None], 4, axis=1))
+        cache = C.fill(cache, alloc.slot, alloc.ok, lines)
+        for i, k in enumerate(keys):
+            if miss[i] and ok[i]:
+                if ev[i] >= 0:
+                    resident.pop(int(ev[i]), None)
+                resident[int(k)] = float(k)
+        # invariant: tags unique
+        tags = np.asarray(cache.tags).reshape(-1)
+        live = tags[tags >= 0]
+        assert len(set(live.tolist())) == len(live)
+        # invariant: resident data correct
+        for k, v in resident.items():
+            pr2 = C.probe(cache, jnp.asarray([k], jnp.int32))
+            assert bool(pr2.hit[0])
+            row = np.asarray(cache.data)[int(pr2.slot[0])]
+            assert np.all(row == v)
+
+
+def test_protected_lines_never_evicted():
+    cache = make(num_sets=1, ways=2, line=2)
+    k = jnp.asarray([5, 9], jnp.int32)
+    pr = C.probe(cache, k)
+    cache, alloc = C.allocate(cache, k, ~pr.hit)
+    cache = C.fill(cache, alloc.slot, alloc.ok,
+                   jnp.ones((2, 2), jnp.float32))
+    # both ways now full with {5, 9}; probe 5 and protect it, insert 2 keys
+    pr5 = C.probe(cache, jnp.asarray([5], jnp.int32))
+    assert bool(pr5.hit[0])
+    newk = jnp.asarray([11, 12], jnp.int32)
+    prn = C.probe(cache, newk)
+    cache, alloc = C.allocate(cache, newk, ~prn.hit,
+                              protect_slots=pr5.slot)
+    # only one eligible way (the one holding 9) -> one insert, one bypass
+    assert int(jnp.sum(alloc.ok.astype(jnp.int32))) == 1
+    assert bool(C.probe(cache, jnp.asarray([5], jnp.int32)).hit[0])
+
+
+def test_refcount_pins_line():
+    cache = make(num_sets=1, ways=1, line=2)
+    k = jnp.asarray([3], jnp.int32)
+    cache, alloc = C.allocate(cache, k, jnp.asarray([True]))
+    cache = C.fill(cache, alloc.slot, alloc.ok, jnp.ones((1, 2)))
+    cache = C.acquire(cache, alloc.slot)
+    # try to evict with a new key: the only way is pinned -> bypass
+    cache, alloc2 = C.allocate(cache, jnp.asarray([7], jnp.int32),
+                               jnp.asarray([True]))
+    assert not bool(alloc2.ok[0])
+    cache = C.release(cache, alloc.slot)
+    cache, alloc3 = C.allocate(cache, jnp.asarray([7], jnp.int32),
+                               jnp.asarray([True]))
+    assert bool(alloc3.ok[0])
+
+
+@given(st.lists(st.integers(0, 15), min_size=1, max_size=32))
+@settings(max_examples=100, deadline=None)
+def test_same_set_misses_get_distinct_ways(keys):
+    cache = make(num_sets=2, ways=4)
+    keys = np.unique(np.asarray(keys, np.int32))
+    kj = jnp.asarray(keys)
+    cache, alloc = C.allocate(cache, kj, jnp.ones(len(keys), bool))
+    slots = np.asarray(alloc.slot)[np.asarray(alloc.ok)]
+    assert len(set(slots.tolist())) == len(slots)   # no slot granted twice

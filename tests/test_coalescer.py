@@ -1,0 +1,48 @@
+"""Property tests: the wavefront coalescer is an exact vectorized `unique`."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import coalesce
+
+keys_strategy = st.lists(
+    st.integers(min_value=-3, max_value=40), min_size=1, max_size=64)
+
+
+@given(keys_strategy)
+@settings(max_examples=200, deadline=None)
+def test_coalesce_matches_unique(keys):
+    keys = np.asarray(keys, np.int32)
+    co = coalesce(jnp.asarray(keys))
+    valid = keys >= 0
+    expected = sorted(set(keys[valid].tolist()))
+    n_u = int(co.num_unique)
+    got = np.asarray(co.unique_keys)[:n_u].tolist()
+    assert got == expected                      # exact unique set, sorted
+    assert np.all(np.asarray(co.unique_keys)[n_u:] == -1)
+
+
+@given(keys_strategy)
+@settings(max_examples=200, deadline=None)
+def test_coalesce_inverse_maps_to_own_key(keys):
+    keys = np.asarray(keys, np.int32)
+    co = coalesce(jnp.asarray(keys))
+    uk = np.asarray(co.unique_keys)
+    inv = np.asarray(co.inverse_idx)
+    for i, k in enumerate(keys):
+        if k >= 0:
+            assert uk[inv[i]] == k              # broadcast goes to leader
+
+
+@given(keys_strategy)
+@settings(max_examples=200, deadline=None)
+def test_coalesce_one_leader_per_line(keys):
+    keys = np.asarray(keys, np.int32)
+    co = coalesce(jnp.asarray(keys))
+    lead = np.asarray(co.leader_mask)
+    valid = keys >= 0
+    # exactly one leader per distinct valid key; no invalid leaders
+    assert lead[~valid].sum() == 0
+    led_keys = keys[lead]
+    assert len(set(led_keys.tolist())) == len(led_keys)
+    assert set(led_keys.tolist()) == set(keys[valid].tolist())

@@ -1,0 +1,247 @@
+"""Distribution tests — run in subprocesses with 8 fake devices so the main
+pytest process keeps the single real CPU device (see conftest note)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(body: str, n_dev: int = 8) -> str:
+    code = (
+        "import os\n"
+        f'os.environ["XLA_FLAGS"] = '
+        f'"--xla_force_host_platform_device_count={n_dev}"\n'
+        "import sys\n"
+        f'sys.path.insert(0, {os.path.join(ROOT, "src")!r})\n'
+        + textwrap.dedent(body))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=ROOT, timeout=600)
+    assert r.returncode == 0 and "OK" in r.stdout, \
+        f"stdout={r.stdout[-800:]}\nstderr={r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_sharded_train_step_runs_and_matches_single_device():
+    run_sub("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro.configs.base import smoke_config
+        from repro.distributed import sharding as shd
+        from repro.launch.mesh import make_mesh
+        from repro.models.model import build_model
+        from repro.training import optimizer as opt
+        from repro.training.train_loop import (make_train_step,
+                                               state_shardings,
+                                               batch_shardings)
+
+        cfg = smoke_config("qwen2_5_14b")
+        api = build_model(cfg)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (4, 16)),
+                                       jnp.int32)}
+        acfg = opt.AdamWConfig(lr=1e-3, warmup=1, total_steps=10)
+
+        # single-device reference
+        params, axes = api.init(jax.random.PRNGKey(0), 16)
+        state0 = {"params": params, "opt": opt.adamw_init(params, acfg)}
+        step = make_train_step(cfg, api, adamw=acfg)
+        s1, m1 = jax.jit(step)(state0, batch)
+
+        # sharded
+        mesh = make_mesh((2, 4), ("data", "model"))
+        with shd.activate(mesh, None):
+            st_sh = state_shardings(cfg, axes, mesh, state0["params"], acfg)
+            b_sh = batch_shardings(batch, mesh)
+            step_d = jax.jit(make_train_step(cfg, api, adamw=acfg,
+                                             mesh=mesh),
+                             in_shardings=(st_sh, b_sh),
+                             out_shardings=(st_sh, None))
+            s2, m2 = step_d(jax.device_put(state0, st_sh),
+                            jax.device_put(batch, b_sh))
+        assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-3, \
+            (float(m1["loss"]), float(m2["loss"]))
+        for a, b in zip(jax.tree_util.tree_leaves(s1["params"]),
+                        jax.tree_util.tree_leaves(s2["params"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=2e-3, rtol=2e-3)
+        print("OK")
+    """)
+
+
+def test_pod_compressed_reduction():
+    """int8-EF cross-pod mean inside partial-manual shard_map: wire bytes
+    are int8 + one scale; the mean matches the exact mean within the
+    quantisation bound.
+
+    NOTE: combining this with models containing gathers (embedding lookups)
+    currently trips an XLA SPMD-partitioner CHECK (gather partitioning
+    under manual subgroups) — tracked in DESIGN.md §known-issues; the
+    multi-pod dry-run baseline therefore uses the standard reduction.
+    """
+    run_sub("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.launch.mesh import make_mesh
+        from repro.training import optimizer as opt
+
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        rng = np.random.default_rng(0)
+        g_global = jnp.asarray(rng.standard_normal((2, 64, 32)), jnp.float32)
+
+        def per_pod(g_slice, ef):
+            grads = {"w": g_slice[0]}        # this pod's gradient
+            mean, ef2 = opt.pod_compressed_mean(grads, {"w": ef},
+                                                axis="pod")
+            return mean["w"], ef2["w"]
+
+        f = jax.jit(jax.shard_map(
+            per_pod, mesh=mesh,
+            in_specs=(P("pod"), P()), out_specs=(P(), P("pod")),
+            axis_names={"pod"}, check_vma=False))
+        ef0 = jnp.zeros((64, 32))
+        mean, ef = f(g_global, jnp.stack([ef0, ef0]))
+        mean = np.asarray(mean)
+        if mean.ndim == 3:            # replicated-per-pod leading dim
+            np.testing.assert_allclose(mean[0], mean[1])
+            mean = mean[0]
+        want = np.asarray(g_global).mean(0)
+        scale = np.abs(np.asarray(g_global)).max() / 127.0
+        np.testing.assert_allclose(mean, want, atol=2 * scale)
+        # int8 payload on the wire: psum accumulates in s32
+        txt = f.lower(g_global, jnp.stack([ef0, ef0])).compile().as_text()
+        assert "s8[" in txt or "s32[" in txt, "quantized collective missing"
+        # error feedback: residual carries the quantisation error
+        assert float(jnp.abs(ef).max()) <= scale / 2 + 1e-6
+        print("OK")
+    """)
+
+
+def test_elastic_restore_different_mesh(tmp_path):
+    run_sub(f"""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro.configs.base import smoke_config
+        from repro.distributed import sharding as shd
+        from repro.launch.mesh import make_mesh
+        from repro.models.model import build_model
+        from repro.training import checkpoint as ckpt
+
+        cfg = smoke_config("gemma3_1b")
+        api = build_model(cfg)
+        params, axes = api.init(jax.random.PRNGKey(0), 16)
+
+        mesh8 = make_mesh((4, 2), ("data", "model"))
+        with shd.activate(mesh8, None):
+            sh8 = shd.param_shardings(axes, mesh8, shapes_tree=params)
+            p8 = jax.device_put(params, sh8)
+        ckpt.save_checkpoint({str(tmp_path)!r}, 3, p8)
+
+        # restore onto a 4-device mesh (elastic shrink)
+        mesh4 = make_mesh((2, 2), ("data", "model"))
+        with shd.activate(mesh4, None):
+            sh4 = shd.param_shardings(axes, mesh4, shapes_tree=params)
+            p4, step, _ = ckpt.restore_checkpoint({str(tmp_path)!r}, params,
+                                                  shardings=sh4)
+        assert step == 3
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(p4)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print("OK")
+    """)
+
+
+def test_constrain_drops_non_divisible_axes():
+    run_sub("""
+        import jax, jax.numpy as jnp
+        from repro.distributed import sharding as shd
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((2, 4), ("data", "model"))
+        with shd.activate(mesh, None):
+            @jax.jit
+            def f(x):
+                # 25 heads over a 4-way model axis: must silently skip
+                return shd.constrain(x, ("batch", "act_heads", None))
+            y = f(jnp.ones((4, 25, 8)))
+            assert y.shape == (4, 25, 8)
+        print("OK")
+    """)
+
+
+def test_mesh_shapes():
+    run_sub("""
+        from repro.launch.mesh import make_production_mesh
+        m = make_production_mesh()
+        assert m.shape == {"data": 16, "model": 16}, m.shape
+        m2 = make_production_mesh(multi_pod=True)
+        assert m2.shape == {"pod": 2, "data": 16, "model": 16}
+        print("OK")
+    """, n_dev=512)
+
+
+def test_sharded_flash_decode_matches_ref():
+    """`cfg.flash_decode_shards` (shard-local flash-decoding over the
+    striped KV pool) is value-identical to the reference paged attention."""
+    run_sub("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.kernels import ref
+        from repro.models.transformer import _paged_attention_flash_decode
+        from repro.configs.base import smoke_config
+
+        mesh = make_mesh((2, 4), ("data", "model"))
+        rng = np.random.default_rng(0)
+        B, Hq, Hkv, D, Pp, page, NP = 2, 4, 2, 16, 8, 8, 6
+        q = jnp.asarray(rng.standard_normal((B, Hq, D)), jnp.float32)
+        kp = jnp.asarray(rng.standard_normal((B, Pp, page, Hkv, D)),
+                         jnp.float32)
+        vp = jnp.asarray(rng.standard_normal((B, Pp, page, Hkv, D)),
+                         jnp.float32)
+        pt = jnp.stack([jnp.asarray(rng.permutation(Pp)[:NP], jnp.int32)
+                        for _ in range(B)])
+        sl = jnp.asarray([37, 44], jnp.int32)
+        cfg = smoke_config("gemma3_12b")
+        with mesh:
+            o1 = jax.jit(lambda *a: _paged_attention_flash_decode(
+                cfg, *a, mesh))(q, kp, vp, pt, sl)
+        o2 = ref.paged_attention_ref(q, kp, vp, pt, sl)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   atol=3e-5, rtol=3e-5)
+        print("OK")
+    """)
+
+
+def test_gpipe_pipeline_parallel_matches_sequential():
+    """GPipe over the pod axis == running the stages sequentially."""
+    run_sub("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.distributed.pipeline_parallel import gpipe
+
+        P_STAGES, M, B, D = 4, 8, 16, 32
+        mesh = make_mesh((P_STAGES, 2), ("pod", "data"))
+        rng = np.random.default_rng(0)
+        ws = jnp.asarray(rng.standard_normal((P_STAGES, D, D)) / np.sqrt(D),
+                         jnp.float32)
+        x = jnp.asarray(rng.standard_normal((B, D)), jnp.float32)
+
+        def stage(w, xb):
+            return jax.nn.tanh(xb @ w)
+
+        pipe = gpipe(lambda p, xb: stage(p, xb), P_STAGES, M, mesh=mesh)
+        y = jax.jit(lambda w, x: pipe(w, x))(ws, x)
+
+        ref = x
+        for s in range(P_STAGES):
+            ref = stage(ws[s], ref)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+        print("OK")
+    """)
