@@ -14,6 +14,7 @@ Prints ``name,us_per_call,derived`` CSV.  Each module's ``run()`` returns
   taxi_queries             Fig 10  Q1..Q6 end-to-end
   paged_kv                 (beyond paper) KV spill/fetch
   moe_paging               (beyond paper) expert paging
+  prefetch_sweep           (beyond paper) readahead window sweep
 """
 import importlib
 import sys
@@ -22,7 +23,7 @@ import traceback
 MODULES = [
     "littles_law", "ssd_cost", "uvm_bound", "analytics_amplification",
     "iops_scaling", "graph_analytics", "cacheline_sweep", "ssd_scaling",
-    "taxi_queries", "paged_kv", "moe_paging",
+    "taxi_queries", "paged_kv", "moe_paging", "prefetch_sweep",
 ]
 
 

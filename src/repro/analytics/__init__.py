@@ -1,5 +1,5 @@
 from repro.analytics.taxi import (TaxiTable, make_taxi_table, run_query,
-                                  run_query_baseline, QUERIES)
+                                  run_query_baseline, scan_column, QUERIES)
 
 __all__ = ["TaxiTable", "make_taxi_table", "run_query",
-           "run_query_baseline", "QUERIES"]
+           "run_query_baseline", "scan_column", "QUERIES"]

@@ -21,7 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BamArray, BamState
+from typing import Optional
+
+from repro.core import BamArray, BamState, PrefetchConfig
 from repro.core.ssd import ArrayOfSSDs, INTEL_OPTANE_P5800X
 
 COLUMNS = ["pickup_gid", "trip_dist", "total_amt", "surcharge",
@@ -52,7 +54,8 @@ class TaxiTable:
 
 def make_taxi_table(n_rows: int = 1 << 18, *, selectivity: float = 5e-4,
                     block_bytes: int = 512, cache_bytes: int = 1 << 18,
-                    seed: int = 0, backend: str = "sim") -> TaxiTable:
+                    seed: int = 0, backend: str = "sim",
+                    prefetch: Optional[PrefetchConfig] = None) -> TaxiTable:
     rng = np.random.default_rng(seed)
     pickup = rng.integers(0, 256, n_rows).astype(np.int32)
     # plant the target selectivity for gid == WILLIAMSBURG
@@ -70,7 +73,8 @@ def make_taxi_table(n_rows: int = 1 << 18, *, selectivity: float = 5e-4,
             data.reshape(1, -1), block_elems=block_elems,
             num_sets=max(cache_bytes // block_bytes // 4, 1), ways=4,
             num_queues=16, queue_depth=1024,
-            ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, 1), backend=backend)
+            ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, 1), backend=backend,
+            prefetch=prefetch)
         cols[name] = arr
         states[name] = st
     return TaxiTable(n_rows=n_rows, pickup=jnp.asarray(pickup), cols=cols,
@@ -112,6 +116,28 @@ def run_query(tbl: TaxiTable, query: str) -> Tuple[dict, dict]:
     io["amplification"] = moved / max(useful, 1.0)
     io["bytes_moved_total"] = moved
     return {"query": query, "value": res}, io
+
+
+def scan_column(tbl: TaxiTable, name: str, *, wavefront: int = 1024
+                ) -> Tuple[float, dict]:
+    """Full sequential scan of one BaM-resident column, one wavefront at a
+    time — the readahead showcase.
+
+    With the table built under ``PrefetchConfig(enabled=True)``, each
+    wavefront's stride-1 pattern triggers the readahead detector, so every
+    wavefront after warmup finds its lines already resident (speculative
+    fills promoted on the demand hit).  Returns ``(column_sum, io_summary)``
+    where the summary is the column's cumulative :class:`IOMetrics`.
+    """
+    arr, st = tbl.cols[name], tbl.states[name]
+    read = jax.jit(arr.read)
+    total = 0.0
+    for start in range(0, tbl.n_rows, wavefront):
+        idx = jnp.arange(start, start + wavefront, dtype=jnp.int32)
+        v, st = read(st, idx)
+        total += float(v.sum())
+    tbl.states[name] = st
+    return total, st.metrics.summary()
 
 
 def run_query_baseline(tbl: TaxiTable, query: str) -> Tuple[dict, dict]:

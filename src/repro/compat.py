@@ -1,0 +1,48 @@
+"""JAX version-compatibility shims.
+
+The repo is written against the modern JAX surface (top-level
+``jax.shard_map`` with ``axis_names``/``check_vma``; Pallas
+``pltpu.CompilerParams``), but must also run on the 0.4.x line where those
+names live elsewhere (``jax.experimental.shard_map`` with ``auto`` /
+``check_rep``; ``pltpu.TPUCompilerParams``).  Route every use through this
+module instead of feature-detecting at the call sites.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "tpu_compiler_params"]
+
+
+def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+              axis_names=None, check_vma=None, **kwargs):
+    """``jax.shard_map`` with graceful fallback to the experimental API.
+
+    ``axis_names`` is the set of mesh axes the body is manual over (the
+    modern keyword); ``check_vma`` maps to the old ``check_rep``.  On the
+    0.4.x fallback the body runs manual over *all* mesh axes (``axis_names``
+    is dropped rather than translated to the complementary ``auto`` set):
+    partial-manual mode there lowers ``axis_index`` to a bare PartitionId,
+    which the 0.4.x SPMD partitioner rejects.  Every body in this repo is
+    replicated over its non-manual axes, so the two modes agree.
+    """
+    if hasattr(jax, "shard_map"):
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    if check_vma is not None:
+        kwargs["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (renamed from ``TPUCompilerParams``)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams")
+    return cls(**kwargs)

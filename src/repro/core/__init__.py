@@ -7,6 +7,7 @@ Layers (bottom-up):
   coalescer.py  wavefront dedup ("warp coalescing")      (paper §III-D)
   cache.py      set-assoc clock software cache           (paper §III-D)
   bam_array.py  BamArray / BamKVStore abstractions       (paper §III-E)
+  prefetch.py   stride readahead + prefetch hints        (beyond paper)
   pipeline.py   fetch/compute overlap (latency hiding)   (paper §III-B)
   metrics.py    I/O amplification & throughput counters  (paper §II-B)
 """
@@ -15,6 +16,7 @@ from repro.core.cache import CacheState, make_cache
 from repro.core.coalescer import CoalesceResult, coalesce
 from repro.core.metrics import IOMetrics
 from repro.core.pipeline import pipelined_bam_map, software_pipeline
+from repro.core.prefetch import PrefetchConfig, modal_stride, readahead_keys
 from repro.core.queues import QueueState, enqueue, make_queues, service_all
 from repro.core.ssd import (
     ArrayOfSSDs, SSDSpec, SSD_PRESETS, DRAM_DIMM, INTEL_OPTANE_P5800X,
@@ -26,8 +28,9 @@ from repro.core.storage import HBMStorage, SimStorage
 __all__ = [
     "BamArray", "BamKVStore", "BamState", "CacheState", "make_cache",
     "CoalesceResult", "coalesce", "IOMetrics", "pipelined_bam_map",
-    "software_pipeline", "QueueState", "enqueue", "make_queues",
-    "service_all", "ArrayOfSSDs", "SSDSpec", "SSD_PRESETS", "DRAM_DIMM",
+    "software_pipeline", "PrefetchConfig", "modal_stride", "readahead_keys",
+    "QueueState", "enqueue", "make_queues", "service_all",
+    "ArrayOfSSDs", "SSDSpec", "SSD_PRESETS", "DRAM_DIMM",
     "INTEL_OPTANE_P5800X", "SAMSUNG_980PRO", "SAMSUNG_ZNAND_P1735",
     "required_queue_depth", "sustained_rate", "target_iops_for_link",
     "HBMStorage", "SimStorage",

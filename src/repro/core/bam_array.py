@@ -15,15 +15,25 @@ The life of a wavefront (paper Fig. 3, adapted):
     element idx ──► block key + offset
         │ coalesce (warp coalescer, §III-D)          -> unique lines, leaders
         │ probe cache                                 -> hits / misses
+        │   (hit on a prefetched line: promote it, count a prefetch hit)
         │ allocate victims (clock)                    -> slots (or bypass)
         │ gather evicted dirty lines                  -> write-back commands
-        │ enqueue reads+write-backs, ring doorbells   -> SQ rings (§III-C)
+        │ readahead detect + speculative allocate     -> low-priority fills
+        │ enqueue reads+write-backs+readahead,        -> SQ rings (§III-C)
+        │   ring doorbells (demand lane drains first)
         │ service (simulated NVMe drain + DMA)        -> fetched lines
-        │ fill cache, update tags/dirty
+        │ fill cache, update tags/dirty/speculative
         ▼ gather elements (hit: cache line, miss: fetched line)
 
 Requests dropped by full rings are still served read-through (and counted),
 so a mis-sized queue config degrades accounting, never correctness.
+
+Prefetching is off by default (``PrefetchConfig.enabled``); when on, the
+stride detector in :mod:`repro.core.prefetch` extrapolates the wavefront's
+block pattern ``window`` lines ahead and brings those lines in through the
+readahead lane as evict-first *speculative* residents.  The explicit
+:meth:`BamArray.prefetch` API lets applications (BFS frontiers, column
+scans) push known-future wavefronts directly.
 """
 from __future__ import annotations
 
@@ -37,11 +47,12 @@ from repro.core import cache as C
 from repro.core import queues as Q
 from repro.core.coalescer import coalesce
 from repro.core.metrics import IOMetrics
+from repro.core.prefetch import PrefetchConfig, readahead_keys
 from repro.core.ssd import ArrayOfSSDs, INTEL_OPTANE_P5800X
 from repro.core.storage import HBMStorage, SimStorage
 from repro.utils import pytree_dataclass
 
-__all__ = ["BamArray", "BamState", "BamKVStore"]
+__all__ = ["BamArray", "BamState", "BamKVStore", "PrefetchConfig"]
 
 
 @pytree_dataclass
@@ -64,6 +75,8 @@ class BamArray:
     block_elems: int
     ssd: ArrayOfSSDs = dataclasses.field(
         default_factory=lambda: ArrayOfSSDs(INTEL_OPTANE_P5800X, 1))
+    prefetch_cfg: PrefetchConfig = dataclasses.field(
+        default_factory=PrefetchConfig)
 
     # ---------------------------------------------------------------- init
     @staticmethod
@@ -71,6 +84,7 @@ class BamArray:
               num_sets: int, ways: int = 4,
               num_queues: int = 8, queue_depth: int = 1024,
               ssd: Optional[ArrayOfSSDs] = None,
+              prefetch: Optional[PrefetchConfig] = None,
               backend: str = "sim") -> Tuple["BamArray", BamState]:
         """Create the array + its initial state from a host/jnp array.
 
@@ -91,7 +105,8 @@ class BamArray:
             raise ValueError(f"unknown backend {backend!r}")
         arr = BamArray(
             storage=store, shape=shape, dtype=dtype, block_elems=block_elems,
-            ssd=ssd or ArrayOfSSDs(INTEL_OPTANE_P5800X, 1))
+            ssd=ssd or ArrayOfSSDs(INTEL_OPTANE_P5800X, 1),
+            prefetch_cfg=prefetch or PrefetchConfig())
         st = BamState(
             cache=C.make_cache(num_sets, ways, block_elems, dtype),
             queues=Q.make_queues(num_queues, queue_depth),
@@ -111,6 +126,14 @@ class BamArray:
         for d in self.shape:
             n *= int(d)
         return n
+
+    @property
+    def num_blocks(self) -> int:
+        return -(-self.size // self.block_elems)
+
+    def with_prefetch(self, cfg: PrefetchConfig) -> "BamArray":
+        """Same array, different (static) readahead policy."""
+        return dataclasses.replace(self, prefetch_cfg=cfg)
 
     def _store(self, st: BamState):
         return self.storage if self.storage is not None else st.storage
@@ -134,10 +157,13 @@ class BamArray:
         ukeys = co.unique_keys                      # (n,) padded with -1
         uvalid = ukeys >= 0
 
-        # 2) probe the software cache.
+        # 2) probe the software cache.  A demand hit on a prefetched line is
+        #    a prefetch hit: promote the line to an ordinary resident.
         pr = C.probe(st.cache, ukeys, uvalid)
         n_hit = jnp.sum(pr.hit.astype(jnp.int32))
+        n_pref_hit = jnp.sum(pr.speculative.astype(jnp.int32))
         cache1 = C.count_hits(st.cache, n_hit)
+        cache1 = C.promote(cache1, jnp.where(pr.speculative, pr.slot, -1))
         miss = uvalid & ~pr.hit
 
         # 3) allocate victims for the misses (hits protected this round).
@@ -150,25 +176,79 @@ class BamArray:
         wb = alloc.ok & alloc.evicted_dirty & (alloc.evicted_key >= 0)
         wb_keys = jnp.where(wb, alloc.evicted_key, -1)
 
+        # 4b) readahead: extrapolate the wavefront's stride pattern and
+        #     speculatively allocate the predicted lines.  Demand slots (this
+        #     round's hits and grants) are protected, so readahead can only
+        #     claim invalid or stale lines — it never displaces the wavefront.
+        cfg = self.prefetch_cfg
+        ra_on = cfg.enabled and cfg.window > 0
+        if ra_on:
+            ra_cand = readahead_keys(
+                ukeys, uvalid, window=cfg.window, num_blocks=self.num_blocks,
+                min_support=cfg.min_support, max_stride=cfg.max_stride,
+                raw_keys=blk, raw_valid=valid)
+            ra_pr = C.probe(cache2, ra_cand, ra_cand >= 0)
+            ra_want = (ra_cand >= 0) & ~ra_pr.hit
+            # Never speculatively re-fetch a line this wavefront just
+            # evicted: on the sim backend the fetch (pure_callback) is not
+            # ordered against the dirty write-back (io_callback), so it
+            # could observe the pre-write-back bytes — and re-fetching a
+            # just-evicted line is pure thrash regardless of backend.
+            evk = jnp.where(alloc.ok & (alloc.evicted_key >= 0),
+                            alloc.evicted_key, -2)
+            ra_want = ra_want & ~jnp.any(
+                ra_cand[:, None] == evk[None, :], axis=1)
+            cache2, ra_alloc = C.allocate(
+                cache2, ra_cand, ra_want,
+                protect_slots=jnp.concatenate([pr.slot, alloc.slot]),
+                speculative=True)
+            ra_keys = jnp.where(ra_alloc.ok, ra_cand, -1)
+            ra_rows = jnp.where(ra_alloc.ok, ra_alloc.slot, 0)
+            ra_ev_lines = cache2.data[ra_rows]
+            ra_wb = ra_alloc.ok & ra_alloc.evicted_dirty \
+                & (ra_alloc.evicted_key >= 0)
+            ra_wb_keys = jnp.where(ra_wb, ra_alloc.evicted_key, -1)
+
         # 5) submit reads + write-backs to the SQ rings; ring doorbells.
+        #    Readahead goes last and in the low-priority lane: it is the
+        #    first thing dropped under back-pressure and the last retired.
         qs1, rec_r = Q.enqueue(st.queues, jnp.where(miss, ukeys, -1),
                                dst=alloc.slot)
         qs2, rec_w = Q.enqueue(qs1, wb_keys,
                                is_write=jnp.ones_like(wb))
+        n_doorbells = rec_r.n_doorbells + rec_w.n_doorbells
+        if ra_on:
+            qs2, rec_rw = Q.enqueue(qs2, ra_wb_keys,
+                                    is_write=jnp.ones_like(ra_wb))
+            qs2, rec_ra = Q.enqueue(qs2, ra_keys, dst=ra_alloc.slot,
+                                    prio=Q.PRIO_READAHEAD)
+            n_doorbells = n_doorbells + rec_rw.n_doorbells + rec_ra.n_doorbells
         depth_now = Q.in_flight(qs2)
         qs3, comps = Q.service_all(qs2)
 
-        # 6) the DMA: fetch missed lines / write back dirty lines.
+        # 6) the DMA: fetch missed lines / write back dirty lines.  Fetch
+        #    keys are disjoint from this round's evictions (demand misses
+        #    by the probe, readahead by the explicit exclusion above), so
+        #    the unordered fetch callback can never race a write-back of
+        #    the same line.
         store = self._store(st)
         lines_u = store.fetch_blocks(jnp.where(miss, ukeys, -1))
         new_storage = st.storage
         if self.storage is None:                    # in-graph backend
             new_storage = store.write_blocks(wb_keys, ev_lines)
+            if ra_on:
+                new_storage = new_storage.write_blocks(ra_wb_keys, ra_ev_lines)
+                lines_ra = new_storage.fetch_blocks(ra_keys)
         else:
             self.storage.write_blocks(wb_keys, ev_lines)
+            if ra_on:
+                self.storage.write_blocks(ra_wb_keys, ra_ev_lines)
+                lines_ra = self.storage.fetch_blocks(ra_keys)
 
         # 7) completion: fill granted slots with fetched lines.
         cache3 = C.fill(cache2, alloc.slot, alloc.ok, lines_u)
+        if ra_on:
+            cache3 = C.fill(cache3, ra_alloc.slot, ra_alloc.ok, lines_ra)
 
         # 8) gather elements back to every requester (leader broadcast).
         u = co.inverse_idx                          # (n,) request -> unique row
@@ -179,14 +259,21 @@ class BamArray:
         vals = jnp.where(hit_u, from_cache, from_fetch)
         vals = jnp.where(valid, vals, 0).astype(self.dtype)
 
-        # 9) metrics.
+        # 9) metrics.  Readahead reads share the device drain with demand
+        #    (one busy-time accumulation) but are accounted separately:
+        #    ``misses`` stays demand-only, ``prefetch_issued`` carries the
+        #    speculative lines, and both contribute to bytes moved.
         n_valid = jnp.sum(valid.astype(jnp.int32))
         n_miss = jnp.sum(miss.astype(jnp.int32))
         n_wb = jnp.sum(wb.astype(jnp.int32))
+        n_ra = jnp.zeros((), jnp.int32)
+        if ra_on:
+            n_ra = jnp.sum(ra_alloc.ok.astype(jnp.int32))
+            n_wb = n_wb + jnp.sum(ra_wb.astype(jnp.int32))
         itemsize = jnp.dtype(self.dtype).itemsize
         mt = st.metrics
         sim_t = self.ssd.service_time_traced(
-            n_miss, self.block_bytes,
+            n_miss + n_ra, self.block_bytes,
             queue_depth_limit=st.queues.num_queues * st.queues.depth)
         sim_t = sim_t + self.ssd.service_time_traced(
             n_wb, self.block_bytes, write=True,
@@ -196,16 +283,90 @@ class BamArray:
             bytes_requested=mt.bytes_requested + n_valid * itemsize,
             hits=mt.hits + n_hit,
             misses=mt.misses + n_miss,
-            bytes_from_storage=mt.bytes_from_storage + n_miss * self.block_bytes,
+            bytes_from_storage=mt.bytes_from_storage
+                + (n_miss + n_ra) * self.block_bytes,
+            write_ops=mt.write_ops + n_wb,
+            bytes_to_storage=mt.bytes_to_storage + n_wb * self.block_bytes,
+            doorbells=mt.doorbells + n_doorbells,
+            sim_time_s=mt.sim_time_s + sim_t,
+            max_queue_depth=jnp.maximum(mt.max_queue_depth,
+                                        depth_now.astype(jnp.int32)),
+            prefetch_issued=mt.prefetch_issued + n_ra,
+            prefetch_hits=mt.prefetch_hits + n_pref_hit,
+        )
+        return vals, BamState(cache=cache3, queues=qs3, metrics=metrics,
+                              storage=new_storage)
+
+    # ------------------------------------------------------------- prefetch
+    def prefetch(self, st: BamState, idx: jax.Array,
+                 valid: jax.Array | None = None) -> BamState:
+        """Hint the array at a future wavefront: warm the cache, no values.
+
+        The lines covering ``idx`` are brought in through the low-priority
+        readahead lane as *speculative* residents — inserted without pin, so
+        a hint that never materialises is the first thing the clock hand
+        reclaims.  Already-resident lines and invalid/out-of-range lanes
+        cost nothing.  Works regardless of :class:`PrefetchConfig.enabled`
+        (that flag only gates the automatic stride readahead in
+        :meth:`read`).  Demand counters (requests/hits/misses) are untouched:
+        a prefetch is not compute traffic.
+        """
+        if valid is None:
+            valid = (idx >= 0) & (idx < self.size)
+        blk, _ = self._split(jnp.where(valid, idx, 0))
+        blk = jnp.where(valid, blk, -1)
+
+        co = coalesce(blk, valid)
+        ukeys = co.unique_keys
+        uvalid = ukeys >= 0
+        pr = C.probe(st.cache, ukeys, uvalid)
+        want = uvalid & ~pr.hit
+        cache1, alloc = C.allocate(st.cache, ukeys, want,
+                                   protect_slots=pr.slot, speculative=True)
+        ev_rows = jnp.where(alloc.ok, alloc.slot, 0)
+        ev_lines = cache1.data[ev_rows]
+        wb = alloc.ok & alloc.evicted_dirty & (alloc.evicted_key >= 0)
+        wb_keys = jnp.where(wb, alloc.evicted_key, -1)
+        keys = jnp.where(alloc.ok, ukeys, -1)
+
+        qs1, rec_w = Q.enqueue(st.queues, wb_keys, is_write=jnp.ones_like(wb))
+        qs2, rec_r = Q.enqueue(qs1, keys, dst=alloc.slot,
+                               prio=Q.PRIO_READAHEAD)
+        depth_now = Q.in_flight(qs2)
+        qs3, _ = Q.service_all(qs2)
+
+        store = self._store(st)
+        new_storage = st.storage
+        if self.storage is None:                    # in-graph backend
+            new_storage = store.write_blocks(wb_keys, ev_lines)
+            lines = new_storage.fetch_blocks(keys)
+        else:
+            self.storage.write_blocks(wb_keys, ev_lines)
+            lines = self.storage.fetch_blocks(keys)
+        cache2 = C.fill(cache1, alloc.slot, alloc.ok, lines)
+
+        n_ra = jnp.sum(alloc.ok.astype(jnp.int32))
+        n_wb = jnp.sum(wb.astype(jnp.int32))
+        mt = st.metrics
+        sim_t = self.ssd.service_time_traced(
+            n_ra, self.block_bytes,
+            queue_depth_limit=st.queues.num_queues * st.queues.depth)
+        sim_t = sim_t + self.ssd.service_time_traced(
+            n_wb, self.block_bytes, write=True,
+            queue_depth_limit=st.queues.num_queues * st.queues.depth)
+        metrics = dataclasses.replace(
+            mt,
+            bytes_from_storage=mt.bytes_from_storage + n_ra * self.block_bytes,
             write_ops=mt.write_ops + n_wb,
             bytes_to_storage=mt.bytes_to_storage + n_wb * self.block_bytes,
             doorbells=mt.doorbells + rec_r.n_doorbells + rec_w.n_doorbells,
             sim_time_s=mt.sim_time_s + sim_t,
             max_queue_depth=jnp.maximum(mt.max_queue_depth,
                                         depth_now.astype(jnp.int32)),
+            prefetch_issued=mt.prefetch_issued + n_ra,
         )
-        return vals, BamState(cache=cache3, queues=qs3, metrics=metrics,
-                              storage=new_storage)
+        return BamState(cache=cache2, queues=qs3, metrics=metrics,
+                        storage=new_storage)
 
     # --------------------------------------------------------------- write
     def write(self, st: BamState, idx: jax.Array, values: jax.Array,
@@ -226,7 +387,9 @@ class BamArray:
         uvalid = ukeys >= 0
         pr = C.probe(st.cache, ukeys, uvalid)
         n_hit = jnp.sum(pr.hit.astype(jnp.int32))
+        n_pref_hit = jnp.sum(pr.speculative.astype(jnp.int32))
         cache1 = C.count_hits(st.cache, n_hit)
+        cache1 = C.promote(cache1, jnp.where(pr.speculative, pr.slot, -1))
         miss = uvalid & ~pr.hit
 
         cache2, alloc = C.allocate(cache1, ukeys, miss, protect_slots=pr.slot)
@@ -297,6 +460,8 @@ class BamArray:
             sim_time_s=mt.sim_time_s + sim_t,
             max_queue_depth=jnp.maximum(mt.max_queue_depth,
                                         depth_now.astype(jnp.int32)),
+            prefetch_issued=mt.prefetch_issued,
+            prefetch_hits=mt.prefetch_hits + n_pref_hit,
         )
         return BamState(cache=cache5, queues=qs3, metrics=metrics,
                         storage=new_storage)

@@ -21,6 +21,14 @@ over a functional :class:`CacheState`:
 
 The clock hand is per-set (a sharded fine-grain analogue of the paper's
 single global counter — same policy, no cross-set serialization).
+
+Prefetch support (``core/prefetch.py``): lines filled by readahead carry a
+``speculative`` bit.  The victim sweep orders each set's ways *invalid
+first, speculative second, demand-resident last* (within each class, clock
+order), so a wrong prefetch is reclaimed before any demand line is touched
+— speculative fills are "insert without pin".  A demand hit on a
+speculative line *promotes* it (clears the bit): from then on it is an
+ordinary resident line.
 """
 from __future__ import annotations
 
@@ -33,7 +41,7 @@ from repro.utils import mix_hash, pytree_dataclass, segment_rank
 
 __all__ = [
     "CacheState", "make_cache", "probe", "allocate", "fill",
-    "acquire", "release", "pin_keys", "mark_dirty",
+    "acquire", "release", "pin_keys", "mark_dirty", "promote",
 ]
 
 
@@ -45,6 +53,7 @@ class CacheState:
     tags: jax.Array        # (num_sets, ways) int32 block key, -1 invalid
     refcount: jax.Array    # (num_sets, ways) int32 — pinned lines have >0
     dirty: jax.Array       # (num_sets, ways) bool — needs write-back on evict
+    speculative: jax.Array  # (num_sets, ways) bool — prefetched, evict-first
     clock_hand: jax.Array  # (num_sets,) int32 in [0, ways)
     data: jax.Array        # (num_sets*ways, line_elems)
     hits: jax.Array        # () int32 cumulative line hits (post-coalesce)
@@ -64,6 +73,7 @@ def make_cache(num_sets: int, ways: int, line_elems: int,
         tags=jnp.full((num_sets, ways), -1, jnp.int32),
         refcount=jnp.zeros((num_sets, ways), jnp.int32),
         dirty=jnp.zeros((num_sets, ways), bool),
+        speculative=jnp.zeros((num_sets, ways), bool),
         clock_hand=jnp.zeros((num_sets,), jnp.int32),
         data=jnp.zeros((num_sets * ways, line_elems), dtype),
         hits=z(), misses=z(), bypasses=z(),
@@ -79,6 +89,7 @@ class ProbeResult:
     hit: jax.Array    # (m,) bool
     slot: jax.Array   # (m,) int32 flat line slot (set*ways+way); -1 on miss
     set_idx: jax.Array  # (m,) int32 (reused by allocate)
+    speculative: jax.Array  # (m,) bool — hit landed on a prefetched line
 
 
 def probe(cache: CacheState, keys: jax.Array,
@@ -92,7 +103,9 @@ def probe(cache: CacheState, keys: jax.Array,
     hit = eq.any(axis=1)
     way = jnp.argmax(eq, axis=1).astype(jnp.int32)
     slot = jnp.where(hit, sets * cache.ways + way, -1).astype(jnp.int32)
-    return ProbeResult(hit=hit, slot=slot, set_idx=sets.astype(jnp.int32))
+    spec = hit & cache.speculative[sets, way]
+    return ProbeResult(hit=hit, slot=slot, set_idx=sets.astype(jnp.int32),
+                       speculative=spec)
 
 
 _segment_rank = segment_rank
@@ -109,11 +122,21 @@ class AllocResult:
 def allocate(cache: CacheState, keys: jax.Array,
              valid: jax.Array,
              protect_slots: jax.Array | None = None,
+             speculative: bool = False,
              ) -> Tuple[CacheState, AllocResult]:
     """Grant a victim slot per missed key (clock sweep, rank-disambiguated).
 
     ``protect_slots`` is a wavefront-transient list of flat slots that must
     not be evicted (this round's hits); pass the probe hits' slots.
+
+    ``speculative=True`` marks the granted lines as prefetched: they are
+    inserted without pin and become the sweep's preferred victims until a
+    demand hit :func:`promote`\\ s them.  Speculative allocations also never
+    cannibalize a *pending* (unpromoted) prefetched line — they take free
+    ways or retire old demand lines, and when a set offers neither the hint
+    is simply dropped (``ok=False``, nothing fetched).  Without this rule a
+    deep readahead window evicts its own not-yet-consumed predictions under
+    set conflicts and turns into pure I/O waste.
     """
     m = keys.shape[0]
     ways = cache.ways
@@ -121,6 +144,9 @@ def allocate(cache: CacheState, keys: jax.Array,
 
     # Eviction eligibility per line: not referenced, not protected this round.
     elig_line = (cache.refcount == 0).reshape(-1)
+    if speculative:
+        pending = (cache.speculative & (cache.tags >= 0)).reshape(-1)
+        elig_line = elig_line & ~pending
     if protect_slots is not None:
         psafe = jnp.where(protect_slots >= 0, protect_slots,
                           cache.num_lines)           # OOB -> dropped
@@ -132,6 +158,19 @@ def allocate(cache: CacheState, keys: jax.Array,
     rank = _segment_rank(sets, valid)                   # (m,)
     hand = cache.clock_hand[sets]                       # (m,)
     way_order = (hand[:, None] + jnp.arange(ways, dtype=jnp.int32)[None, :]) % ways
+    # Victim class per way: 0 = invalid (free), 1 = speculative (prefetched,
+    # unpromoted), 2 = demand-resident.  A stable sort of the clock-rotated
+    # sweep by class keeps clock order within each class while guaranteeing
+    # prefetched lines are reclaimed before any demand line is touched.
+    # With no speculative lines this coincides with the plain clock sweep:
+    # tags are only ever invalid before first use and sets fill in clock
+    # order, so the invalid ways are exactly the suffix the hand points at
+    # — the demand-only path is unchanged from the paper's policy.
+    vclass = jnp.where(cache.tags < 0, 0,
+                       jnp.where(cache.speculative, 1, 2)).astype(jnp.int32)
+    class_rot = vclass[sets[:, None], way_order]        # (m, ways)
+    pref = jnp.argsort(class_rot, axis=1, stable=True)  # (m, ways)
+    way_order = jnp.take_along_axis(way_order, pref, axis=1)
     elig_rot = elig[sets[:, None], way_order]           # (m, ways) in sweep order
     csum = jnp.cumsum(elig_rot.astype(jnp.int32), axis=1)
     want = (rank + 1)[:, None]
@@ -150,20 +189,27 @@ def allocate(cache: CacheState, keys: jax.Array,
     w_i = jnp.where(ok, way, 0)
     tags = cache.tags.at[s_i, w_i].set(keys, mode="drop")
     dirty = cache.dirty.at[s_i, w_i].set(False, mode="drop")
+    spec = cache.speculative.at[s_i, w_i].set(speculative, mode="drop")
 
-    # Advance each touched set's hand past the last examined position.
+    # Advance each touched set's hand past the granted way's clock position
+    # (way_pos indexes the class-sorted sweep, not clock distance).
+    clock_pos = (way - hand) % ways
     adv = jnp.zeros((cache.num_sets,), jnp.int32).at[s_i].max(
-        way_pos + 1, mode="drop")
+        clock_pos + 1, mode="drop")
     clock_hand = (cache.clock_hand + adv) % ways
 
     n_ok = jnp.sum(ok.astype(jnp.int32))
     n_valid = jnp.sum(valid.astype(jnp.int32))
+    # Speculative fills are not demand traffic: keep the miss/bypass
+    # counters (the hit-rate denominators) demand-only.
+    miss_inc = jnp.int32(0) if speculative else n_valid
+    byp_inc = jnp.int32(0) if speculative else n_valid - n_ok
     cache2 = CacheState(
         num_sets=cache.num_sets, ways=ways, line_elems=cache.line_elems,
-        tags=tags, refcount=cache.refcount, dirty=dirty,
+        tags=tags, refcount=cache.refcount, dirty=dirty, speculative=spec,
         clock_hand=clock_hand, data=cache.data,
-        hits=cache.hits, misses=cache.misses + n_valid,
-        bypasses=cache.bypasses + (n_valid - n_ok),
+        hits=cache.hits, misses=cache.misses + miss_inc,
+        bypasses=cache.bypasses + byp_inc,
     )
     return cache2, AllocResult(
         slot=jnp.where(ok, slot, -1), ok=ok,
@@ -206,6 +252,20 @@ def pin_keys(cache: CacheState, keys: jax.Array) -> CacheState:
     return acquire(cache, pr.slot)
 
 
+def promote(cache: CacheState, slots: jax.Array) -> CacheState:
+    """Clear the speculative bit on the given flat slots (slot<0 ignored).
+
+    Called when a demand access hits a prefetched line: from then on the
+    line competes for residency like any other demand line.
+    """
+    ok = slots >= 0
+    idx = jnp.where(ok, slots, cache.num_lines)          # OOB -> dropped
+    s = cache.speculative.reshape(-1)
+    s = s.at[idx].set(False, mode="drop")
+    return _replace_data(cache,
+                         speculative=s.reshape(cache.num_sets, cache.ways))
+
+
 def mark_dirty(cache: CacheState, slots: jax.Array) -> CacheState:
     ok = slots >= 0
     idx = jnp.where(ok, slots, cache.num_lines)          # OOB -> dropped
@@ -225,6 +285,7 @@ def _replace_data(cache: CacheState, **kw) -> CacheState:
     fields = dict(
         num_sets=cache.num_sets, ways=cache.ways, line_elems=cache.line_elems,
         tags=cache.tags, refcount=cache.refcount, dirty=cache.dirty,
+        speculative=cache.speculative,
         clock_hand=cache.clock_hand, data=cache.data,
         hits=cache.hits, misses=cache.misses, bypasses=cache.bypasses,
     )

@@ -25,6 +25,8 @@ class IOMetrics:
     doorbells: jax.Array         # batched ring-tail updates (1 per queue per round)
     sim_time_s: jax.Array        # simulated device service time accumulated
     max_queue_depth: jax.Array   # high-watermark of in-flight requests
+    prefetch_issued: jax.Array   # cache lines fetched speculatively (readahead)
+    prefetch_hits: jax.Array     # demand line-hits served by a prefetched line
 
     @staticmethod
     def zeros() -> "IOMetrics":
@@ -34,6 +36,7 @@ class IOMetrics:
             requests=f(), bytes_requested=f(), hits=f(), misses=f(),
             bytes_from_storage=f(), write_ops=f(), bytes_to_storage=f(),
             doorbells=f(), sim_time_s=f(), max_queue_depth=i(),
+            prefetch_issued=f(), prefetch_hits=f(),
         )
 
     # Derived quantities (host-side, after device_get) -------------------
@@ -48,6 +51,11 @@ class IOMetrics:
     def read_iops(self) -> float:
         t = float(self.sim_time_s)
         return float(self.misses) / t if t > 0 else 0.0
+
+    def prefetch_accuracy(self) -> float:
+        """Fraction of speculatively fetched lines later used by demand."""
+        issued = float(self.prefetch_issued)
+        return float(self.prefetch_hits) / issued if issued > 0 else 0.0
 
     def summary(self) -> dict:
         return {
@@ -64,4 +72,7 @@ class IOMetrics:
             "sim_time_s": float(self.sim_time_s),
             "read_iops": self.read_iops(),
             "max_queue_depth": int(self.max_queue_depth),
+            "prefetch_issued": float(self.prefetch_issued),
+            "prefetch_hits": float(self.prefetch_hits),
+            "prefetch_accuracy": self.prefetch_accuracy(),
         }

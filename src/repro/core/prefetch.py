@@ -1,0 +1,153 @@
+"""Asynchronous readahead & prefetch for the BaM cache (beyond-paper).
+
+BaM (§III-C/D) keeps the SSDs saturated only while the *demand* stream
+carries enough parallelism.  A purely demand-driven ``BamArray.read`` pays
+full miss latency on every wavefront of a sequential or strided sweep —
+exactly the gap GPU readahead prefetchers (Dimitsas & Silberstein,
+arXiv:2109.05366) and GIDS (Park et al., arXiv:2306.16384) close on top of
+a BaM-style cache.  This module supplies the two pieces:
+
+* a **readahead detector** over the wavefront's *coalesced* block keys: a
+  jit-safe modal-stride estimate (sort → run-length → argmax, the same
+  sort-based idiom as the coalescer) that, when enough of the wavefront
+  agrees on one positive stride, extrapolates the pattern ``window`` lines
+  past the wavefront's last key — clamped to the array bounds so readahead
+  never fabricates traffic past the end of the data;
+
+* a :class:`PrefetchConfig` of static knobs threaded through
+  :class:`~repro.core.bam_array.BamArray`.
+
+The fills themselves go through the normal SQ rings but in a *low-priority
+lane* (``prio=1`` in :mod:`repro.core.queues`) so the simulated controller
+drains demand reads first, and they are inserted **without protection** as
+*speculative* lines (``speculative=True`` in :mod:`repro.core.cache`) so an
+unlucky prediction is the first thing the clock hand reclaims — prefetch
+can delay demand, but never starve it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["PrefetchConfig", "modal_stride", "readahead_keys"]
+
+_BIG = jnp.iinfo(jnp.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefetchConfig:
+    """Static readahead knobs for one :class:`BamArray` (hashable, jit-static).
+
+    Attributes:
+      enabled: master switch; ``False`` keeps the demand path byte-identical.
+      window: cache lines of readahead generated per wavefront.
+      min_support: fraction of the wavefront's key deltas that must agree on
+        the modal stride before the detector commits (sequential scans give
+        1.0; random access gives ~1/n and never triggers).
+      max_stride: ignore pattern strides larger than this many blocks — a
+        guard against pathological "patterns" that would fetch far-away
+        lines and inflate I/O amplification.
+    """
+
+    enabled: bool = False
+    window: int = 8
+    min_support: float = 0.75
+    max_stride: int = 64
+
+    def __post_init__(self):
+        if self.window < 0:
+            raise ValueError("window must be >= 0")
+        if not (0.0 < self.min_support <= 1.0):
+            raise ValueError("min_support must be in (0, 1]")
+
+
+def modal_stride(keys: jax.Array, valid: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Dominant positive stride of a wavefront of unique block keys.
+
+    Args:
+      keys: (n,) int32 coalesced (duplicate-free) block keys.
+      valid: (n,) bool.
+
+    Returns ``(stride, support, n_deltas)`` scalars: the most common gap
+    between consecutive sorted keys, how many gaps equal it, and how many
+    gaps there were.  All zeros when fewer than two valid keys.
+    """
+    n = keys.shape[0]
+    zero = jnp.zeros((), jnp.int32)
+    if n < 2:
+        return zero, zero, zero
+    big = jnp.int32(_BIG)
+    masked = jnp.where(valid, keys, big)
+    skeys = jnp.sort(masked)
+    # Consecutive gaps; keys are unique so every valid gap is > 0.
+    d = skeys[1:] - skeys[:-1]
+    dvalid = (skeys[1:] != big) & (skeys[:-1] != big)
+    dm = jnp.where(dvalid, d, big)
+
+    # Run-length encode the sorted gaps; the longest run is the mode.
+    ds = jnp.sort(dm)
+    prev = jnp.concatenate([jnp.full((1,), -1, ds.dtype), ds[:-1]])
+    is_first = ds != prev
+    run_id = jnp.cumsum(is_first.astype(jnp.int32)) - 1
+    m = ds.shape[0]
+    counts = jnp.zeros((m,), jnp.int32).at[run_id].add(
+        (ds != big).astype(jnp.int32))
+    run_val = jnp.full((m,), big, jnp.int32).at[run_id].min(ds)
+    counts = jnp.where(run_val == big, 0, counts)
+    best = jnp.argmax(counts)
+    n_deltas = jnp.sum(dvalid.astype(jnp.int32))
+    stride = jnp.where(n_deltas > 0, run_val[best], 0).astype(jnp.int32)
+    support = counts[best].astype(jnp.int32)
+    return stride, support, n_deltas
+
+
+def readahead_keys(keys: jax.Array, valid: jax.Array, *,
+                   window: int, num_blocks: int,
+                   min_support: float = 0.75,
+                   max_stride: int = 64,
+                   raw_keys: jax.Array | None = None,
+                   raw_valid: jax.Array | None = None) -> jax.Array:
+    """Predict the next ``window`` block keys of the wavefront's pattern.
+
+    Extrapolates ``stride * (1..window)`` past the wavefront's extreme key
+    when the modal stride clears the ``min_support`` confidence bar,
+    clamping every candidate to ``[0, num_blocks)`` — predictions past the
+    array bounds come back as the ``-1`` sentinel (the "window clamp"), so
+    the caller fetches nothing for them.  Returns a fixed-shape
+    ``(window,)`` int32 vector.
+
+    The coalesced ``keys`` are sorted, so they carry the stride *magnitude*
+    but not the scan *direction*.  Pass the wavefront's pre-coalesce block
+    keys as ``raw_keys``/``raw_valid`` to recover it: when the last valid
+    raw key is below the first, the scan is descending and the pattern is
+    extrapolated downward from the smallest key.  Without ``raw_keys`` an
+    ascending scan is assumed.
+    """
+    if window == 0:
+        return jnp.full((0,), -1, jnp.int32)
+    stride, support, n_deltas = modal_stride(keys, valid)
+    need = jnp.maximum(
+        jnp.int32(1),
+        jnp.ceil(min_support * n_deltas.astype(jnp.float32)).astype(jnp.int32))
+    confident = (n_deltas > 0) & (support >= need) \
+        & (stride > 0) & (stride <= max_stride)
+    descending = jnp.zeros((), bool)
+    if raw_keys is not None:
+        rv = raw_valid if raw_valid is not None else raw_keys >= 0
+        first = jnp.argmax(rv)                       # first valid lane
+        last = raw_keys.shape[0] - 1 - jnp.argmax(rv[::-1])
+        descending = jnp.any(rv) & (raw_keys[last] < raw_keys[first])
+    big = jnp.int32(_BIG)
+    base = jnp.where(descending,
+                     jnp.min(jnp.where(valid, keys, big)),
+                     jnp.max(jnp.where(valid, keys, -1)))
+    step = jnp.where(descending, -stride, stride)
+    steps = jnp.arange(1, window + 1, dtype=jnp.int32)
+    cand = base + step * steps
+    ok = confident & (base >= 0) & (base < num_blocks) \
+        & (cand >= 0) & (cand < num_blocks)
+    return jnp.where(ok, cand, -1).astype(jnp.int32)

@@ -25,6 +25,15 @@ queues round-robin, matching the paper's micro-benchmark setup (§IV-A).
 
 Everything is fixed-shape and jit-safe: monotonic 32-bit virtual heads/tails
 (slot = counter % depth), masked scatters, no data-dependent shapes.
+
+Priority lane (prefetch support): every command carries a priority —
+``PRIO_DEMAND`` (0) for demand reads/write-backs, ``PRIO_READAHEAD`` (1)
+for speculative fills.  The simulated controller drains demand first:
+:func:`service_all` returns completions sorted priority-major (stable, so
+queue-major order is preserved within a class), the analogue of an NVMe
+weighted-round-robin arbitration burst favouring the urgent queue class.
+Readahead also loses the back-pressure race naturally: it is enqueued after
+the demand wavefront, so when rings fill it is the first thing dropped.
 """
 from __future__ import annotations
 
@@ -35,7 +44,11 @@ import jax.numpy as jnp
 
 from repro.utils import pytree_dataclass
 
-__all__ = ["QueueState", "make_queues", "enqueue", "service_all", "SubmitReceipt"]
+__all__ = ["QueueState", "make_queues", "enqueue", "service_all",
+           "SubmitReceipt", "PRIO_DEMAND", "PRIO_READAHEAD"]
+
+PRIO_DEMAND = 0      # demand reads and write-backs
+PRIO_READAHEAD = 1   # speculative readahead fills (drain last, drop first)
 
 
 @pytree_dataclass(meta_fields=("num_queues", "depth"))
@@ -48,6 +61,7 @@ class QueueState:
     sq_key: jax.Array        # (num_queues, depth) int32 — block key of the command
     sq_dst: jax.Array        # (num_queues, depth) int32 — destination cache slot (or -1)
     sq_is_write: jax.Array   # (num_queues, depth) bool  — write command?
+    sq_prio: jax.Array       # (num_queues, depth) int32 — PRIO_DEMAND / PRIO_READAHEAD
     # Monotonic virtual pointers (never wrapped; slot = ptr % depth).
     sq_tail: jax.Array       # (num_queues,) int32
     sq_head: jax.Array       # (num_queues,) int32
@@ -68,6 +82,7 @@ def make_queues(num_queues: int, depth: int) -> QueueState:
         sq_key=jnp.full((num_queues, depth), -1, jnp.int32),
         sq_dst=jnp.full((num_queues, depth), -1, jnp.int32),
         sq_is_write=jnp.zeros((num_queues, depth), bool),
+        sq_prio=jnp.zeros((num_queues, depth), jnp.int32),
         sq_tail=jnp.zeros((num_queues,), jnp.int32),
         sq_head=jnp.zeros((num_queues,), jnp.int32),
         rr_ptr=z(), ticket_total=z(), doorbells=z(), completions=z(), dropped=z(),
@@ -91,6 +106,7 @@ def enqueue(
     dst: jax.Array | None = None,
     is_write: jax.Array | None = None,
     valid: jax.Array | None = None,
+    prio: jax.Array | int = PRIO_DEMAND,
 ) -> Tuple[QueueState, SubmitReceipt]:
     """Submit a wavefront of commands into the SQ rings.
 
@@ -98,6 +114,9 @@ def enqueue(
     to queue ``(rr_ptr + i) % num_queues`` at that queue's next virtual slot.
     Requests that would overflow a full ring are dropped and counted; callers
     treat a drop as "retry next wavefront" (the paper's thread would spin).
+
+    ``prio`` tags the lane: demand commands (``PRIO_DEMAND``) drain before
+    readahead (``PRIO_READAHEAD``) in :func:`service_all`.
     """
     n = keys.shape[0]
     nq, depth = qs.num_queues, qs.depth
@@ -109,6 +128,7 @@ def enqueue(
         dst = jnp.full((n,), -1, jnp.int32)
     if is_write is None:
         is_write = jnp.zeros((n,), bool)
+    prio = jnp.broadcast_to(jnp.asarray(prio, jnp.int32), (n,))
 
     # --- ticket assignment (exclusive prefix sum over the wavefront) -------
     ticket = jnp.cumsum(valid.astype(jnp.int32)) - valid.astype(jnp.int32)  # (n,)
@@ -133,6 +153,7 @@ def enqueue(
     sq_key = qs.sq_key.at[qidx, sidx].set(keys, mode="drop")
     sq_dst = qs.sq_dst.at[qidx, sidx].set(dst, mode="drop")
     sq_is_write = qs.sq_is_write.at[qidx, sidx].set(is_write, mode="drop")
+    sq_prio = qs.sq_prio.at[qidx, sidx].set(prio, mode="drop")
 
     # New tails: per queue, number of accepted commands assigned to it.
     per_q = jnp.zeros((nq,), jnp.int32).at[queue].add(accepted.astype(jnp.int32))
@@ -150,6 +171,7 @@ def enqueue(
     qs2 = QueueState(
         num_queues=nq, depth=depth,
         sq_key=sq_key, sq_dst=sq_dst, sq_is_write=sq_is_write,
+        sq_prio=sq_prio,
         sq_tail=sq_tail, sq_head=qs.sq_head,
         rr_ptr=(qs.rr_ptr + k) % nq,
         ticket_total=qs.ticket_total + k,
@@ -162,11 +184,18 @@ def enqueue(
 
 @pytree_dataclass
 class Completions:
-    """Drained commands, in (queue-major, slot) order — fixed shape."""
+    """Drained commands; filter with ``valid``, order by position.
+
+    When readahead is in flight the entries are priority-major (demand
+    commands lead, readahead trails, empty slots last) — the device retires
+    the urgent class first.  Pure demand traffic keeps the plain
+    (queue-major, slot) ring order, which is already class-sorted.
+    """
 
     keys: jax.Array      # (num_queues*depth,) int32, -1 for empty slots
     dst: jax.Array       # (num_queues*depth,) int32
     is_write: jax.Array  # (num_queues*depth,) bool
+    prio: jax.Array      # (num_queues*depth,) int32
     valid: jax.Array     # (num_queues*depth,) bool
     count: jax.Array     # () int32
 
@@ -181,21 +210,42 @@ def service_all(qs: QueueState) -> Tuple[QueueState, Completions]:
     maintenance (head advancement, CQ doorbell) is folded into this drain:
     heads jump to tails, matching a CQ sweep that retires every entry — the
     paper's "one thread resets markers as far as possible" fast path.
+
+    The drain is priority-arbitrated: demand-lane commands come back ahead
+    of readahead-lane commands (stable within each class).
     """
     pending = qs.sq_key >= 0
     count = jnp.sum(pending.astype(jnp.int32))
+    flat_pend = pending.reshape(-1)
+    flat_prio = qs.sq_prio.reshape(-1)
+    flat = (qs.sq_key.reshape(-1), qs.sq_dst.reshape(-1),
+            qs.sq_is_write.reshape(-1), flat_prio, flat_pend)
+
+    # Demand first, readahead second, empty slots last; stable keeps
+    # queue-major order within each class.  When every pending command is
+    # demand-lane the unsorted rings are already class-sorted, so the
+    # arbitration sort (an argsort over all num_queues*depth slots) only
+    # runs when readahead is actually in flight.
+    def _arbitrate(f):
+        keys, dst, is_write, prio, pend = f
+        sort_key = jnp.where(pend, prio, jnp.int32(jnp.iinfo(jnp.int32).max))
+        order = jnp.argsort(sort_key, stable=True)
+        return (keys[order], dst[order], is_write[order], prio[order],
+                pend[order])
+
+    has_ra = jnp.any(flat_pend & (flat_prio != PRIO_DEMAND))
+    keys_o, dst_o, is_write_o, prio_o, pend_o = jax.lax.cond(
+        has_ra, _arbitrate, lambda f: f, flat)
     comps = Completions(
-        keys=qs.sq_key.reshape(-1),
-        dst=qs.sq_dst.reshape(-1),
-        is_write=qs.sq_is_write.reshape(-1),
-        valid=pending.reshape(-1),
-        count=count,
+        keys=keys_o, dst=dst_o, is_write=is_write_o, prio=prio_o,
+        valid=pend_o, count=count,
     )
     qs2 = QueueState(
         num_queues=qs.num_queues, depth=qs.depth,
         sq_key=jnp.full_like(qs.sq_key, -1),
         sq_dst=jnp.full_like(qs.sq_dst, -1),
         sq_is_write=jnp.zeros_like(qs.sq_is_write),
+        sq_prio=jnp.zeros_like(qs.sq_prio),
         sq_tail=qs.sq_tail,
         sq_head=qs.sq_tail,           # all consumed
         rr_ptr=qs.rr_ptr,

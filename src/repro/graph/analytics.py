@@ -79,9 +79,17 @@ class BamGraph:
 
 
 # --------------------------------------------------------------------- BFS --
-def bfs(g: BamGraph, source: int, max_iters: Optional[int] = None
-        ) -> Tuple[np.ndarray, BamState]:
-    """Frontier BFS; returns (depth per node (-1 unreachable), BamState)."""
+def bfs(g: BamGraph, source: int, max_iters: Optional[int] = None,
+        prefetch: bool = False) -> Tuple[np.ndarray, BamState]:
+    """Frontier BFS; returns (depth per node (-1 unreachable), BamState).
+
+    With ``prefetch=True`` each iteration also *hints* the next frontier's
+    edges through :meth:`BamArray.prefetch` (frontier-ahead prefetch, the
+    GIDS-style workload hint): the next iteration's demand wavefront then
+    finds its lines resident.  The hints ride the low-priority readahead
+    lane as evict-first speculative fills, so they never displace the
+    current iteration's demand lines.
+    """
     max_iters = max_iters or g.n_nodes
     INF = jnp.int32(2 ** 30)
     depth = jnp.full((g.n_nodes,), INF, jnp.int32).at[source].set(0)
@@ -98,6 +106,11 @@ def bfs(g: BamGraph, source: int, max_iters: Optional[int] = None
         first_visit = active & (depth[nbrs] >= INF)
         depth = depth.at[jnp.where(first_visit, nbrs, 0)].min(
             jnp.where(first_visit, it + 1, INF))
+        if prefetch:                               # frontier-ahead hint
+            nxt = depth == it + 1
+            active_n = nxt[g.edge_src]
+            st = g.edges.prefetch(st, jnp.where(active_n, edge_ids, -1),
+                                  active_n)
         return depth, st, jnp.any(first_visit)
 
     for it in range(max_iters):
@@ -128,14 +141,22 @@ def bfs_oracle(indptr: np.ndarray, dst: np.ndarray, source: int
 
 
 # ---------------------------------------------------------------------- CC --
-def cc(g: BamGraph, max_iters: Optional[int] = None
-       ) -> Tuple[np.ndarray, BamState]:
+def cc(g: BamGraph, max_iters: Optional[int] = None,
+       prefetch: bool = False) -> Tuple[np.ndarray, BamState]:
     """Connected components by min-label propagation (bursty all-edge
-    reads — the paper's CC access pattern). Returns (labels, BamState)."""
+    reads — the paper's CC access pattern). Returns (labels, BamState).
+
+    CC's frontier is *every* edge, every round, so with ``prefetch=True``
+    the whole edge array is hinted once up front (a warmup through the
+    readahead lane); iterations after the first then run at full cache
+    speed for the portion that fits.
+    """
     max_iters = max_iters or g.n_nodes
     labels = jnp.arange(g.n_nodes, dtype=jnp.int32)
     edge_ids = jnp.arange(g.n_edges, dtype=jnp.int32)
     st = g.state
+    if prefetch:
+        st = g.edges.prefetch(st, edge_ids)
 
     @jax.jit
     def step(labels, st):

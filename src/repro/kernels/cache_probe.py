@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _hash(k):
     k = k.astype(jnp.uint32)
@@ -92,7 +94,7 @@ def cache_probe_pallas(tags: jax.Array, keys: jax.Array, *,
             jax.ShapeDtypeStruct((nb, bm), jnp.int32),
             jax.ShapeDtypeStruct((nb, bm), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(kp2, tags)

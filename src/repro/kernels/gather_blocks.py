@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
+
 
 def _gather_kernel(slots_ref, data_ref, out_ref, *, rows_per_block: int):
     i = pl.program_id(0)
@@ -64,7 +66,7 @@ def gather_blocks_pallas(data: jax.Array, slots: jax.Array, *,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, line_elems), data.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(slots, data)

@@ -171,8 +171,12 @@ def _dot_flops(instr: Instr, shapes: Dict[str, str]) -> float:
     for d in out_dims:
         n_out *= d
     m = re.search(r"lhs_contracting_dims={([0-9,]*)}", instr.line)
+    # First operand name.  Some HLO printers type every operand
+    # ("dot(f32[64,64]{1,0} %lhs, ...)"), so prefer the first %-prefixed
+    # token and only fall back to the leading bare token.
     lhs_name = None
-    am = re.match(r"\s*%?([\w\.\-]+)", instr.args)
+    am = re.search(r"%([\w\.\-]+)", instr.args) \
+        or re.match(r"\s*([\w\.\-]+)", instr.args)
     if am:
         lhs_name = am.group(1)
     contract = 1

@@ -1,0 +1,40 @@
+"""Optional-`hypothesis` shim for the property tests.
+
+The tier-1 suite must collect and pass from a clean checkout with nothing
+but `jax`/`numpy`/`pytest` installed (install the ``[test]`` extra for the
+full property-based coverage).  Import ``given``/``settings``/``st`` from
+here instead of from ``hypothesis``: when hypothesis is present these are
+the real thing; when it is absent, ``@given(...)`` replaces the test with
+a skipped stub and the module's example-based tests still run.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    _REASON = "hypothesis not installed (pip install '.[test]')"
+
+    class _AnyStrategy:
+        """Stands in for `hypothesis.strategies`: every attribute is a
+        callable returning None, so strategy expressions in decorators
+        evaluate without import-time errors."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def stub():
+                pass
+            stub.__name__ = fn.__name__
+            stub.__doc__ = fn.__doc__
+            return pytest.mark.skip(reason=_REASON)(stub)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn

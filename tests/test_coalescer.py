@@ -1,7 +1,7 @@
 """Property tests: the wavefront coalescer is an exact vectorized `unique`."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import coalesce
 

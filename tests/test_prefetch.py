@@ -1,0 +1,329 @@
+"""Prefetch subsystem: stride detection, bounds clamping, speculative-line
+evictability ordering, queue priority, and prefetch-vs-demand accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BamArray, PrefetchConfig, modal_stride,
+                        readahead_keys)
+from repro.core import cache as C
+from repro.core import queues as Q
+
+
+def keys_of(xs):
+    k = jnp.asarray(xs, jnp.int32)
+    return k, k >= 0
+
+
+# ------------------------------------------------------------ stride detect
+def test_modal_stride_sequential():
+    k, v = keys_of([0, 1, 2, 3, 4, 5, 6, 7])
+    stride, support, n = modal_stride(k, v)
+    assert int(stride) == 1 and int(support) == 7 and int(n) == 7
+
+
+def test_modal_stride_strided():
+    k, v = keys_of([0, 4, 8, 12])
+    stride, support, n = modal_stride(k, v)
+    assert int(stride) == 4 and int(support) == 3 and int(n) == 3
+
+
+def test_modal_stride_unsorted_input():
+    k, v = keys_of([12, 0, 8, 4])                # detector sorts internally
+    stride, support, _ = modal_stride(k, v)
+    assert int(stride) == 4 and int(support) == 3
+
+
+def test_modal_stride_ignores_invalid_lanes():
+    k, v = keys_of([0, 2, 4, -1, -1])
+    stride, support, n = modal_stride(k, v)
+    assert int(stride) == 2 and int(support) == 2 and int(n) == 2
+
+
+def test_modal_stride_too_few_keys():
+    k, v = keys_of([5])
+    stride, support, n = modal_stride(k, v)
+    assert int(stride) == 0 and int(support) == 0 and int(n) == 0
+
+
+def test_modal_stride_mixed_pattern_low_support():
+    k, v = keys_of([0, 1, 3, 6])                 # deltas 1, 2, 3: no mode > 1
+    _, support, n = modal_stride(k, v)
+    assert int(support) == 1 and int(n) == 3
+
+
+# ------------------------------------------------------------- extrapolation
+def test_readahead_extrapolates_sequential():
+    k, v = keys_of([0, 1, 2, 3])
+    out = readahead_keys(k, v, window=4, num_blocks=100)
+    assert out.tolist() == [4, 5, 6, 7]
+
+
+def test_readahead_extrapolates_stride():
+    k, v = keys_of([10, 14, 18])
+    out = readahead_keys(k, v, window=3, num_blocks=100)
+    assert out.tolist() == [22, 26, 30]
+
+
+def test_readahead_clamps_at_array_bound():
+    k, v = keys_of([94, 95, 96, 97])
+    out = readahead_keys(k, v, window=4, num_blocks=100)
+    assert out.tolist() == [98, 99, -1, -1]      # window clamp at the end
+
+
+def test_readahead_fully_past_bound():
+    k, v = keys_of([97, 98, 99])
+    out = readahead_keys(k, v, window=4, num_blocks=100)
+    assert out.tolist() == [-1, -1, -1, -1]
+
+
+def test_readahead_no_pattern_no_traffic():
+    k, v = keys_of([3, 17, 50, 90])              # all deltas distinct
+    out = readahead_keys(k, v, window=4, num_blocks=1000)
+    assert out.tolist() == [-1] * 4
+
+
+def test_readahead_respects_max_stride():
+    k, v = keys_of([0, 100, 200])
+    out = readahead_keys(k, v, window=4, num_blocks=10_000, max_stride=64)
+    assert out.tolist() == [-1] * 4
+
+
+def test_readahead_min_support_bar():
+    # deltas 1,1,1,5: support 3/4 passes 0.75, fails 0.9
+    k, v = keys_of([0, 1, 2, 3, 8])
+    hi = readahead_keys(k, v, window=2, num_blocks=100, min_support=0.75)
+    lo = readahead_keys(k, v, window=2, num_blocks=100, min_support=0.9)
+    assert hi.tolist() == [9, 10]                # extrapolates past max key
+    assert lo.tolist() == [-1, -1]
+
+
+def test_readahead_descending_scan_extrapolates_downward():
+    # raw wavefront order carries the direction the sorted keys lost
+    raw, rv = keys_of([50, 49, 48, 47])
+    k, v = keys_of([47, 48, 49, 50])             # coalesced (sorted) keys
+    out = readahead_keys(k, v, window=3, num_blocks=100,
+                         raw_keys=raw, raw_valid=rv)
+    assert out.tolist() == [46, 45, 44]
+
+
+def test_readahead_descending_clamps_at_zero():
+    raw, rv = keys_of([2, 1, 0])
+    k, v = keys_of([0, 1, 2])
+    out = readahead_keys(k, v, window=4, num_blocks=100,
+                         raw_keys=raw, raw_valid=rv)
+    assert out.tolist() == [-1, -1, -1, -1]
+
+
+def test_readahead_zero_window():
+    k, v = keys_of([0, 1, 2])
+    assert readahead_keys(k, v, window=0, num_blocks=10).shape == (0,)
+
+
+def test_prefetch_config_validation():
+    with pytest.raises(ValueError):
+        PrefetchConfig(window=-1)
+    with pytest.raises(ValueError):
+        PrefetchConfig(min_support=0.0)
+
+
+# ------------------------------------------------- speculative evictability
+def _fill_set(cache, keys, speculative=False):
+    kj = jnp.asarray(keys, jnp.int32)
+    pr = C.probe(cache, kj)
+    cache, alloc = C.allocate(cache, kj, ~pr.hit, protect_slots=pr.slot,
+                              speculative=speculative)
+    lines = jnp.repeat(jnp.asarray(keys, jnp.float32)[:, None],
+                       cache.line_elems, axis=1)
+    return C.fill(cache, alloc.slot, alloc.ok, lines), alloc
+
+
+def test_speculative_lines_evicted_before_demand():
+    cache = C.make_cache(1, 4, 2)
+    cache, _ = _fill_set(cache, [1, 2])                     # demand
+    cache, _ = _fill_set(cache, [3, 4], speculative=True)   # prefetched
+    # set is full; a demand miss must reclaim a speculative line first
+    cache, alloc = C.allocate(cache, jnp.asarray([5], jnp.int32),
+                              jnp.asarray([True]))
+    assert bool(alloc.ok[0])
+    assert int(alloc.evicted_key[0]) in (3, 4)
+    for k in (1, 2):
+        assert bool(C.probe(cache, jnp.asarray([k], jnp.int32)).hit[0])
+
+
+def test_promote_clears_evict_first_status():
+    cache = C.make_cache(1, 4, 2)
+    cache, _ = _fill_set(cache, [1, 2])
+    cache, _ = _fill_set(cache, [3, 4], speculative=True)
+    pr4 = C.probe(cache, jnp.asarray([4], jnp.int32))
+    assert bool(pr4.hit[0]) and bool(pr4.speculative[0])
+    cache = C.promote(cache, pr4.slot)                      # demand hit on 4
+    pr4b = C.probe(cache, jnp.asarray([4], jnp.int32))
+    assert bool(pr4b.hit[0]) and not bool(pr4b.speculative[0])
+    # the remaining unpromoted speculative line (3) is now the victim
+    cache, alloc = C.allocate(cache, jnp.asarray([5], jnp.int32),
+                              jnp.asarray([True]))
+    assert int(alloc.evicted_key[0]) == 3
+    assert bool(C.probe(cache, jnp.asarray([4], jnp.int32)).hit[0])
+
+
+def test_speculative_alloc_never_cannibalizes_pending_prefetch():
+    cache = C.make_cache(1, 2, 2)
+    cache, _ = _fill_set(cache, [3, 4], speculative=True)   # set full of hints
+    kj = jnp.asarray([7], jnp.int32)
+    cache, alloc = C.allocate(cache, kj, jnp.asarray([True]),
+                              speculative=True)
+    assert not bool(alloc.ok[0])                 # hint dropped, nothing evicted
+    for k in (3, 4):
+        assert bool(C.probe(cache, jnp.asarray([k], jnp.int32)).hit[0])
+
+
+def test_speculative_alloc_not_counted_as_demand_miss():
+    cache = C.make_cache(2, 2, 2)
+    cache, _ = _fill_set(cache, [1, 2], speculative=True)
+    assert int(cache.misses) == 0 and int(cache.bypasses) == 0
+
+
+# --------------------------------------------------------- queue priority
+def test_demand_drains_before_readahead():
+    qs = Q.make_queues(2, 8)
+    qs, _ = Q.enqueue(qs, jnp.asarray([10, 11], jnp.int32),
+                      prio=Q.PRIO_READAHEAD)
+    qs, _ = Q.enqueue(qs, jnp.asarray([1, 2], jnp.int32))
+    qs, comps = Q.service_all(qs)
+    mask = np.asarray(comps.valid)
+    keys = np.asarray(comps.keys)[mask]
+    prio = np.asarray(comps.prio)[mask]
+    assert sorted(keys.tolist()) == [1, 2, 10, 11]          # nothing lost
+    assert prio.tolist() == sorted(prio.tolist())           # demand first
+    assert set(keys[prio == Q.PRIO_DEMAND].tolist()) == {1, 2}
+
+
+# ----------------------------------------------------- BamArray end-to-end
+def build(n_blocks=64, line=8, *, prefetch=None, num_sets=16, ways=8):
+    rng = np.random.default_rng(0)
+    data = rng.standard_normal((n_blocks, line)).astype(np.float32)
+    arr, st = BamArray.build(data, block_elems=line, num_sets=num_sets,
+                             ways=ways, prefetch=prefetch, backend="sim")
+    return data, arr, st
+
+
+def scan(arr, st, n, wavefront=32):
+    read = jax.jit(arr.read)
+    outs = []
+    for start in range(0, n, wavefront):
+        idx = jnp.arange(start, start + wavefront, dtype=jnp.int32)
+        v, st = read(st, idx)
+        outs.append(np.asarray(v))
+    return np.concatenate(outs), st
+
+
+def test_sequential_scan_readahead_hits_and_correctness():
+    cfg = PrefetchConfig(enabled=True, window=8)
+    data, arr, st = build(prefetch=cfg)
+    got, st = scan(arr, st, data.size)
+    np.testing.assert_allclose(got, data.reshape(-1), rtol=1e-6)
+    m = st.metrics.summary()
+    _, arr0, st0 = build()
+    _, st0 = scan(arr0, st0, data.size)
+    m0 = st0.metrics.summary()
+    assert m["hit_rate"] > m0["hit_rate"]
+    assert m["misses"] < m0["misses"]
+    assert m["prefetch_hits"] > 0
+    assert m["prefetch_accuracy"] == pytest.approx(1.0)
+    # readahead fetched exactly the lines demand was about to read: the
+    # total bytes moved (and so the amplification) match the demand run.
+    assert m["bytes_from_storage"] == m0["bytes_from_storage"]
+
+
+def test_reverse_scan_readahead_no_wasted_bytes():
+    cfg = PrefetchConfig(enabled=True, window=8)
+    data, arr, st = build(prefetch=cfg)
+    read = jax.jit(arr.read)
+    outs = []
+    for start in range(data.size - 32, -1, -32):    # descending wavefronts
+        idx = jnp.arange(start + 31, start - 1, -1, dtype=jnp.int32)
+        v, st = read(st, idx)
+        outs.append(np.asarray(v))
+    got = np.concatenate(outs)
+    want = data.reshape(-1)[::-1].copy()
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    m = st.metrics.summary()
+    _, arr0, st0 = build()
+    read0 = jax.jit(arr0.read)
+    for start in range(data.size - 32, -1, -32):
+        idx = jnp.arange(start + 31, start - 1, -1, dtype=jnp.int32)
+        _, st0 = read0(st0, idx)
+    m0 = st0.metrics.summary()
+    assert m["hit_rate"] > m0["hit_rate"]
+    assert m["prefetch_accuracy"] == pytest.approx(1.0)
+    assert m["bytes_from_storage"] == m0["bytes_from_storage"]
+
+
+def test_random_access_triggers_no_readahead():
+    cfg = PrefetchConfig(enabled=True, window=8)
+    data, arr, st = build(prefetch=cfg)
+    # blocks 0, 1, 3, 6: deltas all distinct, below min_support
+    idx = jnp.asarray([0, 8, 24, 48], jnp.int32)
+    _, st = arr.read(st, idx)
+    assert float(st.metrics.prefetch_issued) == 0.0
+
+
+def test_explicit_prefetch_warms_cache_without_demand_traffic():
+    data, arr, st = build()                      # auto-readahead disabled
+    idx = jnp.arange(32, dtype=jnp.int32)        # blocks 0..3
+    st = jax.jit(arr.prefetch)(st, idx)
+    m = st.metrics.summary()
+    assert m["requests"] == 0 and m["misses"] == 0 and m["hits"] == 0
+    assert m["prefetch_issued"] == 4
+    assert m["bytes_from_storage"] == 4 * 8 * 4
+    vals, st = arr.read(st, idx)
+    np.testing.assert_allclose(np.asarray(vals), data.reshape(-1)[:32],
+                               rtol=1e-6)
+    m2 = st.metrics.summary()
+    assert m2["misses"] == 0 and m2["hits"] == 4
+    assert m2["prefetch_hits"] == 4              # all demand hits were warmed
+    assert m2["prefetch_accuracy"] == pytest.approx(1.0)
+
+
+def test_explicit_prefetch_ignores_invalid_and_resident():
+    data, arr, st = build()
+    idx = jnp.arange(32, dtype=jnp.int32)
+    st = arr.prefetch(st, idx)
+    issued1 = float(st.metrics.prefetch_issued)
+    # again, plus out-of-range lanes: nothing new to fetch
+    st = arr.prefetch(st, jnp.asarray([-3, 0, 31, 10_000], jnp.int32))
+    assert float(st.metrics.prefetch_issued) == issued1
+
+
+def test_bfs_frontier_prefetch_parity():
+    from repro.graph import BamGraph, bfs, bfs_oracle, random_graph
+    indptr, dst = random_graph(200, 4.0, seed=1)
+    want = bfs_oracle(indptr, dst, 0)
+    d0, _ = bfs(BamGraph.build(indptr, dst, cacheline_bytes=512), 0)
+    d1, st = bfs(BamGraph.build(indptr, dst, cacheline_bytes=512), 0,
+                 prefetch=True)
+    np.testing.assert_array_equal(d0, want)
+    np.testing.assert_array_equal(d1, want)     # hints never change results
+    assert float(st.metrics.prefetch_issued) > 0
+
+
+def test_cc_warmup_prefetch_parity():
+    from repro.graph import BamGraph, cc, cc_oracle, random_graph
+    indptr, dst = random_graph(120, 3.0, seed=2)
+    want = cc_oracle(indptr, dst)
+    l0, _ = cc(BamGraph.build(indptr, dst, cacheline_bytes=512))
+    l1, st = cc(BamGraph.build(indptr, dst, cacheline_bytes=512),
+                prefetch=True)
+    np.testing.assert_array_equal(l0, want)
+    np.testing.assert_array_equal(l1, want)
+    assert float(st.metrics.prefetch_issued) > 0
+
+
+def test_disabled_prefetch_is_inert():
+    data, arr, st = build(prefetch=PrefetchConfig(enabled=False, window=8))
+    got, st = scan(arr, st, data.size)
+    np.testing.assert_allclose(got, data.reshape(-1), rtol=1e-6)
+    m = st.metrics.summary()
+    assert m["prefetch_issued"] == 0 and m["prefetch_hits"] == 0

@@ -1,7 +1,7 @@
 """Property tests: SQ/CQ rings never lose or duplicate commands."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import queues as Q
 

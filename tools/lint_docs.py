@@ -1,0 +1,39 @@
+#!/usr/bin/env python
+"""Docs lint: every script under benchmarks/ must be covered by
+docs/benchmarks.md (mentioned by file name), and the core documentation
+files must exist.  Exits nonzero with a list of violations — run from the
+repo root; CI runs it on every push.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+REQUIRED_DOCS = ["README.md", "docs/architecture.md", "docs/benchmarks.md"]
+
+
+def main() -> int:
+    errors = []
+    for doc in REQUIRED_DOCS:
+        if not (ROOT / doc).is_file():
+            errors.append(f"missing required doc: {doc}")
+
+    bench_doc = ROOT / "docs" / "benchmarks.md"
+    text = bench_doc.read_text() if bench_doc.is_file() else ""
+    for script in sorted((ROOT / "benchmarks").glob("*.py")):
+        if script.name not in text:
+            errors.append(
+                f"benchmarks/{script.name} is not documented in "
+                "docs/benchmarks.md")
+
+    for err in errors:
+        print(f"docs-lint: {err}", file=sys.stderr)
+    if not errors:
+        print(f"docs-lint: OK ({len(REQUIRED_DOCS)} docs, all benchmarks "
+              "covered)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
