@@ -1,11 +1,12 @@
 """Paper Fig. 2: I/O amplification of the CPU-centric model on the six
 data-dependent taxi queries (and BaM's, for contrast)."""
+from benchmarks.common import scaled
 from repro.analytics import (QUERIES, make_taxi_table, run_query,
                              run_query_baseline)
 
 
 def run():
-    tbl = make_taxi_table(1 << 16, seed=0)
+    tbl = make_taxi_table(scaled(1 << 16, 1 << 12), seed=0)
     rows = []
     for q in QUERIES:
         _, io = run_query(tbl, q)

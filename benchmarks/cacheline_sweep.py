@@ -5,14 +5,15 @@ Expected reproduction of the paper's findings on graph workloads:
 locality (neighbor lists) makes larger lines cheaper in device time until
 the link saturates (4KB sweet spot, 8KB flat).
 """
+from benchmarks.common import scaled
 from repro.core.ssd import ArrayOfSSDs, INTEL_OPTANE_P5800X
 from repro.graph import BamGraph, bfs, random_graph
 
 
 def run():
     rows = []
-    indptr, dst = random_graph(2000, 12.0, seed=7)
-    for line in (512, 1024, 2048, 4096, 8192):
+    indptr, dst = random_graph(scaled(2000, 300), 12.0, seed=7)
+    for line in scaled((512, 1024, 2048, 4096, 8192), (512, 4096)):
         g = BamGraph.build(indptr, dst, cacheline_bytes=line,
                            cache_bytes=1 << 16,
                            ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, 1))

@@ -1,10 +1,21 @@
-"""Shared benchmark helpers: timing + CSV row emission."""
+"""Shared benchmark helpers: timing, CSV row emission, CI smoke mode."""
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable, List, Tuple
 
 Row = Tuple[str, float, str]     # (name, us_per_call, derived)
+
+# CI smoke mode: BAM_BENCH_SMOKE=1 shrinks every module's problem sizes so
+# the whole suite exercises its code paths in seconds.  The numbers are
+# meaningless in smoke mode — the run only asserts that nothing crashes.
+SMOKE = os.environ.get("BAM_BENCH_SMOKE", "") not in ("", "0")
+
+
+def scaled(full, tiny):
+    """Pick the real size, or the tiny one under BAM_BENCH_SMOKE=1."""
+    return tiny if SMOKE else full
 
 
 def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:

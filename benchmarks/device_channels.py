@@ -1,0 +1,133 @@
+"""Paper Fig. 7 / §IV-A: per-device I/O channels — IOPS scaling and skew.
+
+Sweeps ``n_devices`` ∈ {1, 2, 4, 8} behind one accelerator with the full
+BaM stack (coalesce → per-device SQ groups → per-device Little's-law
+drain), under three (stream, placement) combinations:
+
+* **uniform** — random blocks over cache-line striping: channels balance
+  and aggregate read IOPS scales near-linearly until the PCIe Gen4 x16
+  link (26.3 GBps measured) gates further gains;
+* **zipf** — a Zipfian block stream over the same fine striping: the
+  coalescer absorbs per-line popularity (duplicates collapse to one
+  fetch) and line-grain interleaving scatters the hot set, so the
+  channels stay near-balanced — the paper's argument *for* fine-grain
+  striping, now measurable;
+* **zipf_sharded** — the same Zipfian stream over shard-aligned placement
+  (one contiguous shard per device, ``stripe_blocks = n_blocks /
+  n_devices``): the hot head of the distribution lives on one device,
+  the wavefront completes when that straggler drains (max over devices,
+  not the old averaged single budget), and the *straggler gap*
+  (max/mean per-device busy time) exposes it.
+
+Standalone (``python benchmarks/device_channels.py``) prints a JSON report
+and exits nonzero if uniform 1→4-device scaling falls under 3x or the
+sharded Zipfian straggler gap is not measurably above uniform's — the
+acceptance self-check, CI-runnable as a regression gate.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from benchmarks.common import SMOKE, scaled
+except ImportError:        # standalone: python benchmarks/<module>.py
+    from common import SMOKE, scaled
+from repro.core import BamArray
+from repro.core.ssd import ArrayOfSSDs, INTEL_OPTANE_P5800X
+
+N_BLOCKS = scaled(1 << 16, 1 << 10)
+BLOCK_ELEMS = 128                  # 512B lines of float32
+WAVEFRONT = scaled(4096, 256)
+WAVES = scaled(8, 2)
+DEVICES = (1, 2, 4, 8)
+
+
+def _streams(n_blocks: int, rng):
+    """[(name, stripe_fn, per-wave block-id arrays)] — stripe_fn(nd) gives
+    the striping unit for that device count."""
+    zipf_blocks = np.minimum(rng.zipf(1.2, size=(WAVES, WAVEFRONT)),
+                             n_blocks) - 1
+    uniform = [rng.integers(0, n_blocks, WAVEFRONT) for _ in range(WAVES)]
+    zipf = [zipf_blocks[w] for w in range(WAVES)]
+    line_grain = lambda nd: 1
+    shard_grain = lambda nd: max(n_blocks // nd, 1)
+    return [("uniform", line_grain, uniform),
+            ("zipf", line_grain, zipf),
+            ("zipf_sharded", shard_grain, zipf)]
+
+
+def _run_stream(data, n_devices: int, stripe_blocks: int, waves) -> dict:
+    """Cold cache per point; tiny cache so every wavefront exercises the
+    channels rather than the cache."""
+    arr, st = BamArray.build(
+        data, block_elems=BLOCK_ELEMS,
+        num_sets=4, ways=4,                   # tiny cache: force misses
+        num_queues=8 * max(n_devices, 1), queue_depth=1024,
+        ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, n_devices,
+                        stripe_blocks=stripe_blocks))
+    read = jax.jit(arr.read)
+    for wave in waves:
+        _, st = read(st, jnp.asarray(wave * BLOCK_ELEMS, jnp.int32))
+    return st.metrics.summary()
+
+
+def sweep() -> dict:
+    rng = np.random.default_rng(0)
+    data = np.random.default_rng(1).standard_normal(
+        (N_BLOCKS, BLOCK_ELEMS)).astype(np.float32)
+    report = {"workload": {"n_blocks": N_BLOCKS, "block_bytes":
+                           BLOCK_ELEMS * 4, "wavefront": WAVEFRONT,
+                           "waves": WAVES}, "streams": {}}
+    for name, stripe_fn, waves in _streams(N_BLOCKS, rng):
+        points = []
+        for nd in DEVICES:
+            m = _run_stream(data, nd, stripe_fn(nd), waves)
+            points.append({
+                "n_devices": nd,
+                "stripe_blocks": stripe_fn(nd),
+                "read_iops": m["read_iops"],
+                "read_time_s": m["read_time_s"],
+                "straggler_gap": m["straggler_gap"],
+                "dev_reads": m["dev_reads"],
+                "misses": m["misses"],
+            })
+        base = points[0]["read_iops"]
+        for p in points:
+            p["speedup_vs_1dev"] = p["read_iops"] / max(base, 1e-30)
+        report["streams"][name] = points
+    uni = {p["n_devices"]: p for p in report["streams"]["uniform"]}
+    shard = {p["n_devices"]: p for p in report["streams"]["zipf_sharded"]}
+    report["uniform_scaling_1_to_4"] = uni[4]["speedup_vs_1dev"]
+    report["uniform_straggler_gap_4dev"] = uni[4]["straggler_gap"]
+    report["zipf_sharded_straggler_gap_4dev"] = shard[4]["straggler_gap"]
+    report["scaling_ok"] = report["uniform_scaling_1_to_4"] >= 3.0
+    report["skew_visible"] = (
+        report["zipf_sharded_straggler_gap_4dev"]
+        > report["uniform_straggler_gap_4dev"] + 0.25)
+    return report
+
+
+def run():
+    rep = sweep()
+    rows = []
+    for name, points in rep["streams"].items():
+        for p in points:
+            rows.append((
+                f"device_channels/{name}_{p['n_devices']}dev",
+                p["read_time_s"] * 1e6,
+                f"iops={p['read_iops']/1e6:.2f}M "
+                f"speedup={p['speedup_vs_1dev']:.2f}x "
+                f"straggler={p['straggler_gap']:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    rep = sweep()
+    print(json.dumps(rep, indent=2))
+    # The thresholds are calibrated for full sizes; at smoke sizes the
+    # wavefronts are too small to saturate 4 channels, so only assert the
+    # sweep runs.
+    ok = SMOKE or (rep["scaling_ok"] and rep["skew_visible"])
+    raise SystemExit(0 if ok else 1)

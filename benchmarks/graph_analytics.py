@@ -9,6 +9,8 @@ full file load before any compute; BaM overlaps).
 """
 import numpy as np
 
+from benchmarks.common import scaled
+
 from repro.core.ssd import (ArrayOfSSDs, INTEL_OPTANE_P5800X,
                             PCIE_GEN4_X16_BW)
 from repro.graph import BamGraph, bfs, cc, random_graph
@@ -16,8 +18,10 @@ from repro.graph import BamGraph, bfs, cc, random_graph
 # sized so the edge list reaches the bandwidth regime of the paper's
 # Fig. 7 while staying tractable on one CPU core (larger graphs only make
 # BaM look better: the per-iteration latency floor amortises away)
-GRAPHS = {"K-like": (6_000, 24.0), "F-like": (4_000, 16.0),
-          "U-like": (5_000, 8.0)}
+GRAPHS = scaled(
+    {"K-like": (6_000, 24.0), "F-like": (4_000, 16.0),
+     "U-like": (5_000, 8.0)},
+    {"K-like": (600, 8.0)})
 
 
 def run():

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import scaled
 from repro.core import BamArray
 
 
@@ -35,7 +36,7 @@ def run():
         return vals.reshape(expert_ids.shape[0], D * F), st
 
     top_k = 4
-    for B in (1, 4, 16):
+    for B in scaled((1, 4, 16), (1, 4)):
         st_b = st
         hits0 = misses0 = 0.0
         for step in range(8):              # decode steps with reuse

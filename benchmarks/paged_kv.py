@@ -7,6 +7,7 @@ reports pages moved + simulated device time per decoded token.
 import jax
 import numpy as np
 
+from benchmarks.common import scaled
 from repro.configs.base import smoke_config
 from repro.models.model import build_model
 from repro.serving import PagedKVManager
@@ -19,13 +20,13 @@ def run():
                                              dtype="float32")
     api = build_model(cfg)
     params, _ = api.init(jax.random.PRNGKey(0), 96)
-    for keep in (16, 32, 64):
+    for keep in scaled((16, 32, 64), (16,)):
         kv = PagedKVManager(keep_last=keep)
         eng = ServeEngine(cfg, params, batch_slots=2, max_seq=96,
                           kv_manager=kv)
         for i in range(2):
             eng.submit(Request(rid=i, prompt=list(range(2, 40)),
-                               max_new_tokens=24))
+                               max_new_tokens=scaled(24, 6)))
         eng.run()
         m = kv.metrics.summary()
         rows.append((

@@ -26,12 +26,16 @@ from __future__ import annotations
 
 import json
 
+try:
+    from benchmarks.common import scaled
+except ImportError:        # standalone: python benchmarks/<module>.py
+    from common import scaled
 from repro.analytics import make_taxi_table, scan_column
 from repro.core import PrefetchConfig
 
-N_ROWS = 1 << 16
+N_ROWS = scaled(1 << 16, 1 << 13)
 COLUMN = "trip_dist"
-WINDOWS = (0, 2, 4, 8, 16, 32)
+WINDOWS = scaled((0, 2, 4, 8, 16, 32), (0, 4))
 
 
 def sweep(windows=WINDOWS, n_rows: int = N_ROWS, column: str = COLUMN,

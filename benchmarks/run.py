@@ -11,10 +11,13 @@ Prints ``name,us_per_call,derived`` CSV.  Each module's ``run()`` returns
   graph_analytics          Fig 7   BFS/CC vs DRAM-only target T
   cacheline_sweep          Fig 8   512B..8KB granularity
   ssd_scaling              Fig 9   1..8 SSDs
+  device_channels          Fig 7/§IV-A per-device channels: scaling + skew
   taxi_queries             Fig 10  Q1..Q6 end-to-end
   paged_kv                 (beyond paper) KV spill/fetch
   moe_paging               (beyond paper) expert paging
   prefetch_sweep           (beyond paper) readahead window sweep
+
+Set ``BAM_BENCH_SMOKE=1`` to shrink every module to smoke-test sizes (CI).
 """
 import importlib
 import sys
@@ -23,7 +26,8 @@ import traceback
 MODULES = [
     "littles_law", "ssd_cost", "uvm_bound", "analytics_amplification",
     "iops_scaling", "graph_analytics", "cacheline_sweep", "ssd_scaling",
-    "taxi_queries", "paged_kv", "moe_paging", "prefetch_sweep",
+    "device_channels", "taxi_queries", "paged_kv", "moe_paging",
+    "prefetch_sweep",
 ]
 
 

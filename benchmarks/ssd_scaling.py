@@ -3,13 +3,14 @@
 Linear until the workload can't generate requests fast enough (paper: ~2
 Optanes for graph analytics) or the accelerator link saturates.
 """
+from benchmarks.common import scaled
 from repro.core.ssd import ArrayOfSSDs, INTEL_OPTANE_P5800X
 from repro.graph import BamGraph, bfs, random_graph
 
 
 def run():
     rows = []
-    indptr, dst = random_graph(2000, 12.0, seed=3)
+    indptr, dst = random_graph(scaled(2000, 300), 12.0, seed=3)
     base_t = None
     for n in (1, 2, 4, 8):
         g = BamGraph.build(indptr, dst, cacheline_bytes=4096,

@@ -5,13 +5,14 @@ Optane SSD, Little's law) + the baseline's CPU staging overhead.  The
 reproduced claim: the baseline degrades as data-dependent columns are
 added; BaM stays nearly flat (paper: up to 4.9x).
 """
+from benchmarks.common import scaled
 from repro.analytics import (QUERIES, make_taxi_table, run_query,
                              run_query_baseline)
 from repro.core.ssd import ArrayOfSSDs, INTEL_OPTANE_P5800X
 
 
 def run():
-    tbl = make_taxi_table(1 << 16, seed=2)
+    tbl = make_taxi_table(scaled(1 << 16, 1 << 12), seed=2)
     dev = ArrayOfSSDs(INTEL_OPTANE_P5800X, 1)
     rows = []
     for q in QUERIES:

@@ -55,7 +55,10 @@ class TaxiTable:
 def make_taxi_table(n_rows: int = 1 << 18, *, selectivity: float = 5e-4,
                     block_bytes: int = 512, cache_bytes: int = 1 << 18,
                     seed: int = 0, backend: str = "sim",
+                    n_devices: int = 1,
                     prefetch: Optional[PrefetchConfig] = None) -> TaxiTable:
+    """``n_devices`` stripes every column over that many SSD channels —
+    the Fig. 9 scaling knob for the analytics workload."""
     rng = np.random.default_rng(seed)
     pickup = rng.integers(0, 256, n_rows).astype(np.int32)
     # plant the target selectivity for gid == WILLIAMSBURG
@@ -73,7 +76,7 @@ def make_taxi_table(n_rows: int = 1 << 18, *, selectivity: float = 5e-4,
             data.reshape(1, -1), block_elems=block_elems,
             num_sets=max(cache_bytes // block_bytes // 4, 1), ways=4,
             num_queues=16, queue_depth=1024,
-            ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, 1), backend=backend,
+            ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, n_devices), backend=backend,
             prefetch=prefetch)
         cols[name] = arr
         states[name] = st

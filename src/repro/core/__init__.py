@@ -17,11 +17,14 @@ from repro.core.coalescer import CoalesceResult, coalesce
 from repro.core.metrics import IOMetrics
 from repro.core.pipeline import pipelined_bam_map, software_pipeline
 from repro.core.prefetch import PrefetchConfig, modal_stride, readahead_keys
-from repro.core.queues import QueueState, enqueue, make_queues, service_all
+from repro.core.queues import (
+    QueueState, enqueue, in_flight, in_flight_per_device, make_queues,
+    service_all,
+)
 from repro.core.ssd import (
     ArrayOfSSDs, SSDSpec, SSD_PRESETS, DRAM_DIMM, INTEL_OPTANE_P5800X,
-    SAMSUNG_980PRO, SAMSUNG_ZNAND_P1735, required_queue_depth, sustained_rate,
-    target_iops_for_link,
+    SAMSUNG_980PRO, SAMSUNG_ZNAND_P1735, device_histogram, device_of_block,
+    required_queue_depth, sustained_rate, target_iops_for_link,
 )
 from repro.core.storage import HBMStorage, SimStorage
 
@@ -29,9 +32,11 @@ __all__ = [
     "BamArray", "BamKVStore", "BamState", "CacheState", "make_cache",
     "CoalesceResult", "coalesce", "IOMetrics", "pipelined_bam_map",
     "software_pipeline", "PrefetchConfig", "modal_stride", "readahead_keys",
-    "QueueState", "enqueue", "make_queues", "service_all",
+    "QueueState", "enqueue", "in_flight", "in_flight_per_device",
+    "make_queues", "service_all",
     "ArrayOfSSDs", "SSDSpec", "SSD_PRESETS", "DRAM_DIMM",
     "INTEL_OPTANE_P5800X", "SAMSUNG_980PRO", "SAMSUNG_ZNAND_P1735",
+    "device_histogram", "device_of_block",
     "required_queue_depth", "sustained_rate", "target_iops_for_link",
     "HBMStorage", "SimStorage",
 ]

@@ -48,9 +48,9 @@ from repro.core import queues as Q
 from repro.core.coalescer import coalesce
 from repro.core.metrics import IOMetrics
 from repro.core.prefetch import PrefetchConfig, readahead_keys
-from repro.core.ssd import ArrayOfSSDs, INTEL_OPTANE_P5800X
+from repro.core.ssd import ArrayOfSSDs, INTEL_OPTANE_P5800X, device_histogram
 from repro.core.storage import HBMStorage, SimStorage
-from repro.utils import pytree_dataclass
+from repro.utils import pytree_dataclass, round_up
 
 __all__ = ["BamArray", "BamState", "BamKVStore", "PrefetchConfig"]
 
@@ -91,6 +91,10 @@ class BamArray:
         ``backend='sim'``: data lives on the host, fetched via pure_callback
         (the NVMe DMA stand-in).  ``backend='hbm'``: data is an in-graph cold
         buffer — used by dry-runs so the compiler sees the traffic.
+
+        The SQ pool is partitioned per storage device (``ssd.n_devices``
+        equal ring groups); ``num_queues`` is rounded up to the next
+        multiple of the device count so every channel gets the same depth.
         """
         import numpy as np
         shape = tuple(data.shape)
@@ -103,14 +107,18 @@ class BamArray:
             store, state_store, dtype = None, hs, hs.dtype
         else:
             raise ValueError(f"unknown backend {backend!r}")
+        ssd = ssd or ArrayOfSSDs(INTEL_OPTANE_P5800X, 1)
+        num_queues = round_up(num_queues, ssd.n_devices)
         arr = BamArray(
             storage=store, shape=shape, dtype=dtype, block_elems=block_elems,
-            ssd=ssd or ArrayOfSSDs(INTEL_OPTANE_P5800X, 1),
+            ssd=ssd,
             prefetch_cfg=prefetch or PrefetchConfig())
         st = BamState(
             cache=C.make_cache(num_sets, ways, block_elems, dtype),
-            queues=Q.make_queues(num_queues, queue_depth),
-            metrics=IOMetrics.zeros(),
+            queues=Q.make_queues(num_queues, queue_depth,
+                                 n_devices=ssd.n_devices,
+                                 stripe_blocks=ssd.stripe_blocks),
+            metrics=IOMetrics.zeros(ssd.n_devices),
             storage=state_store,
         )
         return arr, st
@@ -138,14 +146,65 @@ class BamArray:
     def _store(self, st: BamState):
         return self.storage if self.storage is not None else st.storage
 
+    def _check_channels(self, st: BamState) -> None:
+        """SQ routing and device accounting must share one striping.
+
+        Both are static metadata, so a hand-assembled state that pairs
+        mismatched ``make_queues``/``ArrayOfSSDs`` channel configs fails at
+        trace time instead of silently charging metrics to the wrong
+        device.
+        """
+        qs = st.queues
+        if (qs.n_devices, qs.stripe_blocks) != (self.ssd.n_devices,
+                                                self.ssd.stripe_blocks):
+            raise ValueError(
+                f"queue channels (n_devices={qs.n_devices}, "
+                f"stripe_blocks={qs.stripe_blocks}) do not match the SSD "
+                f"array (n_devices={self.ssd.n_devices}, "
+                f"stripe_blocks={self.ssd.stripe_blocks}); build the state "
+                "with BamArray.build or make_queues with the same config")
+
     def _split(self, idx: jax.Array):
         return (idx // self.block_elems).astype(jnp.int32), \
                (idx % self.block_elems).astype(jnp.int32)
+
+    def _charge_channels(self, mt: IOMetrics, qs: Q.QueueState,
+                         dev_reads: jax.Array, dev_writes: jax.Array,
+                         depth_now: jax.Array, depth_dev: jax.Array) -> dict:
+        """Device-time and per-device counter updates shared by every I/O
+        path (read/write/prefetch/flush).
+
+        Each channel drains its own share at its own Little's-law rate
+        (concurrency capped by its queue group's depth); the wavefront is
+        gated by the slowest channel.  Returns the IOMetrics field updates
+        as kwargs so callers splice them into their own counter math.
+        """
+        group_limit = qs.group_size * qs.depth
+        t_read, t_read_dev = self.ssd.service_time_per_device_traced(
+            dev_reads, self.block_bytes, queue_depth_limit=group_limit)
+        t_write, t_write_dev = self.ssd.service_time_per_device_traced(
+            dev_writes, self.block_bytes, write=True,
+            queue_depth_limit=group_limit)
+        return dict(
+            sim_time_s=mt.sim_time_s + t_read + t_write,
+            read_time_s=mt.read_time_s + t_read,
+            write_time_s=mt.write_time_s + t_write,
+            max_queue_depth=jnp.maximum(mt.max_queue_depth,
+                                        depth_now.astype(jnp.int32)),
+            dev_reads=mt.dev_reads + dev_reads,
+            dev_writes=mt.dev_writes + dev_writes,
+            dev_bytes=mt.dev_bytes
+                + (dev_reads + dev_writes) * self.block_bytes,
+            dev_time_s=mt.dev_time_s + t_read_dev + t_write_dev,
+            dev_max_depth=jnp.maximum(mt.dev_max_depth,
+                                      depth_dev.astype(jnp.int32)),
+        )
 
     # ---------------------------------------------------------------- read
     def read(self, st: BamState, idx: jax.Array,
              valid: jax.Array | None = None) -> Tuple[jax.Array, BamState]:
         """Gather ``self.flat[idx]`` for a wavefront of element indices."""
+        self._check_channels(st)
         n = idx.shape[0]
         if valid is None:
             valid = (idx >= 0) & (idx < self.size)
@@ -224,6 +283,7 @@ class BamArray:
                                     prio=Q.PRIO_READAHEAD)
             n_doorbells = n_doorbells + rec_rw.n_doorbells + rec_ra.n_doorbells
         depth_now = Q.in_flight(qs2)
+        depth_dev = Q.in_flight_per_device(qs2)
         qs3, comps = Q.service_all(qs2)
 
         # 6) the DMA: fetch missed lines / write back dirty lines.  Fetch
@@ -262,22 +322,26 @@ class BamArray:
         # 9) metrics.  Readahead reads share the device drain with demand
         #    (one busy-time accumulation) but are accounted separately:
         #    ``misses`` stays demand-only, ``prefetch_issued`` carries the
-        #    speculative lines, and both contribute to bytes moved.
+        #    speculative lines, and both contribute to bytes moved.  Device
+        #    time is per channel: each device drains its own share, the
+        #    slowest one gates the wavefront (max, not average).
         n_valid = jnp.sum(valid.astype(jnp.int32))
         n_miss = jnp.sum(miss.astype(jnp.int32))
         n_wb = jnp.sum(wb.astype(jnp.int32))
         n_ra = jnp.zeros((), jnp.int32)
+        nd = self.ssd.n_devices
+        dev_reads = device_histogram(ukeys, nd, miss, self.ssd.stripe_blocks)
+        dev_writes = device_histogram(wb_keys, nd,
+                                      stripe_blocks=self.ssd.stripe_blocks)
         if ra_on:
             n_ra = jnp.sum(ra_alloc.ok.astype(jnp.int32))
             n_wb = n_wb + jnp.sum(ra_wb.astype(jnp.int32))
+            dev_reads = dev_reads + device_histogram(
+                ra_keys, nd, stripe_blocks=self.ssd.stripe_blocks)
+            dev_writes = dev_writes + device_histogram(
+                ra_wb_keys, nd, stripe_blocks=self.ssd.stripe_blocks)
         itemsize = jnp.dtype(self.dtype).itemsize
         mt = st.metrics
-        sim_t = self.ssd.service_time_traced(
-            n_miss + n_ra, self.block_bytes,
-            queue_depth_limit=st.queues.num_queues * st.queues.depth)
-        sim_t = sim_t + self.ssd.service_time_traced(
-            n_wb, self.block_bytes, write=True,
-            queue_depth_limit=st.queues.num_queues * st.queues.depth)
         metrics = IOMetrics(
             requests=mt.requests + n_valid,
             bytes_requested=mt.bytes_requested + n_valid * itemsize,
@@ -288,11 +352,10 @@ class BamArray:
             write_ops=mt.write_ops + n_wb,
             bytes_to_storage=mt.bytes_to_storage + n_wb * self.block_bytes,
             doorbells=mt.doorbells + n_doorbells,
-            sim_time_s=mt.sim_time_s + sim_t,
-            max_queue_depth=jnp.maximum(mt.max_queue_depth,
-                                        depth_now.astype(jnp.int32)),
             prefetch_issued=mt.prefetch_issued + n_ra,
             prefetch_hits=mt.prefetch_hits + n_pref_hit,
+            **self._charge_channels(mt, st.queues, dev_reads, dev_writes,
+                                    depth_now, depth_dev),
         )
         return vals, BamState(cache=cache3, queues=qs3, metrics=metrics,
                               storage=new_storage)
@@ -311,6 +374,7 @@ class BamArray:
         :meth:`read`).  Demand counters (requests/hits/misses) are untouched:
         a prefetch is not compute traffic.
         """
+        self._check_channels(st)
         if valid is None:
             valid = (idx >= 0) & (idx < self.size)
         blk, _ = self._split(jnp.where(valid, idx, 0))
@@ -333,6 +397,7 @@ class BamArray:
         qs2, rec_r = Q.enqueue(qs1, keys, dst=alloc.slot,
                                prio=Q.PRIO_READAHEAD)
         depth_now = Q.in_flight(qs2)
+        depth_dev = Q.in_flight_per_device(qs2)
         qs3, _ = Q.service_all(qs2)
 
         store = self._store(st)
@@ -347,23 +412,21 @@ class BamArray:
 
         n_ra = jnp.sum(alloc.ok.astype(jnp.int32))
         n_wb = jnp.sum(wb.astype(jnp.int32))
+        nd = self.ssd.n_devices
+        dev_reads = device_histogram(keys, nd,
+                                     stripe_blocks=self.ssd.stripe_blocks)
+        dev_writes = device_histogram(wb_keys, nd,
+                                      stripe_blocks=self.ssd.stripe_blocks)
         mt = st.metrics
-        sim_t = self.ssd.service_time_traced(
-            n_ra, self.block_bytes,
-            queue_depth_limit=st.queues.num_queues * st.queues.depth)
-        sim_t = sim_t + self.ssd.service_time_traced(
-            n_wb, self.block_bytes, write=True,
-            queue_depth_limit=st.queues.num_queues * st.queues.depth)
         metrics = dataclasses.replace(
             mt,
             bytes_from_storage=mt.bytes_from_storage + n_ra * self.block_bytes,
             write_ops=mt.write_ops + n_wb,
             bytes_to_storage=mt.bytes_to_storage + n_wb * self.block_bytes,
             doorbells=mt.doorbells + rec_r.n_doorbells + rec_w.n_doorbells,
-            sim_time_s=mt.sim_time_s + sim_t,
-            max_queue_depth=jnp.maximum(mt.max_queue_depth,
-                                        depth_now.astype(jnp.int32)),
             prefetch_issued=mt.prefetch_issued + n_ra,
+            **self._charge_channels(mt, st.queues, dev_reads, dev_writes,
+                                    depth_now, depth_dev),
         )
         return BamState(cache=cache2, queues=qs3, metrics=metrics,
                         storage=new_storage)
@@ -376,6 +439,7 @@ class BamArray:
         Duplicate element indices within one wavefront are last-writer-wins
         with unspecified order (as on the GPU).
         """
+        self._check_channels(st)
         n = idx.shape[0]
         if valid is None:
             valid = (idx >= 0) & (idx < self.size)
@@ -397,11 +461,17 @@ class BamArray:
         ev_lines = cache2.data[ev_rows]
         wb = alloc.ok & alloc.evicted_dirty & (alloc.evicted_key >= 0)
         wb_keys = jnp.where(wb, alloc.evicted_key, -1)
+        # Bypassed lines (no slot granted) will be written through below;
+        # their commands ride the rings like every other write.
+        byp = miss & ~alloc.ok
+        bt_keys = jnp.where(byp, ukeys, -1)
 
         qs1, rec_r = Q.enqueue(st.queues, jnp.where(miss, ukeys, -1),
                                dst=alloc.slot)
         qs2, rec_w = Q.enqueue(qs1, wb_keys, is_write=jnp.ones_like(wb))
+        qs2, rec_bt = Q.enqueue(qs2, bt_keys, is_write=jnp.ones_like(byp))
         depth_now = Q.in_flight(qs2)
+        depth_dev = Q.in_flight_per_device(qs2)
         qs3, _ = Q.service_all(qs2)
 
         store = self._store(st)
@@ -425,13 +495,11 @@ class BamArray:
         touched_slots = jnp.where(valid & in_cache, slot_r, -1)
         cache5 = C.mark_dirty(cache4, touched_slots)
 
-        # Bypassed lines (no slot granted): write-through directly.
-        byp = miss & ~alloc.ok
+        # Bypassed lines: write-through directly (enqueued above).
         byp_any = byp[u] & valid
         byp_rows = jnp.where(byp_any, u, lines_u.shape[0])
         byp_lines = lines_u.at[byp_rows, jnp.where(byp_any, off, 0)].set(
             values.astype(self.dtype), mode="drop")
-        bt_keys = jnp.where(byp, ukeys, -1)
         if self.storage is None:
             new_storage = new_storage.write_blocks(bt_keys, byp_lines)
         else:
@@ -440,14 +508,14 @@ class BamArray:
         n_valid = jnp.sum(valid.astype(jnp.int32))
         n_miss = jnp.sum(miss.astype(jnp.int32))
         n_wb = jnp.sum(wb.astype(jnp.int32)) + jnp.sum(byp.astype(jnp.int32))
+        nd = self.ssd.n_devices
+        dev_reads = device_histogram(ukeys, nd, miss, self.ssd.stripe_blocks)
+        dev_writes = device_histogram(
+            wb_keys, nd, stripe_blocks=self.ssd.stripe_blocks) \
+            + device_histogram(bt_keys, nd,
+                               stripe_blocks=self.ssd.stripe_blocks)
         itemsize = jnp.dtype(self.dtype).itemsize
         mt = st.metrics
-        sim_t = self.ssd.service_time_traced(
-            n_miss, self.block_bytes,
-            queue_depth_limit=st.queues.num_queues * st.queues.depth)
-        sim_t = sim_t + self.ssd.service_time_traced(
-            n_wb, self.block_bytes, write=True,
-            queue_depth_limit=st.queues.num_queues * st.queues.depth)
         metrics = IOMetrics(
             requests=mt.requests + n_valid,
             bytes_requested=mt.bytes_requested + n_valid * itemsize,
@@ -456,21 +524,35 @@ class BamArray:
             bytes_from_storage=mt.bytes_from_storage + n_miss * self.block_bytes,
             write_ops=mt.write_ops + n_wb,
             bytes_to_storage=mt.bytes_to_storage + n_wb * self.block_bytes,
-            doorbells=mt.doorbells + rec_r.n_doorbells + rec_w.n_doorbells,
-            sim_time_s=mt.sim_time_s + sim_t,
-            max_queue_depth=jnp.maximum(mt.max_queue_depth,
-                                        depth_now.astype(jnp.int32)),
+            doorbells=mt.doorbells + rec_r.n_doorbells + rec_w.n_doorbells
+                + rec_bt.n_doorbells,
             prefetch_issued=mt.prefetch_issued,
             prefetch_hits=mt.prefetch_hits + n_pref_hit,
+            **self._charge_channels(mt, st.queues, dev_reads, dev_writes,
+                                    depth_now, depth_dev),
         )
         return BamState(cache=cache5, queues=qs3, metrics=metrics,
                         storage=new_storage)
 
     def flush(self, st: BamState) -> BamState:
-        """Write back every dirty resident line (shutdown / barrier path)."""
+        """Write back every dirty resident line (shutdown / barrier path).
+
+        Write-backs go through the SQ rings like every other I/O: enqueue,
+        doorbell, drain — so ``doorbells``/``max_queue_depth`` and the
+        per-device counters see shutdown traffic exactly as they see
+        ``read``/``write`` write-backs.  Lines the rings cannot hold this
+        round are still persisted (the drop degrades accounting, never
+        correctness — same contract as the read path's read-through).
+        """
+        self._check_channels(st)
         tags = st.cache.tags.reshape(-1)
         dirty = st.cache.dirty.reshape(-1)
         keys = jnp.where(dirty & (tags >= 0), tags, -1)
+        qs1, rec_w = Q.enqueue(st.queues, keys,
+                               is_write=jnp.ones(keys.shape, bool))
+        depth_now = Q.in_flight(qs1)
+        depth_dev = Q.in_flight_per_device(qs1)
+        qs2, _ = Q.service_all(qs1)
         store = self._store(st)
         new_storage = st.storage
         if self.storage is None:
@@ -478,16 +560,21 @@ class BamArray:
         else:
             self.storage.write_blocks(keys, st.cache.data)
         n_wb = jnp.sum((keys >= 0).astype(jnp.int32))
+        nd = self.ssd.n_devices
+        dev_writes = device_histogram(keys, nd,
+                                      stripe_blocks=self.ssd.stripe_blocks)
         cache = C._replace_data(st.cache, dirty=jnp.zeros_like(st.cache.dirty))
         mt = st.metrics
         metrics = dataclasses.replace(
             mt,
             write_ops=mt.write_ops + n_wb,
             bytes_to_storage=mt.bytes_to_storage + n_wb * self.block_bytes,
-            sim_time_s=mt.sim_time_s + self.ssd.service_time_traced(
-                n_wb, self.block_bytes, write=True),
+            doorbells=mt.doorbells + rec_w.n_doorbells,
+            **self._charge_channels(mt, st.queues,
+                                    jnp.zeros_like(dev_writes), dev_writes,
+                                    depth_now, depth_dev),
         )
-        return BamState(cache=cache, queues=st.queues, metrics=metrics,
+        return BamState(cache=cache, queues=qs2, metrics=metrics,
                         storage=new_storage)
 
 
@@ -508,6 +595,23 @@ class BamKVStore:
     probes: int = 8
 
     @staticmethod
+    def _hash_host(key: int, capacity: int) -> int:
+        """The shared hash: Knuth multiply with a uint32 wrap, then mod.
+
+        ``lookup`` computes the identical quantity in uint32 arithmetic
+        (:meth:`_hash_traced`); the wrap must happen *before* the modulo on
+        both sides or roughly half of all keys (those whose wrapped product
+        lands >= 2^31) probe different slots at build vs lookup time.  No
+        ``abs`` anywhere: ``abs(INT32_MIN)`` is itself negative in int32.
+        """
+        return ((int(key) & 0xFFFFFFFF) * 2654435761 & 0xFFFFFFFF) % capacity
+
+    def _hash_traced(self, keys: jax.Array) -> jax.Array:
+        """uint32-wrap hash of a key wavefront -> int32 slots in [0, cap)."""
+        h = keys.astype(jnp.uint32) * jnp.uint32(2654435761)
+        return (h % jnp.uint32(self.capacity)).astype(jnp.int32)
+
+    @staticmethod
     def build(keys, values, *, capacity: int | None = None,
               probes: int = 8, **bam_kw):
         """Host-side bulk build; returns (kv, index_table, BamState)."""
@@ -520,8 +624,14 @@ class BamKVStore:
         rows = np.full((capacity,), -1, np.int32)      # value row per slot
         store_vals = np.zeros((capacity, value_elems), values.dtype)
         for i, k in enumerate(keys):
-            h = (int(k) * 2654435761) % capacity
-            for j in range(capacity):
+            if k == -1:
+                raise ValueError(
+                    "key -1 is reserved as the empty-slot sentinel")
+            h = BamKVStore._hash_host(k, capacity)
+            # Place within lookup's probe window only: a key parked further
+            # out would be silently unfindable (lookup unrolls `probes`
+            # slots) — fail loudly instead.
+            for j in range(min(probes, capacity)):
                 s = (h + j) % capacity
                 if table[s] == -1 or table[s] == k:
                     table[s] = k
@@ -529,7 +639,10 @@ class BamKVStore:
                     store_vals[s] = values[i]
                     break
             else:
-                raise ValueError("kv store full")
+                raise ValueError(
+                    f"kv store: key {int(k)} cannot be placed within "
+                    f"probes={probes} slots of its home slot; raise "
+                    "capacity or probes")
         bam_kw.setdefault("block_elems", value_elems)
         arr, st = BamArray.build(store_vals, **bam_kw)
         kv = BamKVStore(array=arr, capacity=capacity,
@@ -540,14 +653,14 @@ class BamKVStore:
                ) -> Tuple[jax.Array, jax.Array, BamState]:
         """Return (values, found_mask, state') for a wavefront of keys."""
         cap = self.capacity
-        h = (keys.astype(jnp.uint32) * jnp.uint32(2654435761)).astype(jnp.int32)
-        h = jnp.abs(h) % cap
+        h = self._hash_traced(keys)
         slot = jnp.full_like(keys, -1)
         for j in range(self.probes):                   # static unroll, small
             s = (h + j) % cap
             match = (table[s] == keys) & (slot < 0)
             slot = jnp.where(match, s, slot)
-        found = slot >= 0
+        # key -1 would "match" every empty slot (the sentinel); never found.
+        found = (slot >= 0) & (keys != -1)
         base = jnp.where(found, slot, 0) * self.value_elems
         # one wavefront read per value element column (value_elems small) —
         # flatten to a single wavefront of element indices instead:

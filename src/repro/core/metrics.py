@@ -4,6 +4,15 @@ I/O amplification = bytes moved from the storage tier / bytes the compute
 actually consumed.  The paper's headline data-analytics result is that the
 CPU-centric model ships whole columns (6.34x-10.36x amplification on the
 taxi queries) while BaM ships cache lines on demand.
+
+Per-device channels (paper §IV-A): every counter that touches the storage
+tier also has a ``(n_devices,)`` per-device breakdown, so device skew —
+one straggler SSD gating the wavefront — is observable instead of being
+averaged away.  Device time is split by direction (``read_time_s`` vs
+``write_time_s``): demand reads and readahead charge the read clock,
+write-backs charge the write clock, and ``sim_time_s`` stays their sum, so
+``read_iops`` no longer dilutes as soon as write-backs or prefetch are
+active.
 """
 from __future__ import annotations
 
@@ -24,20 +33,39 @@ class IOMetrics:
     bytes_to_storage: jax.Array
     doorbells: jax.Array         # batched ring-tail updates (1 per queue per round)
     sim_time_s: jax.Array        # simulated device service time accumulated
+    read_time_s: jax.Array       # read-direction share (demand + readahead)
+    write_time_s: jax.Array      # write-direction share (write-backs, flush)
     max_queue_depth: jax.Array   # high-watermark of in-flight requests
     prefetch_issued: jax.Array   # cache lines fetched speculatively (readahead)
     prefetch_hits: jax.Array     # demand line-hits served by a prefetched line
+    # Per-device channel breakdown, all shape (n_devices,).
+    dev_reads: jax.Array         # lines fetched per device (demand + readahead)
+    dev_writes: jax.Array        # lines written back per device
+    dev_bytes: jax.Array         # bytes moved per device (both directions)
+    dev_time_s: jax.Array        # per-device busy time (the straggler signal)
+    dev_max_depth: jax.Array     # per-device in-flight high-watermark, int32
 
     @staticmethod
-    def zeros() -> "IOMetrics":
-        f = lambda: jnp.zeros((), jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32)
+    def zeros(n_devices: int = 1) -> "IOMetrics":
+        ftype = jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
+        f = lambda: jnp.zeros((), ftype)
         i = lambda: jnp.zeros((), jnp.int32)
         return IOMetrics(
             requests=f(), bytes_requested=f(), hits=f(), misses=f(),
             bytes_from_storage=f(), write_ops=f(), bytes_to_storage=f(),
-            doorbells=f(), sim_time_s=f(), max_queue_depth=i(),
+            doorbells=f(), sim_time_s=f(), read_time_s=f(), write_time_s=f(),
+            max_queue_depth=i(),
             prefetch_issued=f(), prefetch_hits=f(),
+            dev_reads=jnp.zeros((n_devices,), ftype),
+            dev_writes=jnp.zeros((n_devices,), ftype),
+            dev_bytes=jnp.zeros((n_devices,), ftype),
+            dev_time_s=jnp.zeros((n_devices,), ftype),
+            dev_max_depth=jnp.zeros((n_devices,), jnp.int32),
         )
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.dev_reads.shape[0])
 
     # Derived quantities (host-side, after device_get) -------------------
     def amplification(self) -> float:
@@ -49,13 +77,34 @@ class IOMetrics:
         return float(self.hits) / tot if tot > 0 else 0.0
 
     def read_iops(self) -> float:
-        t = float(self.sim_time_s)
-        return float(self.misses) / t if t > 0 else 0.0
+        """Lines fetched (demand + readahead) per second of *read* time.
+
+        Write-backs and their service time are excluded from both numerator
+        and denominator, so background write traffic no longer deflates the
+        reported read throughput.  Falls back to ``sim_time_s`` for states
+        (e.g. external accumulators) that never split the clocks.
+        """
+        fetched = float(self.misses) + float(self.prefetch_issued)
+        t = float(self.read_time_s)
+        if t <= 0.0:
+            t = float(self.sim_time_s)
+        return fetched / t if t > 0 else 0.0
 
     def prefetch_accuracy(self) -> float:
         """Fraction of speculatively fetched lines later used by demand."""
         issued = float(self.prefetch_issued)
         return float(self.prefetch_hits) / issued if issued > 0 else 0.0
+
+    def straggler_gap(self) -> float:
+        """Max over mean of per-device busy time (1.0 = perfectly balanced).
+
+        The Fig. 7 skew observable: a uniform stream keeps this near 1;
+        a Zipfian stream concentrates load on few channels and the gap
+        grows with it.  0.0 when no device time has been charged.
+        """
+        t = jax.device_get(self.dev_time_s)
+        mean = float(t.mean())
+        return float(t.max()) / mean if mean > 0 else 0.0
 
     def summary(self) -> dict:
         return {
@@ -70,9 +119,19 @@ class IOMetrics:
             "amplification": self.amplification(),
             "doorbells": float(self.doorbells),
             "sim_time_s": float(self.sim_time_s),
+            "read_time_s": float(self.read_time_s),
+            "write_time_s": float(self.write_time_s),
             "read_iops": self.read_iops(),
             "max_queue_depth": int(self.max_queue_depth),
             "prefetch_issued": float(self.prefetch_issued),
             "prefetch_hits": float(self.prefetch_hits),
             "prefetch_accuracy": self.prefetch_accuracy(),
+            "n_devices": self.n_devices,
+            "dev_reads": [float(x) for x in jax.device_get(self.dev_reads)],
+            "dev_writes": [float(x) for x in jax.device_get(self.dev_writes)],
+            "dev_bytes": [float(x) for x in jax.device_get(self.dev_bytes)],
+            "dev_time_s": [float(x) for x in jax.device_get(self.dev_time_s)],
+            "dev_max_depth": [int(x)
+                              for x in jax.device_get(self.dev_max_depth)],
+            "straggler_gap": self.straggler_gap(),
         }

@@ -20,8 +20,18 @@ deterministic prefix-sum:
 Ring semantics (wrap-around, full-queue back-pressure, head advancement on
 completion, per-queue doorbells) are kept faithfully; the *device* side is a
 synchronous drain whose wall-clock cost is taken from the
-:mod:`repro.core.ssd` Little's-law model.  Requests are distributed over the
-queues round-robin, matching the paper's micro-benchmark setup (§IV-A).
+:mod:`repro.core.ssd` Little's-law model.
+
+Per-device channels (paper §IV-A, Fig. 7): the queue pool is partitioned
+into ``n_devices`` equal groups — the paper's one-SQ/CQ-pair-per-SSD layout
+generalised to a group of rings per SSD.  Each command is routed to its
+block key's device (:func:`repro.core.ssd.device_of_block` striping), then
+round-robin *within* that device's group, matching the paper's
+micro-benchmark setup (§IV-A).  Back-pressure is therefore per device: one
+slow or overloaded SSD fills only its own rings and drops only its own
+commands, leaving the other channels flowing.  With ``n_devices=1`` (the
+default) the whole pool is one group and behaviour is exactly the classic
+single-device round-robin.
 
 Everything is fixed-shape and jit-safe: monotonic 32-bit virtual heads/tails
 (slot = counter % depth), masked scatters, no data-dependent shapes.
@@ -42,21 +52,31 @@ from typing import Callable, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.ssd import device_of_block
 from repro.utils import pytree_dataclass
 
 __all__ = ["QueueState", "make_queues", "enqueue", "service_all",
-           "SubmitReceipt", "PRIO_DEMAND", "PRIO_READAHEAD"]
+           "SubmitReceipt", "PRIO_DEMAND", "PRIO_READAHEAD",
+           "in_flight", "in_flight_per_device"]
 
 PRIO_DEMAND = 0      # demand reads and write-backs
 PRIO_READAHEAD = 1   # speculative readahead fills (drain last, drop first)
 
 
-@pytree_dataclass(meta_fields=("num_queues", "depth"))
+@pytree_dataclass(meta_fields=("num_queues", "depth", "n_devices",
+                                "stripe_blocks"))
 class QueueState:
-    """A pool of NVMe submission/completion queue pairs living "in HBM"."""
+    """A pool of NVMe submission/completion queue pairs living "in HBM".
+
+    The pool is split into ``n_devices`` contiguous groups of
+    ``num_queues // n_devices`` rings each; queues
+    ``[d*group, (d+1)*group)`` belong to device ``d``.
+    """
 
     num_queues: int
     depth: int
+    n_devices: int
+    stripe_blocks: int
     # Submission-queue entries. key < 0 means the slot is free.
     sq_key: jax.Array        # (num_queues, depth) int32 — block key of the command
     sq_dst: jax.Array        # (num_queues, depth) int32 — destination cache slot (or -1)
@@ -65,27 +85,46 @@ class QueueState:
     # Monotonic virtual pointers (never wrapped; slot = ptr % depth).
     sq_tail: jax.Array       # (num_queues,) int32
     sq_head: jax.Array       # (num_queues,) int32
-    # Round-robin dispatch pointer so successive wavefronts spread evenly.
-    rr_ptr: jax.Array        # () int32
+    # Per-device round-robin dispatch pointer within each device's group.
+    rr_ptr: jax.Array        # (n_devices,) int32
     # Counters (the observability the IOPS benchmarks read).
     ticket_total: jax.Array  # () int32 — cumulative tickets issued (paper's atomic ctr)
     doorbells: jax.Array     # () int32 — batched doorbell register writes
     completions: jax.Array   # () int32 — CQ entries consumed
     dropped: jax.Array       # () int32 — requests rejected because every ring was full
+    dev_dropped: jax.Array   # (n_devices,) int32 — drops per device channel
+
+    @property
+    def group_size(self) -> int:
+        """SQ rings per device."""
+        return self.num_queues // self.n_devices
 
 
-def make_queues(num_queues: int, depth: int) -> QueueState:
+def make_queues(num_queues: int, depth: int, n_devices: int = 1,
+                stripe_blocks: int = 1) -> QueueState:
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    if stripe_blocks < 1:
+        raise ValueError(f"stripe_blocks must be >= 1, got {stripe_blocks}")
+    if num_queues % n_devices != 0:
+        raise ValueError(
+            f"num_queues ({num_queues}) must be a multiple of n_devices "
+            f"({n_devices}) so every device gets an equal ring group")
     z = lambda: jnp.zeros((), jnp.int32)
     return QueueState(
         num_queues=num_queues,
         depth=depth,
+        n_devices=n_devices,
+        stripe_blocks=stripe_blocks,
         sq_key=jnp.full((num_queues, depth), -1, jnp.int32),
         sq_dst=jnp.full((num_queues, depth), -1, jnp.int32),
         sq_is_write=jnp.zeros((num_queues, depth), bool),
         sq_prio=jnp.zeros((num_queues, depth), jnp.int32),
         sq_tail=jnp.zeros((num_queues,), jnp.int32),
         sq_head=jnp.zeros((num_queues,), jnp.int32),
-        rr_ptr=z(), ticket_total=z(), doorbells=z(), completions=z(), dropped=z(),
+        rr_ptr=jnp.zeros((n_devices,), jnp.int32),
+        ticket_total=z(), doorbells=z(), completions=z(), dropped=z(),
+        dev_dropped=jnp.zeros((n_devices,), jnp.int32),
     )
 
 
@@ -110,16 +149,21 @@ def enqueue(
 ) -> Tuple[QueueState, SubmitReceipt]:
     """Submit a wavefront of commands into the SQ rings.
 
-    The i-th *valid* request (in compact prefix-sum order — the ticket) goes
-    to queue ``(rr_ptr + i) % num_queues`` at that queue's next virtual slot.
-    Requests that would overflow a full ring are dropped and counted; callers
-    treat a drop as "retry next wavefront" (the paper's thread would spin).
+    Each valid request is routed to its block key's *device* (striping by
+    :func:`repro.core.ssd.device_of_block`), then the i-th valid request
+    *of that device* (in compact prefix-sum order — the per-device ticket)
+    goes to queue ``group_base + (rr_ptr[dev] + i) % group_size`` at that
+    queue's next virtual slot.  Requests that would overflow a full ring
+    are dropped and counted — per device, so one saturated channel never
+    back-pressures the others; callers treat a drop as "retry next
+    wavefront" (the paper's thread would spin).
 
     ``prio`` tags the lane: demand commands (``PRIO_DEMAND``) drain before
     readahead (``PRIO_READAHEAD``) in :func:`service_all`.
     """
     n = keys.shape[0]
-    nq, depth = qs.num_queues, qs.depth
+    nq, depth, nd = qs.num_queues, qs.depth, qs.n_devices
+    gsize = qs.group_size
     if valid is None:
         valid = keys >= 0
     else:
@@ -130,13 +174,21 @@ def enqueue(
         is_write = jnp.zeros((n,), bool)
     prio = jnp.broadcast_to(jnp.asarray(prio, jnp.int32), (n,))
 
-    # --- ticket assignment (exclusive prefix sum over the wavefront) -------
-    ticket = jnp.cumsum(valid.astype(jnp.int32)) - valid.astype(jnp.int32)  # (n,)
-    k = jnp.sum(valid.astype(jnp.int32))                                    # () accepted upper bound
+    # --- device routing + ticket assignment (per-device exclusive cumsum) --
+    dev = device_of_block(keys, nd, qs.stripe_blocks)       # (n,)
+    onehot = (dev[:, None] == jnp.arange(nd, dtype=jnp.int32)[None, :]) \
+        & valid[:, None]                                    # (n, nd)
+    onehot = onehot.astype(jnp.int32)
+    # i-th valid command *of its device* — the paper's atomic ticket, one
+    # counter per device channel.
+    ticket = jnp.take_along_axis(
+        jnp.cumsum(onehot, axis=0) - onehot, dev[:, None], axis=1)[:, 0]
+    k_dev = jnp.sum(onehot, axis=0)                         # (nd,) per-device count
+    k = jnp.sum(k_dev)                                      # () accepted upper bound
 
-    queue = (qs.rr_ptr + ticket) % nq                       # (n,)
+    queue = dev * gsize + (qs.rr_ptr[dev] + ticket) % gsize  # (n,)
     # position within this wavefront's allocation for that queue
-    pos_in_q = ticket // nq                                 # (n,)
+    pos_in_q = ticket // gsize                              # (n,)
     vslot = qs.sq_tail[queue] + pos_in_q                    # (n,) monotonic slot
 
     # Ring-full back-pressure: a command fits iff vslot - head < depth.
@@ -168,16 +220,21 @@ def enqueue(
         n_accepted=jnp.sum(accepted.astype(jnp.int32)),
         n_doorbells=n_doorbells,
     )
+    drops = valid & ~fits
+    dev_drops = jnp.zeros((nd,), jnp.int32).at[dev].add(
+        drops.astype(jnp.int32))
     qs2 = QueueState(
-        num_queues=nq, depth=depth,
+        num_queues=nq, depth=depth, n_devices=nd,
+        stripe_blocks=qs.stripe_blocks,
         sq_key=sq_key, sq_dst=sq_dst, sq_is_write=sq_is_write,
         sq_prio=sq_prio,
         sq_tail=sq_tail, sq_head=qs.sq_head,
-        rr_ptr=(qs.rr_ptr + k) % nq,
+        rr_ptr=(qs.rr_ptr + k_dev) % gsize,
         ticket_total=qs.ticket_total + k,
         doorbells=qs.doorbells + n_doorbells,
         completions=qs.completions,
-        dropped=qs.dropped + jnp.sum((valid & ~fits).astype(jnp.int32)),
+        dropped=qs.dropped + jnp.sum(drops.astype(jnp.int32)),
+        dev_dropped=qs.dev_dropped + dev_drops,
     )
     return qs2, receipt
 
@@ -198,6 +255,7 @@ class Completions:
     prio: jax.Array      # (num_queues*depth,) int32
     valid: jax.Array     # (num_queues*depth,) bool
     count: jax.Array     # () int32
+    count_dev: jax.Array  # (n_devices,) int32 — drained per device channel
 
 
 def service_all(qs: QueueState) -> Tuple[QueueState, Completions]:
@@ -206,16 +264,24 @@ def service_all(qs: QueueState) -> Tuple[QueueState, Completions]:
     Returns the drained command list; the caller performs the actual block
     fetch/write against a :class:`~repro.core.storage.BlockStore` (that is
     the DMA) and charges simulated device time via the
-    :class:`~repro.core.ssd.ArrayOfSSDs` cost model.  Completion-side ring
-    maintenance (head advancement, CQ doorbell) is folded into this drain:
-    heads jump to tails, matching a CQ sweep that retires every entry — the
-    paper's "one thread resets markers as far as possible" fast path.
+    :class:`~repro.core.ssd.ArrayOfSSDs` cost model.  The drain is *per
+    device*: ``count_dev`` reports how many commands each device channel
+    retired, so the caller can charge each device its own Little's-law
+    service time and take the max — the straggler, not the average, gates
+    the wavefront.  Completion-side ring maintenance (head advancement, CQ
+    doorbell) is folded into this drain: heads jump to tails, matching a CQ
+    sweep that retires every entry — the paper's "one thread resets markers
+    as far as possible" fast path.
 
     The drain is priority-arbitrated: demand-lane commands come back ahead
     of readahead-lane commands (stable within each class).
     """
     pending = qs.sq_key >= 0
     count = jnp.sum(pending.astype(jnp.int32))
+    # Queues [d*group, (d+1)*group) belong to device d.
+    count_dev = jnp.sum(
+        pending.reshape(qs.n_devices, qs.group_size * qs.depth)
+        .astype(jnp.int32), axis=1)
     flat_pend = pending.reshape(-1)
     flat_prio = qs.sq_prio.reshape(-1)
     flat = (qs.sq_key.reshape(-1), qs.sq_dst.reshape(-1),
@@ -238,10 +304,11 @@ def service_all(qs: QueueState) -> Tuple[QueueState, Completions]:
         has_ra, _arbitrate, lambda f: f, flat)
     comps = Completions(
         keys=keys_o, dst=dst_o, is_write=is_write_o, prio=prio_o,
-        valid=pend_o, count=count,
+        valid=pend_o, count=count, count_dev=count_dev,
     )
     qs2 = QueueState(
-        num_queues=qs.num_queues, depth=qs.depth,
+        num_queues=qs.num_queues, depth=qs.depth, n_devices=qs.n_devices,
+        stripe_blocks=qs.stripe_blocks,
         sq_key=jnp.full_like(qs.sq_key, -1),
         sq_dst=jnp.full_like(qs.sq_dst, -1),
         sq_is_write=jnp.zeros_like(qs.sq_is_write),
@@ -253,6 +320,7 @@ def service_all(qs: QueueState) -> Tuple[QueueState, Completions]:
         doorbells=qs.doorbells + jnp.where(count > 0, jnp.int32(1), jnp.int32(0)),  # CQ doorbell
         completions=qs.completions + count,
         dropped=qs.dropped,
+        dev_dropped=qs.dev_dropped,
     )
     return qs2, comps
 
@@ -260,3 +328,9 @@ def service_all(qs: QueueState) -> Tuple[QueueState, Completions]:
 def in_flight(qs: QueueState) -> jax.Array:
     """Current total queue depth in use (the Little's-law Q_d observable)."""
     return jnp.sum(qs.sq_tail - qs.sq_head)
+
+
+def in_flight_per_device(qs: QueueState) -> jax.Array:
+    """Per-device in-flight depth: (n_devices,) — each channel's own Q_d."""
+    return jnp.sum((qs.sq_tail - qs.sq_head)
+                   .reshape(qs.n_devices, qs.group_size), axis=1)

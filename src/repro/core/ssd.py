@@ -89,6 +89,44 @@ SSD_PRESETS: dict[str, SSDSpec] = {
 }
 
 
+# --- block -> device striping ------------------------------------------------
+def device_of_block(keys, n_devices: int, stripe_blocks: int = 1):
+    """Stripe block keys across the array's devices (round-robin by stripe).
+
+    ``stripe_blocks`` is the striping unit: device = ``(key // stripe) %
+    n_devices``.  Unit 1 (the default) interleaves at cache-line grain and
+    balances even popularity-skewed streams (hot keys scatter over all
+    channels); coarse stripes model shard/column-aligned placement, where a
+    hot region lives on one device and shows up as a straggler.
+
+    Works on Python ints and on traced int arrays; invalid keys (< 0) map to
+    device 0 so they can be masked downstream without out-of-range scatters.
+    The same function routes SQ commands (:mod:`repro.core.queues`) and
+    charges per-device service time, so the two can never disagree.
+    """
+    if isinstance(keys, int):
+        return (keys // stripe_blocks) % n_devices if keys >= 0 else 0
+    import jax.numpy as jnp
+
+    k = jnp.asarray(keys)
+    return jnp.where(k >= 0, (k // stripe_blocks) % n_devices,
+                     0).astype(jnp.int32)
+
+
+def device_histogram(keys, n_devices: int, mask=None,
+                     stripe_blocks: int = 1):
+    """Count valid block keys per device: (n_devices,) int32 (jit-safe)."""
+    import jax.numpy as jnp
+
+    k = jnp.asarray(keys)
+    valid = k >= 0
+    if mask is not None:
+        valid = valid & mask
+    dev = device_of_block(k, n_devices, stripe_blocks)
+    return jnp.zeros((n_devices,), jnp.int32).at[dev].add(
+        valid.astype(jnp.int32))
+
+
 # --- Little's law ------------------------------------------------------------
 def required_queue_depth(target_iops: float, latency_s: float) -> int:
     """Q_d = T x L (paper §II-C)."""
@@ -119,11 +157,17 @@ def min_ssds_for_target(spec: SSDSpec, block_bytes: int, target_iops: float,
 
 @dataclasses.dataclass(frozen=True)
 class ArrayOfSSDs:
-    """N identical devices behind one accelerator link (the BaM prototype shape)."""
+    """N identical devices behind one accelerator link (the BaM prototype shape).
+
+    ``stripe_blocks`` sets the block→device striping unit (see
+    :func:`device_of_block`): 1 = cache-line interleave (BaM's layout),
+    larger = shard-aligned placement.
+    """
 
     spec: SSDSpec
     n_devices: int = 1
     accel_link_bw: float = PCIE_GEN4_X16_BW  # GPU/TPU-side ingest bound
+    stripe_blocks: int = 1
 
     def peak_read_iops(self, block_bytes: int) -> float:
         dev = self.n_devices * min(
@@ -171,6 +215,65 @@ class ArrayOfSSDs:
             concurrent = jnp.minimum(concurrent, float(queue_depth_limit))
         rate = concurrent / (self.spec.latency_s + concurrent / peak)
         return jnp.where(n > 0, n / jnp.maximum(rate, 1e-30), 0.0)
+
+    # --- per-device channel model (paper §IV-A, Fig. 7) ------------------
+    def per_device_peak_iops(self, block_bytes: int, *, write: bool = False
+                             ) -> float:
+        """One device's peak, capped by its own x4 link (no array ceiling)."""
+        iops = (self.spec.write_iops if write else self.spec.read_iops)(
+            block_bytes)
+        return min(iops, self.spec.link_bw / block_bytes)
+
+    def service_time_per_device(self, n_per_device, block_bytes: int, *,
+                                queue_depth_limit: int | None = None,
+                                write: bool = False):
+        """Wavefront drain time with per-device channels (host-side).
+
+        ``n_per_device`` is the per-device request histogram.  Each device
+        drains its own share at its own Little's-law rate (concurrency
+        capped by *its* queue group's depth); the wavefront completes when
+        the slowest device does — ``max`` over devices, not an average — so
+        skew and stragglers are visible.  The accelerator-side x16 link is
+        an aggregate floor: no matter how many devices, bytes must cross it.
+
+        Returns ``(t_total, t_per_device)``.
+        """
+        assert len(n_per_device) == self.n_devices
+        peak = self.per_device_peak_iops(block_bytes, write=write)
+        t_dev = []
+        total = 0.0
+        for n in n_per_device:
+            n = float(n)
+            total += n
+            if n <= 0:
+                t_dev.append(0.0)
+                continue
+            conc = n if queue_depth_limit is None else min(
+                n, float(queue_depth_limit))
+            rate = conc / (self.spec.latency_s + conc / peak)
+            t_dev.append(n / rate)
+        t_link = total * block_bytes / self.accel_link_bw
+        return max(max(t_dev), t_link), t_dev
+
+    def service_time_per_device_traced(self, n_per_device, block_bytes: int, *,
+                                       queue_depth_limit: int | None = None,
+                                       write: bool = False):
+        """Jit-safe :meth:`service_time_per_device` for traced histograms.
+
+        ``n_per_device`` is a traced ``(n_devices,)`` int array; device
+        constants stay static.  Returns ``(t_total, t_per_device)`` float32.
+        """
+        import jax.numpy as jnp
+
+        peak = self.per_device_peak_iops(block_bytes, write=write)
+        n = n_per_device.astype(jnp.float32)
+        conc = n
+        if queue_depth_limit is not None:
+            conc = jnp.minimum(conc, float(queue_depth_limit))
+        rate = conc / (self.spec.latency_s + conc / peak)
+        t_dev = jnp.where(n > 0, n / jnp.maximum(rate, 1e-30), 0.0)
+        t_link = jnp.sum(n) * float(block_bytes) / self.accel_link_bw
+        return jnp.maximum(jnp.max(t_dev), t_link), t_dev
 
     def cost_usd(self, capacity_gb: float) -> float:
         return capacity_gb * self.spec.dollars_per_gb

@@ -58,7 +58,9 @@ class BamGraph:
     def build(indptr: np.ndarray, dst: np.ndarray, *,
               cacheline_bytes: int = 4096, cache_bytes: int = 1 << 20,
               ways: int = 4, ssd: Optional[ArrayOfSSDs] = None,
-              backend: str = "sim") -> "BamGraph":
+              n_devices: int = 1, backend: str = "sim") -> "BamGraph":
+        """``n_devices`` stripes the edge array over that many SSD channels
+        (ignored when an explicit ``ssd`` array is passed)."""
         n_nodes = len(indptr) - 1
         n_edges = len(dst)
         block_elems = max(cacheline_bytes // 4, 1)
@@ -67,7 +69,7 @@ class BamGraph:
             dst.astype(np.int32).reshape(1, -1), block_elems=block_elems,
             num_sets=max(num_lines // ways, 1), ways=ways,
             num_queues=16, queue_depth=1024,
-            ssd=ssd or ArrayOfSSDs(INTEL_OPTANE_P5800X, 1),
+            ssd=ssd or ArrayOfSSDs(INTEL_OPTANE_P5800X, n_devices),
             backend=backend)
         edge_src = np.repeat(np.arange(n_nodes, dtype=np.int32),
                              np.diff(indptr))

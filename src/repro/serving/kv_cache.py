@@ -145,11 +145,12 @@ class PagedKVManager:
         if n:
             import dataclasses as dc
             m = self.metrics
+            t = self.ssd.service_time(n, max(self.page_bytes, 1), write=True)
             self.metrics = dc.replace(
                 m, write_ops=m.write_ops + n,
                 bytes_to_storage=m.bytes_to_storage + n * self.page_bytes,
-                sim_time_s=m.sim_time_s + self.ssd.service_time(
-                    n, max(self.page_bytes, 1), write=True))
+                sim_time_s=m.sim_time_s + t,
+                write_time_s=m.write_time_s + t)
         return cache, n
 
     def ensure_resident(self, cache):
@@ -157,10 +158,11 @@ class PagedKVManager:
         if n:
             import dataclasses as dc
             m = self.metrics
+            t = self.ssd.service_time(n, max(self.page_bytes, 1))
             self.metrics = dc.replace(
                 m, misses=m.misses + n,
                 bytes_from_storage=m.bytes_from_storage
                 + n * self.page_bytes,
-                sim_time_s=m.sim_time_s + self.ssd.service_time(
-                    n, max(self.page_bytes, 1)))
+                sim_time_s=m.sim_time_s + t,
+                read_time_s=m.read_time_s + t)
         return cache, n

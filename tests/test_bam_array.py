@@ -94,3 +94,100 @@ def test_kv_store(rng):
     assert found.tolist() == [True, True, False]
     np.testing.assert_allclose(np.asarray(out[0]), vals[1], rtol=1e-6)
     np.testing.assert_allclose(np.asarray(out[1]), vals[3], rtol=1e-6)
+
+
+def test_kv_store_hash_consistency_regression(rng):
+    """Keys whose uint32-wrapped hash lands >= 2^31 (e.g. key 1: wrapped
+    product 2654435761) used to probe different slots at build vs lookup
+    (full-precision product vs wrap+int32+abs) and come back not-found."""
+    from repro.core import BamKVStore
+    keys = np.asarray([1, 3, 17, 123, 99], np.int32)
+    vals = rng.standard_normal((5, 8)).astype(np.float32)
+    kv, table, st = BamKVStore.build(keys, vals, capacity=64,
+                                     num_sets=4, ways=2)
+    out, found, st = kv.lookup(st, table, jnp.asarray(keys))
+    assert found.tolist() == [True] * 5
+    np.testing.assert_allclose(np.asarray(out), vals, rtol=1e-6)
+
+
+def test_kv_store_adversarial_keys(rng):
+    """High hash bits, INT32_MIN-adjacent (abs(INT32_MIN) is negative!),
+    INT32_MAX: every inserted key must be found with its value."""
+    from repro.core import BamKVStore
+    keys = np.asarray(
+        [1, 2, -2147483648, -2147483647, 2147483647, 2147483646,
+         0x40000000, 715827882, -809510276, 12345], np.int32)
+    vals = rng.standard_normal((len(keys), 4)).astype(np.float32)
+    cap = 64
+    kv, table, st = BamKVStore.build(keys, vals, capacity=cap, probes=cap,
+                                     num_sets=8, ways=4)
+    out, found, st = kv.lookup(st, table, jnp.asarray(keys))
+    assert found.tolist() == [True] * len(keys)
+    np.testing.assert_allclose(np.asarray(out), vals, rtol=1e-6)
+
+
+def test_kv_store_build_rejects_keys_beyond_probe_window(rng):
+    """A probe cluster longer than `probes` must fail at build time, not
+    silently insert keys that lookup can never find."""
+    from repro.core import BamKVStore
+    cap, probes = 16, 4
+    home = BamKVStore._hash_host(3, cap)
+    # keys >= 0, != -1, all hashing to the same home slot
+    colliders = [k for k in range(1, 20000)
+                 if BamKVStore._hash_host(k, cap) == home][:probes + 1]
+    assert len(colliders) == probes + 1
+    vals = rng.standard_normal((len(colliders), 4)).astype(np.float32)
+    with pytest.raises(ValueError, match="probes"):
+        BamKVStore.build(np.asarray(colliders, np.int32), vals,
+                         capacity=cap, probes=probes, num_sets=4, ways=2)
+    # one fewer collider fits, and every key is findable at default reach
+    kv, table, st = BamKVStore.build(
+        np.asarray(colliders[:probes], np.int32), vals[:probes],
+        capacity=cap, probes=probes, num_sets=4, ways=2)
+    _, found, _ = kv.lookup(st, table,
+                            jnp.asarray(colliders[:probes], jnp.int32))
+    assert found.tolist() == [True] * probes
+
+
+def test_kv_store_sentinel_key_rejected_and_never_found(rng):
+    """-1 is the empty-slot sentinel: build rejects it, and looking it up
+    must not 'match' an empty slot."""
+    from repro.core import BamKVStore
+    vals = rng.standard_normal((2, 4)).astype(np.float32)
+    with pytest.raises(ValueError, match="sentinel"):
+        BamKVStore.build(np.asarray([-1, 5], np.int32), vals,
+                         num_sets=4, ways=2)
+    kv, table, st = BamKVStore.build(np.asarray([5, 9], np.int32), vals,
+                                     num_sets=4, ways=2)
+    _, found, _ = kv.lookup(st, table, jnp.asarray([-1, 5], jnp.int32))
+    assert found.tolist() == [False, True]
+
+
+def test_kv_store_duplicate_keys_last_writer_wins(rng):
+    from repro.core import BamKVStore
+    keys = np.asarray([5, 9, 5], np.int32)
+    vals = rng.standard_normal((3, 4)).astype(np.float32)
+    kv, table, st = BamKVStore.build(keys, vals, num_sets=4, ways=2)
+    out, found, st = kv.lookup(st, table, jnp.asarray([5, 9], jnp.int32))
+    assert found.tolist() == [True, True]
+    np.testing.assert_allclose(np.asarray(out[0]), vals[2], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[1]), vals[1], rtol=1e-6)
+
+
+@given(st.lists(st.integers(-2**31, 2**31 - 1),
+                min_size=1, max_size=24, unique=True))
+@settings(max_examples=60, deadline=None)
+def test_kv_store_roundtrip_property(keys):
+    """100% of inserted keys are found, for arbitrary int32 keys
+    (probes=capacity so linear-probe clusters can't hide a key)."""
+    from repro.core import BamKVStore
+    rng = np.random.default_rng(0)
+    keys = [k for k in keys if k != -1] or [7]   # -1 is the empty sentinel
+    keys = np.asarray(keys, np.int64).astype(np.int32)
+    vals = rng.standard_normal((len(keys), 4)).astype(np.float32)
+    cap = max(2 * len(keys), 16)
+    kv, table, st = BamKVStore.build(keys, vals, capacity=cap, probes=cap,
+                                     num_sets=8, ways=4)
+    out, found, st = kv.lookup(st, table, jnp.asarray(keys))
+    assert bool(np.asarray(found).all())
+    np.testing.assert_allclose(np.asarray(out), vals, rtol=1e-6)

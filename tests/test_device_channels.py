@@ -1,0 +1,215 @@
+"""Per-device I/O channels: routing, back-pressure, straggler math, metrics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import BamArray, queues as Q
+from repro.core.ssd import (ArrayOfSSDs, INTEL_OPTANE_P5800X,
+                            device_histogram, device_of_block)
+
+
+# ------------------------------------------------------------ routing ------
+def test_routing_determinism():
+    """Every accepted command lands in its key's device's queue group."""
+    nd, gsize, depth = 4, 2, 16
+    qs = Q.make_queues(nd * gsize, depth, n_devices=nd)
+    keys = jnp.arange(64, dtype=jnp.int32)
+    qs, rec = Q.enqueue(qs, keys)
+    dev = np.asarray(device_of_block(keys, nd))
+    queue = np.asarray(rec.queue)
+    acc = np.asarray(rec.accepted)
+    assert acc.all()
+    np.testing.assert_array_equal(queue[acc] // gsize, dev[acc])
+    # rings actually contain the routed keys: group g holds keys ≡ g (mod nd)
+    ring = np.asarray(qs.sq_key).reshape(nd, gsize * depth)
+    for d in range(nd):
+        got = ring[d][ring[d] >= 0]
+        assert (got % nd == d).all()
+
+
+def test_routing_respects_stripe_unit():
+    nd, stripe = 2, 8
+    qs = Q.make_queues(4, 16, n_devices=nd, stripe_blocks=stripe)
+    keys = jnp.asarray([0, 7, 8, 15, 16, 23], jnp.int32)
+    qs, rec = Q.enqueue(qs, keys)
+    want_dev = np.asarray([0, 0, 1, 1, 0, 0])
+    np.testing.assert_array_equal(np.asarray(rec.queue) // 2, want_dev)
+
+
+def test_single_device_matches_classic_round_robin():
+    """n_devices=1 reduces field-for-field to the whole-pool round-robin
+    (tails, ring contents, receipt) of a 1-group pool — the back-compat
+    contract for every pre-channel caller."""
+    keys = jnp.asarray([7, 3, 3, -1, 12, 9, 0, 5], jnp.int32)
+    qs_a, rec_a = Q.enqueue(Q.make_queues(4, 8), keys)
+    qs_b, rec_b = Q.enqueue(Q.make_queues(4, 8, n_devices=1,
+                                          stripe_blocks=16), keys)
+    np.testing.assert_array_equal(np.asarray(qs_a.sq_key),
+                                  np.asarray(qs_b.sq_key))
+    np.testing.assert_array_equal(np.asarray(qs_a.sq_tail),
+                                  np.asarray(qs_b.sq_tail))
+    np.testing.assert_array_equal(np.asarray(rec_a.queue),
+                                  np.asarray(rec_b.queue))
+
+
+@given(st.integers(1, 4), st.integers(2, 8),
+       st.lists(st.lists(st.integers(-2, 100), min_size=1, max_size=24),
+                min_size=1, max_size=6))
+@settings(max_examples=60, deadline=None)
+def test_no_loss_no_duplication_multi_device(nd, depth, waves):
+    """The queue-conservation property holds for every device count."""
+    qs = Q.make_queues(nd * 2, depth, n_devices=nd)
+    submitted, accepted, serviced = 0, 0, []
+    for wave in waves:
+        keys = jnp.asarray(wave, jnp.int32)
+        valid = keys >= 0
+        submitted += int(valid.sum())
+        qs, rec = Q.enqueue(qs, keys)
+        accepted += int(rec.n_accepted)
+        qs, comps = Q.service_all(qs)
+        got = np.asarray(comps.keys)[np.asarray(comps.valid)]
+        serviced.extend(got.tolist())
+        assert int(Q.in_flight(qs)) == 0
+        assert int(comps.count) == int(np.asarray(comps.count_dev).sum())
+    assert int(qs.ticket_total) == submitted
+    assert accepted == len(serviced)
+    assert accepted + int(qs.dropped) == submitted
+    assert int(qs.dropped) == int(np.asarray(qs.dev_dropped).sum())
+
+
+# ------------------------------------------------------- back-pressure -----
+def test_per_device_back_pressure_is_isolated():
+    """Flooding device 0 drops only device-0 commands; device 1 flows."""
+    qs = Q.make_queues(2, 2, n_devices=2)   # 1 ring x depth 2 per device
+    keys = jnp.asarray([0, 2, 4, 6, 1, 3], jnp.int32)  # 4 even, 2 odd
+    qs, rec = Q.enqueue(qs, keys)
+    acc = np.asarray(rec.accepted)
+    assert acc.tolist() == [True, True, False, False, True, True]
+    np.testing.assert_array_equal(np.asarray(qs.dev_dropped), [2, 0])
+    np.testing.assert_array_equal(np.asarray(Q.in_flight_per_device(qs)),
+                                  [2, 2])
+
+
+# ------------------------------------------------- straggler drain math ----
+def test_drain_time_is_max_over_devices():
+    ssd = ArrayOfSSDs(INTEL_OPTANE_P5800X, 4)
+    skew = [4000, 10, 10, 10]
+    t_skew, t_dev = ssd.service_time_per_device(skew, 512)
+    assert t_skew == pytest.approx(max(t_dev))
+    assert t_dev[0] > 10 * max(t_dev[1:])
+    # a balanced split of the same total drains much faster
+    t_flat, _ = ssd.service_time_per_device([1008, 1008, 1007, 1007], 512)
+    assert t_flat < t_skew / 2
+    # traced version agrees with the host version
+    t_tr, t_tr_dev = ssd.service_time_per_device_traced(
+        jnp.asarray(skew, jnp.int32), 512)
+    assert float(t_tr) == pytest.approx(t_skew, rel=1e-5)
+    np.testing.assert_allclose(np.asarray(t_tr_dev), t_dev, rtol=1e-5)
+
+
+def test_queue_group_depth_caps_per_device_concurrency():
+    ssd = ArrayOfSSDs(INTEL_OPTANE_P5800X, 2)
+    uncapped, _ = ssd.service_time_per_device([10000, 10000], 512)
+    capped, _ = ssd.service_time_per_device([10000, 10000], 512,
+                                            queue_depth_limit=8)
+    assert capped > uncapped * 5       # starved of in-flight parallelism
+
+
+def test_accel_link_is_aggregate_floor():
+    """Many devices can't beat the x16 ingest link."""
+    ssd = ArrayOfSSDs(INTEL_OPTANE_P5800X, 16)
+    n = [100_000] * 16
+    t, _ = ssd.service_time_per_device(n, 4096)
+    link_t = 16 * 100_000 * 4096 / ssd.accel_link_bw
+    assert t >= link_t
+
+
+# --------------------------------------------------- end-to-end metrics ----
+def _build(nd, rng, n_blocks=64, line=8, **kw):
+    data = rng.standard_normal((n_blocks, line)).astype(np.float32)
+    kw.setdefault("num_sets", 4)
+    kw.setdefault("ways", 2)
+    arr, st = BamArray.build(
+        data, block_elems=line,
+        ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, nd), **kw)
+    return data, arr, st
+
+
+@pytest.mark.parametrize("nd", [1, 2, 4])
+def test_read_correct_any_device_count(nd, rng):
+    data, arr, st = _build(nd, rng)
+    flat = data.reshape(-1)
+    idx = rng.integers(-5, flat.size, 128).astype(np.int32)
+    vals, st = jax.jit(arr.read)(st, jnp.asarray(idx))
+    want = np.where(idx >= 0, flat[np.clip(idx, 0, flat.size - 1)], 0.0)
+    np.testing.assert_allclose(np.asarray(vals), want, rtol=1e-6)
+
+
+def test_per_device_counters_add_up(rng):
+    nd = 4
+    data, arr, st = _build(nd, rng)
+    idx = jnp.arange(0, 64 * 8, 8, dtype=jnp.int32)   # one elem per block
+    _, st = arr.read(st, idx)
+    m = st.metrics
+    s = m.summary()
+    assert s["n_devices"] == nd
+    assert sum(s["dev_reads"]) == s["misses"]
+    np.testing.assert_array_equal(s["dev_reads"], [16.0] * nd)
+    assert sum(s["dev_bytes"]) == s["bytes_from_storage"]
+    # per-device busy time: balanced load -> no straggler
+    assert s["straggler_gap"] == pytest.approx(1.0, abs=1e-3)
+    assert s["read_time_s"] > 0 and s["write_time_s"] == 0
+    assert s["sim_time_s"] == pytest.approx(
+        s["read_time_s"] + s["write_time_s"], rel=1e-6)
+
+
+def test_skewed_stream_shows_straggler(rng):
+    """All traffic on one device: drain time ~= its solo drain time, and
+    the other channels stay idle."""
+    nd = 4
+    data, arr, st = _build(nd, rng, n_blocks=64)
+    # blocks 0, 4, 8, ... all stripe to device 0
+    idx = jnp.asarray([b * 8 for b in range(0, 64, nd)], jnp.int32)
+    _, st = arr.read(st, idx)
+    s = st.metrics.summary()
+    assert s["dev_reads"][0] == s["misses"] > 0
+    assert s["dev_reads"][1:] == [0.0] * (nd - 1)
+    assert s["dev_time_s"][0] == pytest.approx(s["read_time_s"], rel=1e-6)
+    assert s["dev_time_s"][1:] == [0.0] * (nd - 1)
+    assert s["straggler_gap"] == pytest.approx(nd, rel=1e-3)
+
+
+def test_flush_goes_through_queue_layer(rng):
+    """Shutdown write-backs ring doorbells and show up in queue depth."""
+    data, arr, st = _build(1, rng)
+    idx = jnp.asarray([3, 77, 100], jnp.int32)
+    st = arr.write(st, idx, jnp.asarray([1.5, -2.0, 9.0]))
+    m0 = st.metrics.summary()
+    st = arr.flush(st)
+    m1 = st.metrics.summary()
+    assert m1["doorbells"] > m0["doorbells"]
+    assert m1["write_ops"] == m0["write_ops"] + 3
+    assert m1["write_time_s"] > m0["write_time_s"]
+    assert int(st.queues.completions) > 0
+    assert int(Q.in_flight(st.queues)) == 0
+    # the data really hit storage
+    flat = arr.storage.data.reshape(-1)
+    np.testing.assert_allclose(flat[np.asarray(idx)], [1.5, -2.0, 9.0])
+
+
+def test_read_iops_not_diluted_by_writebacks(rng):
+    """read_iops counts fetched lines over *read* time only."""
+    data, arr, st = _build(1, rng, n_blocks=64, num_sets=2, ways=2)
+    # dirty many lines, then force evictions -> write-back traffic
+    idx = jnp.arange(0, 64 * 8, 8, dtype=jnp.int32)
+    st = arr.write(st, idx, jnp.ones((64,)))
+    _, st = arr.read(st, idx)
+    s = st.metrics.summary()
+    assert s["write_time_s"] > 0
+    fetched = s["misses"] + s["prefetch_issued"]
+    assert s["read_iops"] == pytest.approx(fetched / s["read_time_s"],
+                                           rel=1e-6)
+    # the old (buggy) denominator would understate it
+    assert s["read_iops"] > fetched / s["sim_time_s"]
