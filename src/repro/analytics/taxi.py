@@ -143,6 +143,37 @@ def scan_column(tbl: TaxiTable, name: str, *, wavefront: int = 1024
     return total, st.metrics.summary()
 
 
+def scan_column_runtime(rt, rst, name: str, *, n_rows: int,
+                        wavefront: int = 1024, start: int = 0,
+                        waves: Optional[int] = None):
+    """Streaming scan of a column registered as a *shared-runtime tenant*.
+
+    The multi-tenant analogue of :func:`scan_column`: the column lives
+    behind a :class:`~repro.core.BamRuntime` tenant, so the scan contends
+    with (or, under way-partitioning, is isolated from) the other tenants'
+    traffic.  Scans ``waves`` wavefronts starting at row ``start``
+    (``waves=None`` = one full pass), wrapping around the column.  Returns
+    ``(partial_sum, rst, next_start)`` so interleaved drivers (e.g.
+    ``benchmarks/mixed_tenants.py``) can advance one wavefront per round.
+    """
+    if waves is None:
+        waves = -(-n_rows // wavefront)
+    read = rt.read_jit(name)
+    total = 0.0
+    for _ in range(waves):
+        # Past-the-end lanes are masked invalid inside read() (they
+        # contribute 0), exactly like scan_column — never wrapped within a
+        # wave, or a "full pass" would double-count the head rows.  The
+        # stream wraps *between* waves.
+        idx = start + jnp.arange(wavefront, dtype=jnp.int32)
+        v, rst = read(rst, idx)
+        total += float(v.sum())
+        start = start + wavefront
+        if start >= n_rows:
+            start = 0
+    return total, rst, start
+
+
 def run_query_baseline(tbl: TaxiTable, query: str) -> Tuple[dict, dict]:
     """CPU-centric baseline: ships every dependent column in full (the
     RAPIDS behaviour the paper measures in Fig. 2)."""

@@ -34,11 +34,23 @@ block pattern ``window`` lines ahead and brings those lines in through the
 readahead lane as evict-first *speculative* residents.  The explicit
 :meth:`BamArray.prefetch` API lets applications (BFS frontiers, column
 scans) push known-future wavefronts directly.
+
+Multi-tenant sharing (:class:`BamRuntime`): the paper's central claim is
+that *one* software cache and *one* queue pool serve many concurrent GPU
+applications.  ``BamRuntime`` registers several tenants (each a
+``BamArray`` over its own storage) against a single shared
+``CacheState``/``QueueState``: each tenant's :class:`TenantCtx` carries
+its tenant id (namespacing cache tags and queue commands) and its cache
+*way quota* (``isolation="partitioned"`` confines each tenant's clock
+sweep to its own ways; ``isolation="shared"`` keeps the free-for-all so
+contention is measurable).  Per-tenant :class:`IOMetrics` accumulate next
+to a global view, with the invariant that additive tenant counters sum
+exactly to the global counters.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,13 +58,31 @@ import jax.numpy as jnp
 from repro.core import cache as C
 from repro.core import queues as Q
 from repro.core.coalescer import coalesce
-from repro.core.metrics import IOMetrics
+from repro.core.metrics import (
+    IOMetrics, metrics_accumulate, metrics_delta, metrics_sum,
+)
 from repro.core.prefetch import PrefetchConfig, readahead_keys
 from repro.core.ssd import ArrayOfSSDs, INTEL_OPTANE_P5800X, device_histogram
 from repro.core.storage import HBMStorage, SimStorage
 from repro.utils import pytree_dataclass, round_up
 
-__all__ = ["BamArray", "BamState", "BamKVStore", "PrefetchConfig"]
+__all__ = ["BamArray", "BamState", "BamKVStore", "PrefetchConfig",
+           "TenantCtx", "TenantSpec", "BamRuntime", "RuntimeState"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantCtx:
+    """Static multi-tenant context of one :class:`BamArray`.
+
+    ``tenant`` namespaces this array's cache tags and queue commands;
+    ``[way_lo, way_hi)`` is its cache way quota (``way_hi=None`` = all
+    ways).  The default is the single-tenant identity: tenant 0 with the
+    whole cache.
+    """
+
+    tenant: int = 0
+    way_lo: int = 0
+    way_hi: int | None = None
 
 
 @pytree_dataclass
@@ -77,6 +107,16 @@ class BamArray:
         default_factory=lambda: ArrayOfSSDs(INTEL_OPTANE_P5800X, 1))
     prefetch_cfg: PrefetchConfig = dataclasses.field(
         default_factory=PrefetchConfig)
+    tenant_ctx: TenantCtx = dataclasses.field(default_factory=TenantCtx)
+    # Deferred drain (multi-tenant): when True, ops enqueue commands but do
+    # NOT drain the rings; the runtime drains once per round
+    # (BamRuntime.drain), so several tenants' commands genuinely coexist
+    # and the weighted-fair arbitration orders a real mixed stream.
+    defer_drain: bool = False
+
+    def _drain(self, qs: Q.QueueState) -> Q.QueueState:
+        """Per-op ring drain, skipped under the runtime's deferred mode."""
+        return qs if self.defer_drain else Q.service_all(qs)[0]
 
     # ---------------------------------------------------------------- init
     @staticmethod
@@ -218,7 +258,8 @@ class BamArray:
 
         # 2) probe the software cache.  A demand hit on a prefetched line is
         #    a prefetch hit: promote the line to an ordinary resident.
-        pr = C.probe(st.cache, ukeys, uvalid)
+        ctx = self.tenant_ctx
+        pr = C.probe(st.cache, ukeys, uvalid, tenant=ctx.tenant)
         n_hit = jnp.sum(pr.hit.astype(jnp.int32))
         n_pref_hit = jnp.sum(pr.speculative.astype(jnp.int32))
         cache1 = C.count_hits(st.cache, n_hit)
@@ -227,7 +268,9 @@ class BamArray:
 
         # 3) allocate victims for the misses (hits protected this round).
         cache2, alloc = C.allocate(cache1, ukeys, miss,
-                                   protect_slots=pr.slot)
+                                   protect_slots=pr.slot,
+                                   tenant=ctx.tenant, way_lo=ctx.way_lo,
+                                   way_hi=ctx.way_hi)
 
         # 4) evicted dirty lines -> write-back commands (gather before fill).
         ev_rows = jnp.where(alloc.ok, alloc.slot, 0)
@@ -246,7 +289,8 @@ class BamArray:
                 ukeys, uvalid, window=cfg.window, num_blocks=self.num_blocks,
                 min_support=cfg.min_support, max_stride=cfg.max_stride,
                 raw_keys=blk, raw_valid=valid)
-            ra_pr = C.probe(cache2, ra_cand, ra_cand >= 0)
+            ra_pr = C.probe(cache2, ra_cand, ra_cand >= 0,
+                            tenant=ctx.tenant)
             ra_want = (ra_cand >= 0) & ~ra_pr.hit
             # Never speculatively re-fetch a line this wavefront just
             # evicted: on the sim backend the fetch (pure_callback) is not
@@ -260,7 +304,8 @@ class BamArray:
             cache2, ra_alloc = C.allocate(
                 cache2, ra_cand, ra_want,
                 protect_slots=jnp.concatenate([pr.slot, alloc.slot]),
-                speculative=True)
+                speculative=True,
+                tenant=ctx.tenant, way_lo=ctx.way_lo, way_hi=ctx.way_hi)
             ra_keys = jnp.where(ra_alloc.ok, ra_cand, -1)
             ra_rows = jnp.where(ra_alloc.ok, ra_alloc.slot, 0)
             ra_ev_lines = cache2.data[ra_rows]
@@ -272,19 +317,22 @@ class BamArray:
         #    Readahead goes last and in the low-priority lane: it is the
         #    first thing dropped under back-pressure and the last retired.
         qs1, rec_r = Q.enqueue(st.queues, jnp.where(miss, ukeys, -1),
-                               dst=alloc.slot)
+                               dst=alloc.slot, tenant=ctx.tenant)
         qs2, rec_w = Q.enqueue(qs1, wb_keys,
-                               is_write=jnp.ones_like(wb))
+                               is_write=jnp.ones_like(wb), tenant=ctx.tenant)
         n_doorbells = rec_r.n_doorbells + rec_w.n_doorbells
+        n_dropped = rec_r.n_dropped + rec_w.n_dropped
         if ra_on:
             qs2, rec_rw = Q.enqueue(qs2, ra_wb_keys,
-                                    is_write=jnp.ones_like(ra_wb))
+                                    is_write=jnp.ones_like(ra_wb),
+                                    tenant=ctx.tenant)
             qs2, rec_ra = Q.enqueue(qs2, ra_keys, dst=ra_alloc.slot,
-                                    prio=Q.PRIO_READAHEAD)
+                                    prio=Q.PRIO_READAHEAD, tenant=ctx.tenant)
             n_doorbells = n_doorbells + rec_rw.n_doorbells + rec_ra.n_doorbells
+            n_dropped = n_dropped + rec_rw.n_dropped + rec_ra.n_dropped
         depth_now = Q.in_flight(qs2)
         depth_dev = Q.in_flight_per_device(qs2)
-        qs3, comps = Q.service_all(qs2)
+        qs3 = self._drain(qs2)
 
         # 6) the DMA: fetch missed lines / write back dirty lines.  Fetch
         #    keys are disjoint from this round's evictions (demand misses
@@ -352,6 +400,7 @@ class BamArray:
             write_ops=mt.write_ops + n_wb,
             bytes_to_storage=mt.bytes_to_storage + n_wb * self.block_bytes,
             doorbells=mt.doorbells + n_doorbells,
+            dropped=mt.dropped + n_dropped,
             prefetch_issued=mt.prefetch_issued + n_ra,
             prefetch_hits=mt.prefetch_hits + n_pref_hit,
             **self._charge_channels(mt, st.queues, dev_reads, dev_writes,
@@ -383,22 +432,26 @@ class BamArray:
         co = coalesce(blk, valid)
         ukeys = co.unique_keys
         uvalid = ukeys >= 0
-        pr = C.probe(st.cache, ukeys, uvalid)
+        ctx = self.tenant_ctx
+        pr = C.probe(st.cache, ukeys, uvalid, tenant=ctx.tenant)
         want = uvalid & ~pr.hit
         cache1, alloc = C.allocate(st.cache, ukeys, want,
-                                   protect_slots=pr.slot, speculative=True)
+                                   protect_slots=pr.slot, speculative=True,
+                                   tenant=ctx.tenant, way_lo=ctx.way_lo,
+                                   way_hi=ctx.way_hi)
         ev_rows = jnp.where(alloc.ok, alloc.slot, 0)
         ev_lines = cache1.data[ev_rows]
         wb = alloc.ok & alloc.evicted_dirty & (alloc.evicted_key >= 0)
         wb_keys = jnp.where(wb, alloc.evicted_key, -1)
         keys = jnp.where(alloc.ok, ukeys, -1)
 
-        qs1, rec_w = Q.enqueue(st.queues, wb_keys, is_write=jnp.ones_like(wb))
+        qs1, rec_w = Q.enqueue(st.queues, wb_keys, is_write=jnp.ones_like(wb),
+                               tenant=ctx.tenant)
         qs2, rec_r = Q.enqueue(qs1, keys, dst=alloc.slot,
-                               prio=Q.PRIO_READAHEAD)
+                               prio=Q.PRIO_READAHEAD, tenant=ctx.tenant)
         depth_now = Q.in_flight(qs2)
         depth_dev = Q.in_flight_per_device(qs2)
-        qs3, _ = Q.service_all(qs2)
+        qs3 = self._drain(qs2)
 
         store = self._store(st)
         new_storage = st.storage
@@ -424,6 +477,7 @@ class BamArray:
             write_ops=mt.write_ops + n_wb,
             bytes_to_storage=mt.bytes_to_storage + n_wb * self.block_bytes,
             doorbells=mt.doorbells + rec_r.n_doorbells + rec_w.n_doorbells,
+            dropped=mt.dropped + rec_r.n_dropped + rec_w.n_dropped,
             prefetch_issued=mt.prefetch_issued + n_ra,
             **self._charge_channels(mt, st.queues, dev_reads, dev_writes,
                                     depth_now, depth_dev),
@@ -449,14 +503,17 @@ class BamArray:
         co = coalesce(blk, valid)
         ukeys = co.unique_keys
         uvalid = ukeys >= 0
-        pr = C.probe(st.cache, ukeys, uvalid)
+        ctx = self.tenant_ctx
+        pr = C.probe(st.cache, ukeys, uvalid, tenant=ctx.tenant)
         n_hit = jnp.sum(pr.hit.astype(jnp.int32))
         n_pref_hit = jnp.sum(pr.speculative.astype(jnp.int32))
         cache1 = C.count_hits(st.cache, n_hit)
         cache1 = C.promote(cache1, jnp.where(pr.speculative, pr.slot, -1))
         miss = uvalid & ~pr.hit
 
-        cache2, alloc = C.allocate(cache1, ukeys, miss, protect_slots=pr.slot)
+        cache2, alloc = C.allocate(cache1, ukeys, miss, protect_slots=pr.slot,
+                                   tenant=ctx.tenant, way_lo=ctx.way_lo,
+                                   way_hi=ctx.way_hi)
         ev_rows = jnp.where(alloc.ok, alloc.slot, 0)
         ev_lines = cache2.data[ev_rows]
         wb = alloc.ok & alloc.evicted_dirty & (alloc.evicted_key >= 0)
@@ -467,12 +524,14 @@ class BamArray:
         bt_keys = jnp.where(byp, ukeys, -1)
 
         qs1, rec_r = Q.enqueue(st.queues, jnp.where(miss, ukeys, -1),
-                               dst=alloc.slot)
-        qs2, rec_w = Q.enqueue(qs1, wb_keys, is_write=jnp.ones_like(wb))
-        qs2, rec_bt = Q.enqueue(qs2, bt_keys, is_write=jnp.ones_like(byp))
+                               dst=alloc.slot, tenant=ctx.tenant)
+        qs2, rec_w = Q.enqueue(qs1, wb_keys, is_write=jnp.ones_like(wb),
+                               tenant=ctx.tenant)
+        qs2, rec_bt = Q.enqueue(qs2, bt_keys, is_write=jnp.ones_like(byp),
+                                tenant=ctx.tenant)
         depth_now = Q.in_flight(qs2)
         depth_dev = Q.in_flight_per_device(qs2)
-        qs3, _ = Q.service_all(qs2)
+        qs3 = self._drain(qs2)
 
         store = self._store(st)
         lines_u = store.fetch_blocks(jnp.where(miss, ukeys, -1))  # write-allocate
@@ -526,6 +585,8 @@ class BamArray:
             bytes_to_storage=mt.bytes_to_storage + n_wb * self.block_bytes,
             doorbells=mt.doorbells + rec_r.n_doorbells + rec_w.n_doorbells
                 + rec_bt.n_doorbells,
+            dropped=mt.dropped + rec_r.n_dropped + rec_w.n_dropped
+                + rec_bt.n_dropped,
             prefetch_issued=mt.prefetch_issued,
             prefetch_hits=mt.prefetch_hits + n_pref_hit,
             **self._charge_channels(mt, st.queues, dev_reads, dev_writes,
@@ -543,16 +604,23 @@ class BamArray:
         ``read``/``write`` write-backs.  Lines the rings cannot hold this
         round are still persisted (the drop degrades accounting, never
         correctness — same contract as the read path's read-through).
+
+        In a shared cache only *this tenant's* dirty lines are flushed (a
+        foreign line's write-back belongs to its owner's storage tier);
+        other tenants' dirty bits are left untouched.
         """
         self._check_channels(st)
+        ctx = self.tenant_ctx
         tags = st.cache.tags.reshape(-1)
         dirty = st.cache.dirty.reshape(-1)
-        keys = jnp.where(dirty & (tags >= 0), tags, -1)
+        mine = st.cache.owner.reshape(-1) == jnp.int32(ctx.tenant)
+        keys = jnp.where(dirty & mine & (tags >= 0), tags, -1)
         qs1, rec_w = Q.enqueue(st.queues, keys,
-                               is_write=jnp.ones(keys.shape, bool))
+                               is_write=jnp.ones(keys.shape, bool),
+                               tenant=ctx.tenant)
         depth_now = Q.in_flight(qs1)
         depth_dev = Q.in_flight_per_device(qs1)
-        qs2, _ = Q.service_all(qs1)
+        qs2 = self._drain(qs1)
         store = self._store(st)
         new_storage = st.storage
         if self.storage is None:
@@ -563,13 +631,15 @@ class BamArray:
         nd = self.ssd.n_devices
         dev_writes = device_histogram(keys, nd,
                                       stripe_blocks=self.ssd.stripe_blocks)
-        cache = C._replace_data(st.cache, dirty=jnp.zeros_like(st.cache.dirty))
+        flushed = (keys >= 0).reshape(st.cache.dirty.shape)
+        cache = C._replace_data(st.cache, dirty=st.cache.dirty & ~flushed)
         mt = st.metrics
         metrics = dataclasses.replace(
             mt,
             write_ops=mt.write_ops + n_wb,
             bytes_to_storage=mt.bytes_to_storage + n_wb * self.block_bytes,
             doorbells=mt.doorbells + rec_w.n_doorbells,
+            dropped=mt.dropped + rec_w.n_dropped,
             **self._charge_channels(mt, st.queues,
                                     jnp.zeros_like(dev_writes), dev_writes,
                                     depth_now, depth_dev),
@@ -612,16 +682,18 @@ class BamKVStore:
         return (h % jnp.uint32(self.capacity)).astype(jnp.int32)
 
     @staticmethod
-    def build(keys, values, *, capacity: int | None = None,
-              probes: int = 8, **bam_kw):
-        """Host-side bulk build; returns (kv, index_table, BamState)."""
+    def build_table(keys, values, *, capacity: int | None = None,
+                    probes: int = 8):
+        """Host-side open-addressing placement shared by :meth:`build` and
+        the multi-tenant runtime: returns ``(table, store_vals, capacity)``
+        where ``store_vals[(hash(k)+j) % capacity]`` holds key ``k``'s
+        value row."""
         import numpy as np
         keys = np.asarray(keys, np.int32)
         values = np.asarray(values)
         n, value_elems = values.shape
         capacity = capacity or max(2 * n, 16)
         table = np.full((capacity,), -1, np.int32)     # key per slot
-        rows = np.full((capacity,), -1, np.int32)      # value row per slot
         store_vals = np.zeros((capacity, value_elems), values.dtype)
         for i, k in enumerate(keys):
             if k == -1:
@@ -635,7 +707,6 @@ class BamKVStore:
                 s = (h + j) % capacity
                 if table[s] == -1 or table[s] == k:
                     table[s] = k
-                    rows[s] = i
                     store_vals[s] = values[i]
                     break
             else:
@@ -643,6 +714,17 @@ class BamKVStore:
                     f"kv store: key {int(k)} cannot be placed within "
                     f"probes={probes} slots of its home slot; raise "
                     "capacity or probes")
+        return table, store_vals, capacity
+
+    @staticmethod
+    def build(keys, values, *, capacity: int | None = None,
+              probes: int = 8, **bam_kw):
+        """Host-side bulk build; returns (kv, index_table, BamState)."""
+        import numpy as np
+        values = np.asarray(values)
+        _, value_elems = values.shape
+        table, store_vals, capacity = BamKVStore.build_table(
+            keys, values, capacity=capacity, probes=probes)
         bam_kw.setdefault("block_elems", value_elems)
         arr, st = BamArray.build(store_vals, **bam_kw)
         kv = BamKVStore(array=arr, capacity=capacity,
@@ -669,3 +751,306 @@ class BamKVStore:
         flat, st = self.array.read(st, idx, vmask)
         vals = flat.reshape(keys.shape[0], self.value_elems)
         return vals, found, st
+
+
+# ===================================================================== runtime
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's registration against a shared :class:`BamRuntime`.
+
+    ``ways`` is the cache way quota under ``isolation="partitioned"``
+    (``None`` = equal split of the leftover ways); ``weight`` is the
+    queue-arbitration service weight (see :func:`repro.core.queues
+    .service_all`).
+    """
+
+    name: str
+    data: Any                      # host / jnp array backing this tenant
+    block_elems: int
+    ways: int | None = None
+    weight: float = 1.0
+    prefetch: Optional[PrefetchConfig] = None
+
+
+@pytree_dataclass
+class RuntimeState:
+    """All mutable state of a shared multi-tenant runtime.
+
+    One cache + one queue pool serve every tenant; metrics are kept per
+    tenant *and* globally.  Invariant (checked by
+    :meth:`BamRuntime.assert_metrics_consistent` and the multi-tenant
+    tests): every additive counter of the global ``metrics`` equals the
+    sum of the tenants' counters.
+    """
+
+    cache: C.CacheState
+    queues: Q.QueueState
+    metrics: IOMetrics             # global accumulator
+    tenant_metrics: tuple          # per-tenant IOMetrics, indexed by tid
+    storages: tuple                # per-tenant in-graph storage (None for sim)
+
+
+@dataclasses.dataclass
+class BamRuntime:
+    """The shared multi-tenant BaM runtime (paper §I: "multiple processes
+    can share" the cache and queues).
+
+    Several tenants — each a :class:`BamArray` over its own storage tier —
+    run against *one* ``CacheState`` and *one* ``QueueState``:
+
+    * cache isolation is **way-partitioning**: under
+      ``isolation="partitioned"`` each tenant's clock sweep is confined to
+      its contiguous way quota, so a streaming scan tenant cannot evict a
+      cache-friendly neighbour's lines; ``isolation="shared"`` keeps
+      today's free-for-all (tenants evict each other's clean lines) so
+      the thrash is measurable;
+    * queue sharing is **weighted-fair arbitration**: commands carry their
+      tenant id and the simulated controller drains tenants in proportion
+      to their ``TenantSpec.weight`` within each priority class, with
+      back-pressure drops accounted per tenant;
+    * metrics are **per tenant + global**, additive counters summing
+      exactly.
+
+    All tenants share the cache line geometry (``block_elems``) and the
+    cache data dtype: lines are stored in ``cache_dtype`` and cast back to
+    each tenant's dtype on read (exact for float32 tenants and for integer
+    tenants whose values fit float32's 2**24 integer range).
+    """
+
+    tenants: Dict[str, BamArray]
+    tenant_ids: Dict[str, int]
+    isolation: str
+    ways: int
+    drain_mode: str = "per_op"
+    _jit_reads: Dict[str, Any] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+
+    # ---------------------------------------------------------------- build
+    @staticmethod
+    def build(specs: Sequence[TenantSpec], *,
+              num_sets: int, ways: int = 8,
+              num_queues: int = 8, queue_depth: int = 1024,
+              ssd: Optional[ArrayOfSSDs] = None,
+              isolation: str = "partitioned",
+              drain: str = "per_op",
+              backend: str = "sim",
+              cache_dtype=jnp.float32,
+              ) -> Tuple["BamRuntime", RuntimeState]:
+        """``drain="per_op"`` (default) drains the rings inside every
+        tenant op, exactly like a standalone ``BamArray``.
+        ``drain="deferred"`` leaves commands pending so several tenants'
+        wavefronts coexist in the shared rings; the caller then calls
+        :meth:`drain` once per round and the weighted-fair arbitration
+        orders the genuinely mixed completion stream.  Values are
+        identical either way (fetches bypass the simulated controller);
+        only when a round's commands overflow the rings does deferred
+        mode drop more — accounting degrades, never correctness."""
+        import numpy as np
+        if isolation not in ("partitioned", "shared"):
+            raise ValueError(
+                f"isolation must be 'partitioned' or 'shared', "
+                f"got {isolation!r}")
+        if drain not in ("per_op", "deferred"):
+            raise ValueError(
+                f"drain must be 'per_op' or 'deferred', got {drain!r}")
+        if not specs:
+            raise ValueError("need at least one TenantSpec")
+        names = [s.name for s in specs]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tenant names: {names}")
+        block_elems = specs[0].block_elems
+        for s in specs:
+            if s.block_elems != block_elems:
+                raise ValueError(
+                    "all tenants must share the cache line geometry: "
+                    f"{s.name} wants block_elems={s.block_elems}, "
+                    f"{specs[0].name} has {block_elems}")
+        nt = len(specs)
+
+        # Way quotas: explicit quotas are honoured, the rest equal-split.
+        if isolation == "partitioned":
+            fixed = sum(s.ways for s in specs if s.ways is not None)
+            free = [s for s in specs if s.ways is None]
+            rest = ways - fixed
+            if rest < len(free) or (not free and fixed != ways):
+                raise ValueError(
+                    f"way quotas don't fit: ways={ways}, explicit={fixed}, "
+                    f"{len(free)} tenants left to split the remainder")
+            share = {id(s): rest // len(free) for s in free} if free else {}
+            for s in free[:rest % len(free) if free else 0]:
+                share[id(s)] += 1
+            lo = 0
+            windows = []
+            for s in specs:
+                q = s.ways if s.ways is not None else share[id(s)]
+                if q < 1:
+                    raise ValueError(f"tenant {s.name} got a zero way quota")
+                windows.append((lo, lo + q))
+                lo += q
+        else:
+            windows = [(0, ways)] * nt
+
+        ssd = ssd or ArrayOfSSDs(INTEL_OPTANE_P5800X, 1)
+        num_queues = round_up(num_queues, ssd.n_devices)
+        weights = tuple(float(s.weight) for s in specs)
+
+        tenants: Dict[str, BamArray] = {}
+        tenant_ids: Dict[str, int] = {}
+        storages = []
+        for tid, s in enumerate(specs):
+            lo, hi = windows[tid]
+            if backend == "sim":
+                store = SimStorage.from_array(np.asarray(s.data), block_elems)
+                state_store, dtype = None, store.dtype
+            elif backend == "hbm":
+                hs = HBMStorage.from_array(jnp.asarray(s.data), block_elems)
+                store, state_store, dtype = None, hs, hs.dtype
+            else:
+                raise ValueError(f"unknown backend {backend!r}")
+            # Integer tenants round-trip through the shared cache's float
+            # dtype: refuse values outside its exact-integer range (e.g.
+            # 2^24 for float32) instead of silently corrupting them.
+            if (np.issubdtype(np.dtype(dtype), np.integer)
+                    and jnp.issubdtype(cache_dtype, jnp.floating)):
+                exact = 1 << (jnp.finfo(cache_dtype).nmant + 1)
+                host = np.asarray(s.data)
+                peak = int(np.abs(host).max()) if host.size else 0
+                if peak > exact:
+                    raise ValueError(
+                        f"tenant {s.name!r} holds integer values up to "
+                        f"{peak}, beyond the exact-integer range "
+                        f"(+/-{exact}) of the shared cache dtype "
+                        f"{jnp.dtype(cache_dtype).name}; pass a wider "
+                        "cache_dtype to BamRuntime.build")
+            tenants[s.name] = BamArray(
+                storage=store, shape=tuple(np.shape(s.data)), dtype=dtype,
+                block_elems=block_elems, ssd=ssd,
+                prefetch_cfg=s.prefetch or PrefetchConfig(),
+                tenant_ctx=TenantCtx(tenant=tid, way_lo=lo, way_hi=hi),
+                defer_drain=(drain == "deferred"))
+            tenant_ids[s.name] = tid
+            storages.append(state_store)
+
+        rst = RuntimeState(
+            cache=C.make_cache(num_sets, ways, block_elems, cache_dtype),
+            queues=Q.make_queues(num_queues, queue_depth,
+                                 n_devices=ssd.n_devices,
+                                 stripe_blocks=ssd.stripe_blocks,
+                                 n_tenants=nt, tenant_weights=weights),
+            metrics=IOMetrics.zeros(ssd.n_devices),
+            tenant_metrics=tuple(IOMetrics.zeros(ssd.n_devices)
+                                 for _ in specs),
+            storages=tuple(storages),
+        )
+        return BamRuntime(tenants=tenants, tenant_ids=tenant_ids,
+                          isolation=isolation, ways=ways,
+                          drain_mode=drain), rst
+
+    # ------------------------------------------------------------- plumbing
+    def array(self, name: str) -> BamArray:
+        """The tenant's :class:`BamArray` (its ``TenantCtx`` rides along) —
+        hand it to scenario code (``BamGraph``, ``BamKVStore.lookup``)
+        together with a :meth:`tenant_view`."""
+        return self.tenants[name]
+
+    def tenant_view(self, rst: RuntimeState, name: str) -> BamState:
+        """Project the shared state into the per-tenant :class:`BamState`
+        that ``BamArray.read``/``write``/... consume."""
+        tid = self.tenant_ids[name]
+        return BamState(cache=rst.cache, queues=rst.queues,
+                        metrics=rst.tenant_metrics[tid],
+                        storage=rst.storages[tid])
+
+    def absorb(self, rst: RuntimeState, name: str,
+               st: BamState) -> RuntimeState:
+        """Fold a tenant op's updated :class:`BamState` back into the
+        shared runtime state: cache/queues replace (they are shared), the
+        tenant's metrics delta also accumulates into the global view."""
+        tid = self.tenant_ids[name]
+        delta = metrics_delta(st.metrics, rst.tenant_metrics[tid])
+        tm = list(rst.tenant_metrics)
+        tm[tid] = st.metrics
+        stores = list(rst.storages)
+        stores[tid] = st.storage
+        return RuntimeState(
+            cache=st.cache, queues=st.queues,
+            metrics=metrics_accumulate(rst.metrics, delta),
+            tenant_metrics=tuple(tm), storages=tuple(stores))
+
+    # ------------------------------------------------------------------ ops
+    def read(self, rst: RuntimeState, name: str, idx: jax.Array,
+             valid: jax.Array | None = None
+             ) -> Tuple[jax.Array, RuntimeState]:
+        vals, st = self.tenants[name].read(self.tenant_view(rst, name),
+                                           idx, valid)
+        return vals, self.absorb(rst, name, st)
+
+    def read_jit(self, name: str):
+        """A cached ``jax.jit`` of ``lambda rst, idx: self.read(rst, name,
+        idx)`` — one compilation per tenant however often callers grab it
+        (streaming drivers call this every wavefront)."""
+        fn = self._jit_reads.get(name)
+        if fn is None:
+            fn = jax.jit(lambda rst, idx: self.read(rst, name, idx))
+            self._jit_reads[name] = fn
+        return fn
+
+    def write(self, rst: RuntimeState, name: str, idx: jax.Array,
+              values: jax.Array, valid: jax.Array | None = None
+              ) -> RuntimeState:
+        st = self.tenants[name].write(self.tenant_view(rst, name),
+                                      idx, values, valid)
+        return self.absorb(rst, name, st)
+
+    def prefetch(self, rst: RuntimeState, name: str, idx: jax.Array,
+                 valid: jax.Array | None = None) -> RuntimeState:
+        st = self.tenants[name].prefetch(self.tenant_view(rst, name),
+                                         idx, valid)
+        return self.absorb(rst, name, st)
+
+    def flush(self, rst: RuntimeState,
+              name: str | None = None) -> RuntimeState:
+        """Flush one tenant's dirty lines, or every tenant's (name=None)."""
+        names = [name] if name is not None else list(self.tenants)
+        for n in names:
+            st = self.tenants[n].flush(self.tenant_view(rst, n))
+            rst = self.absorb(rst, n, st)
+        return rst
+
+    def drain(self, rst: RuntimeState
+              ) -> Tuple[RuntimeState, Q.Completions]:
+        """Drain the shared rings once (the ``drain="deferred"`` round
+        barrier).  The returned :class:`~repro.core.queues.Completions`
+        stream is priority-major and weighted-fair across tenants — the
+        observable arbitration order.  A no-op on already-empty rings
+        (per-op mode), so callers may drain unconditionally."""
+        qs, comps = Q.service_all(rst.queues)
+        return RuntimeState(cache=rst.cache, queues=qs,
+                            metrics=rst.metrics,
+                            tenant_metrics=rst.tenant_metrics,
+                            storages=rst.storages), comps
+
+    # -------------------------------------------------------------- metrics
+    def tenant_summary(self, rst: RuntimeState, name: str) -> dict:
+        return rst.tenant_metrics[self.tenant_ids[name]].summary()
+
+    def assert_metrics_consistent(self, rst: RuntimeState,
+                                  time_rtol: float = 1e-4) -> None:
+        """The tentpole invariant: per-tenant metrics sum to the global
+        counters — exactly for the integer-valued counters, to ``time_rtol``
+        for the float time accumulators (summation order differs)."""
+        import numpy as np
+        from repro.core.metrics import ADDITIVE_FIELDS
+        total = metrics_sum(rst.tenant_metrics)
+        for f in ADDITIVE_FIELDS:
+            a = np.asarray(jax.device_get(getattr(total, f)), np.float64)
+            b = np.asarray(jax.device_get(getattr(rst.metrics, f)),
+                           np.float64)
+            if f.endswith("_time_s"):
+                ok = np.allclose(a, b, rtol=time_rtol, atol=1e-12)
+            else:
+                ok = np.array_equal(a, b)
+            if not ok:
+                raise AssertionError(
+                    f"tenant metrics do not sum to global for {f}: "
+                    f"sum(tenants)={a}, global={b}")

@@ -29,6 +29,20 @@ order), so a wrong prefetch is reclaimed before any demand line is touched
 — speculative fills are "insert without pin".  A demand hit on a
 speculative line *promotes* it (clears the bit): from then on it is an
 ordinary resident line.
+
+Multi-tenant support (``BamRuntime``): several BaM arrays can share one
+``CacheState``.  Every resident line records its ``owner`` tenant, and
+``probe``/``allocate`` take a ``tenant`` id so block key *k* of tenant A
+never aliases block *k* of tenant B (the tag match requires the owner to
+match too).  Isolation is *way-partitioning*: ``allocate(way_lo, way_hi)``
+confines a tenant's clock sweep to its contiguous way quota, so a
+streaming tenant can never evict a partitioned neighbour's lines.  With
+the full way range (the default, and the runtime's ``isolation="shared"``
+mode) tenants compete for every way exactly as a single tenant does today
+— except that *foreign dirty* lines are never victimised: a write-back
+must go to the evictor's own storage tier, so evicting another tenant's
+dirty line would corrupt it.  Clean foreign lines are fair game (they are
+re-fetchable from their owner's storage).
 """
 from __future__ import annotations
 
@@ -51,6 +65,7 @@ class CacheState:
     ways: int
     line_elems: int
     tags: jax.Array        # (num_sets, ways) int32 block key, -1 invalid
+    owner: jax.Array       # (num_sets, ways) int32 tenant id of the line
     refcount: jax.Array    # (num_sets, ways) int32 — pinned lines have >0
     dirty: jax.Array       # (num_sets, ways) bool — needs write-back on evict
     speculative: jax.Array  # (num_sets, ways) bool — prefetched, evict-first
@@ -71,6 +86,7 @@ def make_cache(num_sets: int, ways: int, line_elems: int,
     return CacheState(
         num_sets=num_sets, ways=ways, line_elems=line_elems,
         tags=jnp.full((num_sets, ways), -1, jnp.int32),
+        owner=jnp.zeros((num_sets, ways), jnp.int32),
         refcount=jnp.zeros((num_sets, ways), jnp.int32),
         dirty=jnp.zeros((num_sets, ways), bool),
         speculative=jnp.zeros((num_sets, ways), bool),
@@ -93,13 +109,20 @@ class ProbeResult:
 
 
 def probe(cache: CacheState, keys: jax.Array,
-          valid: jax.Array | None = None) -> ProbeResult:
-    """Vectorized set-associative lookup for a wavefront of (unique) keys."""
+          valid: jax.Array | None = None, tenant: int = 0) -> ProbeResult:
+    """Vectorized set-associative lookup for a wavefront of (unique) keys.
+
+    ``tenant`` namespaces the tag match: a line counts as a hit only when
+    its owner matches, so shared-cache tenants with overlapping key spaces
+    never read each other's lines.  Single-tenant callers keep the default
+    (every line is owned by tenant 0).
+    """
     if valid is None:
         valid = keys >= 0
     sets = _set_of(cache, keys)                         # (m,)
     tag_rows = cache.tags[sets]                         # (m, ways)
-    eq = (tag_rows == keys[:, None]) & valid[:, None]
+    eq = (tag_rows == keys[:, None]) & valid[:, None] \
+        & (cache.owner[sets] == jnp.int32(tenant))
     hit = eq.any(axis=1)
     way = jnp.argmax(eq, axis=1).astype(jnp.int32)
     slot = jnp.where(hit, sets * cache.ways + way, -1).astype(jnp.int32)
@@ -123,6 +146,9 @@ def allocate(cache: CacheState, keys: jax.Array,
              valid: jax.Array,
              protect_slots: jax.Array | None = None,
              speculative: bool = False,
+             tenant: int = 0,
+             way_lo: int = 0,
+             way_hi: int | None = None,
              ) -> Tuple[CacheState, AllocResult]:
     """Grant a victim slot per missed key (clock sweep, rank-disambiguated).
 
@@ -137,13 +163,35 @@ def allocate(cache: CacheState, keys: jax.Array,
     is simply dropped (``ok=False``, nothing fetched).  Without this rule a
     deep readahead window evicts its own not-yet-consumed predictions under
     set conflicts and turns into pure I/O waste.
+
+    Multi-tenant knobs (all static): granted lines are stamped with
+    ``tenant``; ``[way_lo, way_hi)`` confines the victim sweep to that way
+    window (the runtime's way-partitioning — a partitioned tenant can only
+    ever evict lines inside its own quota).  Whatever the window, a line
+    that is *dirty and owned by another tenant* is never victimised: its
+    write-back would be routed to the wrong storage tier.  The defaults
+    (tenant 0, full way range) are byte-for-byte today's single-tenant
+    behaviour.
     """
     m = keys.shape[0]
     ways = cache.ways
+    way_hi = ways if way_hi is None else way_hi
+    if not (0 <= way_lo < way_hi <= ways):
+        raise ValueError(
+            f"way window [{way_lo}, {way_hi}) invalid for ways={ways}")
     sets = _set_of(cache, keys)
 
-    # Eviction eligibility per line: not referenced, not protected this round.
+    # Eviction eligibility per line: not referenced, not protected this
+    # round, not another tenant's dirty data, inside the caller's way quota.
     elig_line = (cache.refcount == 0).reshape(-1)
+    foreign_dirty = (cache.owner != jnp.int32(tenant)) \
+        & (cache.tags >= 0) & cache.dirty
+    elig_line = elig_line & ~foreign_dirty.reshape(-1)
+    if way_lo != 0 or way_hi != ways:
+        in_window = (jnp.arange(ways, dtype=jnp.int32) >= way_lo) \
+            & (jnp.arange(ways, dtype=jnp.int32) < way_hi)
+        elig_line = elig_line & jnp.broadcast_to(
+            in_window[None, :], (cache.num_sets, ways)).reshape(-1)
     if speculative:
         pending = (cache.speculative & (cache.tags >= 0)).reshape(-1)
         elig_line = elig_line & ~pending
@@ -188,6 +236,7 @@ def allocate(cache: CacheState, keys: jax.Array,
     s_i = jnp.where(ok, sets, cache.num_sets)
     w_i = jnp.where(ok, way, 0)
     tags = cache.tags.at[s_i, w_i].set(keys, mode="drop")
+    owner = cache.owner.at[s_i, w_i].set(jnp.int32(tenant), mode="drop")
     dirty = cache.dirty.at[s_i, w_i].set(False, mode="drop")
     spec = cache.speculative.at[s_i, w_i].set(speculative, mode="drop")
 
@@ -206,7 +255,8 @@ def allocate(cache: CacheState, keys: jax.Array,
     byp_inc = jnp.int32(0) if speculative else n_valid - n_ok
     cache2 = CacheState(
         num_sets=cache.num_sets, ways=ways, line_elems=cache.line_elems,
-        tags=tags, refcount=cache.refcount, dirty=dirty, speculative=spec,
+        tags=tags, owner=owner, refcount=cache.refcount, dirty=dirty,
+        speculative=spec,
         clock_hand=clock_hand, data=cache.data,
         hits=cache.hits, misses=cache.misses + miss_inc,
         bypasses=cache.bypasses + byp_inc,
@@ -245,10 +295,11 @@ def release(cache: CacheState, slots: jax.Array) -> CacheState:
     return _replace_data(cache, refcount=rc.reshape(cache.num_sets, cache.ways))
 
 
-def pin_keys(cache: CacheState, keys: jax.Array) -> CacheState:
+def pin_keys(cache: CacheState, keys: jax.Array,
+             tenant: int = 0) -> CacheState:
     """User-directed residency control (paper: 'fine-grain control of cache
     residency'): pin resident lines for the given keys."""
-    pr = probe(cache, keys)
+    pr = probe(cache, keys, tenant=tenant)
     return acquire(cache, pr.slot)
 
 
@@ -284,8 +335,8 @@ def write_line(cache: CacheState, slots: jax.Array, ok: jax.Array,
 def _replace_data(cache: CacheState, **kw) -> CacheState:
     fields = dict(
         num_sets=cache.num_sets, ways=cache.ways, line_elems=cache.line_elems,
-        tags=cache.tags, refcount=cache.refcount, dirty=cache.dirty,
-        speculative=cache.speculative,
+        tags=cache.tags, owner=cache.owner, refcount=cache.refcount,
+        dirty=cache.dirty, speculative=cache.speculative,
         clock_hand=cache.clock_hand, data=cache.data,
         hits=cache.hits, misses=cache.misses, bypasses=cache.bypasses,
     )

@@ -32,6 +32,7 @@ class IOMetrics:
     write_ops: jax.Array
     bytes_to_storage: jax.Array
     doorbells: jax.Array         # batched ring-tail updates (1 per queue per round)
+    dropped: jax.Array           # commands rejected by ring back-pressure
     sim_time_s: jax.Array        # simulated device service time accumulated
     read_time_s: jax.Array       # read-direction share (demand + readahead)
     write_time_s: jax.Array      # write-direction share (write-backs, flush)
@@ -53,7 +54,8 @@ class IOMetrics:
         return IOMetrics(
             requests=f(), bytes_requested=f(), hits=f(), misses=f(),
             bytes_from_storage=f(), write_ops=f(), bytes_to_storage=f(),
-            doorbells=f(), sim_time_s=f(), read_time_s=f(), write_time_s=f(),
+            doorbells=f(), dropped=f(),
+            sim_time_s=f(), read_time_s=f(), write_time_s=f(),
             max_queue_depth=i(),
             prefetch_issued=f(), prefetch_hits=f(),
             dev_reads=jnp.zeros((n_devices,), ftype),
@@ -118,6 +120,7 @@ class IOMetrics:
             "bytes_to_storage": float(self.bytes_to_storage),
             "amplification": self.amplification(),
             "doorbells": float(self.doorbells),
+            "dropped": float(self.dropped),
             "sim_time_s": float(self.sim_time_s),
             "read_time_s": float(self.read_time_s),
             "write_time_s": float(self.write_time_s),
@@ -135,3 +138,37 @@ class IOMetrics:
                               for x in jax.device_get(self.dev_max_depth)],
             "straggler_gap": self.straggler_gap(),
         }
+
+
+# Watermark (high-water) fields combine by max; everything else is an
+# additive counter.  The shared-runtime facade relies on this split: it
+# accumulates each tenant op's *delta* into the global IOMetrics, and the
+# invariant "additive tenant counters sum exactly to the global counters"
+# is what the multi-tenant tests (and the mixed_tenants gate) assert.
+WATERMARK_FIELDS = ("max_queue_depth", "dev_max_depth")
+ADDITIVE_FIELDS = tuple(
+    f for f in IOMetrics.__dataclass_fields__ if f not in WATERMARK_FIELDS)
+
+
+def metrics_delta(new: IOMetrics, old: IOMetrics) -> IOMetrics:
+    """Per-op increment: additive fields subtract, watermarks carry ``new``."""
+    kw = {f: getattr(new, f) - getattr(old, f) for f in ADDITIVE_FIELDS}
+    kw.update({f: getattr(new, f) for f in WATERMARK_FIELDS})
+    return IOMetrics(**kw)
+
+
+def metrics_accumulate(acc: IOMetrics, delta: IOMetrics) -> IOMetrics:
+    """Fold a :func:`metrics_delta` into an accumulator (sum / max)."""
+    kw = {f: getattr(acc, f) + getattr(delta, f) for f in ADDITIVE_FIELDS}
+    kw.update({f: jnp.maximum(getattr(acc, f), getattr(delta, f))
+               for f in WATERMARK_FIELDS})
+    return IOMetrics(**kw)
+
+
+def metrics_sum(parts) -> IOMetrics:
+    """Combine per-tenant metrics into the global view (sum / max)."""
+    parts = list(parts)
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = metrics_accumulate(acc, p)
+    return acc

@@ -44,6 +44,22 @@ queue-major order is preserved within a class), the analogue of an NVMe
 weighted-round-robin arbitration burst favouring the urgent queue class.
 Readahead also loses the back-pressure race naturally: it is enqueued after
 the demand wavefront, so when rings fill it is the first thing dropped.
+
+Multi-tenant arbitration (``BamRuntime``): when the pool is built with
+``n_tenants > 1`` every command also carries its *tenant id* next to the
+priority bit, and the controller drains each priority class in
+weighted-fair order across tenants: the *i*-th pending command of tenant
+*t* within its priority class gets virtual finish time
+``(i+1) / weight[t]`` and completions come back in ascending virtual time
+— classic weighted round-robin, so a tenant with weight 2 retires two
+commands for every one of a weight-1 tenant instead of a bursty
+first-come-first-served drain (and a tenant's demand backlog never
+penalises its own readahead against other tenants' readahead).  Accounting is per tenant *and* per
+device: ``tenant_enqueued/_dropped/_completed`` and
+``dev_enqueued/_completed`` let callers check the conservation law
+``enqueued == completed + in-flight`` for every lane of every tenant.
+With ``n_tenants=1`` (the default) the drain path is bit-for-bit the
+single-tenant behaviour above.
 """
 from __future__ import annotations
 
@@ -57,31 +73,39 @@ from repro.utils import pytree_dataclass
 
 __all__ = ["QueueState", "make_queues", "enqueue", "service_all",
            "SubmitReceipt", "PRIO_DEMAND", "PRIO_READAHEAD",
-           "in_flight", "in_flight_per_device"]
+           "in_flight", "in_flight_per_device", "in_flight_per_tenant"]
 
 PRIO_DEMAND = 0      # demand reads and write-backs
 PRIO_READAHEAD = 1   # speculative readahead fills (drain last, drop first)
 
 
 @pytree_dataclass(meta_fields=("num_queues", "depth", "n_devices",
-                                "stripe_blocks"))
+                                "stripe_blocks", "n_tenants",
+                                "tenant_weights"))
 class QueueState:
     """A pool of NVMe submission/completion queue pairs living "in HBM".
 
     The pool is split into ``n_devices`` contiguous groups of
     ``num_queues // n_devices`` rings each; queues
     ``[d*group, (d+1)*group)`` belong to device ``d``.
+
+    ``n_tenants``/``tenant_weights`` configure the shared-runtime
+    arbitration: commands carry their tenant id and the drain interleaves
+    tenants weighted-fair within each priority class.
     """
 
     num_queues: int
     depth: int
     n_devices: int
     stripe_blocks: int
+    n_tenants: int
+    tenant_weights: tuple   # per-tenant service weights (floats), len n_tenants
     # Submission-queue entries. key < 0 means the slot is free.
     sq_key: jax.Array        # (num_queues, depth) int32 — block key of the command
     sq_dst: jax.Array        # (num_queues, depth) int32 — destination cache slot (or -1)
     sq_is_write: jax.Array   # (num_queues, depth) bool  — write command?
     sq_prio: jax.Array       # (num_queues, depth) int32 — PRIO_DEMAND / PRIO_READAHEAD
+    sq_tenant: jax.Array     # (num_queues, depth) int32 — issuing tenant id
     # Monotonic virtual pointers (never wrapped; slot = ptr % depth).
     sq_tail: jax.Array       # (num_queues,) int32
     sq_head: jax.Array       # (num_queues,) int32
@@ -93,6 +117,11 @@ class QueueState:
     completions: jax.Array   # () int32 — CQ entries consumed
     dropped: jax.Array       # () int32 — requests rejected because every ring was full
     dev_dropped: jax.Array   # (n_devices,) int32 — drops per device channel
+    dev_enqueued: jax.Array  # (n_devices,) int32 — commands accepted per device
+    dev_completed: jax.Array  # (n_devices,) int32 — commands drained per device
+    tenant_enqueued: jax.Array   # (n_tenants,) int32 — accepted per tenant
+    tenant_dropped: jax.Array    # (n_tenants,) int32 — back-pressure drops per tenant
+    tenant_completed: jax.Array  # (n_tenants,) int32 — drained per tenant
 
     @property
     def group_size(self) -> int:
@@ -101,7 +130,8 @@ class QueueState:
 
 
 def make_queues(num_queues: int, depth: int, n_devices: int = 1,
-                stripe_blocks: int = 1) -> QueueState:
+                stripe_blocks: int = 1, n_tenants: int = 1,
+                tenant_weights: tuple | None = None) -> QueueState:
     if n_devices < 1:
         raise ValueError(f"n_devices must be >= 1, got {n_devices}")
     if stripe_blocks < 1:
@@ -110,21 +140,40 @@ def make_queues(num_queues: int, depth: int, n_devices: int = 1,
         raise ValueError(
             f"num_queues ({num_queues}) must be a multiple of n_devices "
             f"({n_devices}) so every device gets an equal ring group")
+    if n_tenants < 1:
+        raise ValueError(f"n_tenants must be >= 1, got {n_tenants}")
+    if tenant_weights is None:
+        tenant_weights = (1.0,) * n_tenants
+    tenant_weights = tuple(float(w) for w in tenant_weights)
+    if len(tenant_weights) != n_tenants:
+        raise ValueError(
+            f"tenant_weights has {len(tenant_weights)} entries for "
+            f"n_tenants={n_tenants}")
+    if any(w <= 0 for w in tenant_weights):
+        raise ValueError(f"tenant_weights must be positive: {tenant_weights}")
     z = lambda: jnp.zeros((), jnp.int32)
     return QueueState(
         num_queues=num_queues,
         depth=depth,
         n_devices=n_devices,
         stripe_blocks=stripe_blocks,
+        n_tenants=n_tenants,
+        tenant_weights=tenant_weights,
         sq_key=jnp.full((num_queues, depth), -1, jnp.int32),
         sq_dst=jnp.full((num_queues, depth), -1, jnp.int32),
         sq_is_write=jnp.zeros((num_queues, depth), bool),
         sq_prio=jnp.zeros((num_queues, depth), jnp.int32),
+        sq_tenant=jnp.zeros((num_queues, depth), jnp.int32),
         sq_tail=jnp.zeros((num_queues,), jnp.int32),
         sq_head=jnp.zeros((num_queues,), jnp.int32),
         rr_ptr=jnp.zeros((n_devices,), jnp.int32),
         ticket_total=z(), doorbells=z(), completions=z(), dropped=z(),
         dev_dropped=jnp.zeros((n_devices,), jnp.int32),
+        dev_enqueued=jnp.zeros((n_devices,), jnp.int32),
+        dev_completed=jnp.zeros((n_devices,), jnp.int32),
+        tenant_enqueued=jnp.zeros((n_tenants,), jnp.int32),
+        tenant_dropped=jnp.zeros((n_tenants,), jnp.int32),
+        tenant_completed=jnp.zeros((n_tenants,), jnp.int32),
     )
 
 
@@ -136,6 +185,7 @@ class SubmitReceipt:
     vslot: jax.Array      # (n,) int32 — virtual slot (monotonic) in that queue
     accepted: jax.Array   # (n,) bool
     n_accepted: jax.Array  # () int32
+    n_dropped: jax.Array   # () int32 — valid requests rejected by back-pressure
     n_doorbells: jax.Array  # () int32 — distinct queues rung by this wavefront
 
 
@@ -146,6 +196,7 @@ def enqueue(
     is_write: jax.Array | None = None,
     valid: jax.Array | None = None,
     prio: jax.Array | int = PRIO_DEMAND,
+    tenant: int = 0,
 ) -> Tuple[QueueState, SubmitReceipt]:
     """Submit a wavefront of commands into the SQ rings.
 
@@ -159,7 +210,10 @@ def enqueue(
     wavefront" (the paper's thread would spin).
 
     ``prio`` tags the lane: demand commands (``PRIO_DEMAND``) drain before
-    readahead (``PRIO_READAHEAD``) in :func:`service_all`.
+    readahead (``PRIO_READAHEAD``) in :func:`service_all`.  ``tenant``
+    (static, < ``n_tenants``) stamps the commands for the weighted-fair
+    drain and the per-tenant conservation counters; one enqueue call is
+    always a single tenant's wavefront.
     """
     n = keys.shape[0]
     nq, depth, nd = qs.num_queues, qs.depth, qs.n_devices
@@ -173,6 +227,9 @@ def enqueue(
     if is_write is None:
         is_write = jnp.zeros((n,), bool)
     prio = jnp.broadcast_to(jnp.asarray(prio, jnp.int32), (n,))
+    if not 0 <= tenant < qs.n_tenants:
+        raise ValueError(
+            f"tenant {tenant} out of range for n_tenants={qs.n_tenants}")
 
     # --- device routing + ticket assignment (per-device exclusive cumsum) --
     dev = device_of_block(keys, nd, qs.stripe_blocks)       # (n,)
@@ -206,6 +263,8 @@ def enqueue(
     sq_dst = qs.sq_dst.at[qidx, sidx].set(dst, mode="drop")
     sq_is_write = qs.sq_is_write.at[qidx, sidx].set(is_write, mode="drop")
     sq_prio = qs.sq_prio.at[qidx, sidx].set(prio, mode="drop")
+    sq_tenant = qs.sq_tenant.at[qidx, sidx].set(jnp.int32(tenant),
+                                                mode="drop")
 
     # New tails: per queue, number of accepted commands assigned to it.
     per_q = jnp.zeros((nq,), jnp.int32).at[queue].add(accepted.astype(jnp.int32))
@@ -213,28 +272,40 @@ def enqueue(
     # One doorbell per queue that received at least one command (batched ring).
     n_doorbells = jnp.sum((per_q > 0).astype(jnp.int32))
 
+    drops = valid & ~fits
+    n_accepted = jnp.sum(accepted.astype(jnp.int32))
+    n_dropped = jnp.sum(drops.astype(jnp.int32))
     receipt = SubmitReceipt(
         queue=jnp.where(accepted, queue, -1).astype(jnp.int32),
         vslot=jnp.where(accepted, vslot, -1).astype(jnp.int32),
         accepted=accepted,
-        n_accepted=jnp.sum(accepted.astype(jnp.int32)),
+        n_accepted=n_accepted,
+        n_dropped=n_dropped,
         n_doorbells=n_doorbells,
     )
-    drops = valid & ~fits
     dev_drops = jnp.zeros((nd,), jnp.int32).at[dev].add(
         drops.astype(jnp.int32))
+    dev_acc = jnp.zeros((nd,), jnp.int32).at[dev].add(
+        accepted.astype(jnp.int32))
+    t_i = jnp.int32(tenant)
     qs2 = QueueState(
         num_queues=nq, depth=depth, n_devices=nd,
         stripe_blocks=qs.stripe_blocks,
+        n_tenants=qs.n_tenants, tenant_weights=qs.tenant_weights,
         sq_key=sq_key, sq_dst=sq_dst, sq_is_write=sq_is_write,
-        sq_prio=sq_prio,
+        sq_prio=sq_prio, sq_tenant=sq_tenant,
         sq_tail=sq_tail, sq_head=qs.sq_head,
         rr_ptr=(qs.rr_ptr + k_dev) % gsize,
         ticket_total=qs.ticket_total + k,
         doorbells=qs.doorbells + n_doorbells,
         completions=qs.completions,
-        dropped=qs.dropped + jnp.sum(drops.astype(jnp.int32)),
+        dropped=qs.dropped + n_dropped,
         dev_dropped=qs.dev_dropped + dev_drops,
+        dev_enqueued=qs.dev_enqueued + dev_acc,
+        dev_completed=qs.dev_completed,
+        tenant_enqueued=qs.tenant_enqueued.at[t_i].add(n_accepted),
+        tenant_dropped=qs.tenant_dropped.at[t_i].add(n_dropped),
+        tenant_completed=qs.tenant_completed,
     )
     return qs2, receipt
 
@@ -253,9 +324,11 @@ class Completions:
     dst: jax.Array       # (num_queues*depth,) int32
     is_write: jax.Array  # (num_queues*depth,) bool
     prio: jax.Array      # (num_queues*depth,) int32
+    tenant: jax.Array    # (num_queues*depth,) int32 — issuing tenant id
     valid: jax.Array     # (num_queues*depth,) bool
     count: jax.Array     # () int32
     count_dev: jax.Array  # (n_devices,) int32 — drained per device channel
+    count_tenant: jax.Array  # (n_tenants,) int32 — drained per tenant
 
 
 def service_all(qs: QueueState) -> Tuple[QueueState, Completions]:
@@ -274,7 +347,12 @@ def service_all(qs: QueueState) -> Tuple[QueueState, Completions]:
     as far as possible" fast path.
 
     The drain is priority-arbitrated: demand-lane commands come back ahead
-    of readahead-lane commands (stable within each class).
+    of readahead-lane commands (stable within each class).  With
+    ``n_tenants > 1`` each priority class is additionally drained
+    weighted-fair across tenants (ascending virtual finish time
+    ``(i+1)/weight[t]`` for the i-th pending command of tenant ``t``
+    *within that class*), the per-tenant analogue of NVMe
+    weighted-round-robin arbitration.
     """
     pending = qs.sq_key >= 0
     count = jnp.sum(pending.astype(jnp.int32))
@@ -284,35 +362,74 @@ def service_all(qs: QueueState) -> Tuple[QueueState, Completions]:
         .astype(jnp.int32), axis=1)
     flat_pend = pending.reshape(-1)
     flat_prio = qs.sq_prio.reshape(-1)
+    flat_tenant = qs.sq_tenant.reshape(-1)
+    nt = qs.n_tenants
+    tclasses = jnp.arange(nt, dtype=jnp.int32)
+    count_tenant = jnp.sum(
+        (flat_tenant[:, None] == tclasses[None, :]) & flat_pend[:, None],
+        axis=0).astype(jnp.int32)
     flat = (qs.sq_key.reshape(-1), qs.sq_dst.reshape(-1),
-            qs.sq_is_write.reshape(-1), flat_prio, flat_pend)
+            qs.sq_is_write.reshape(-1), flat_prio, flat_tenant, flat_pend)
 
     # Demand first, readahead second, empty slots last; stable keeps
     # queue-major order within each class.  When every pending command is
-    # demand-lane the unsorted rings are already class-sorted, so the
+    # demand-lane (and, multi-tenant, only one tenant has commands in
+    # flight) the unsorted rings are already correctly ordered, so the
     # arbitration sort (an argsort over all num_queues*depth slots) only
-    # runs when readahead is actually in flight.
+    # runs when readahead or genuine tenant contention is in flight.
     def _arbitrate(f):
-        keys, dst, is_write, prio, pend = f
+        keys, dst, is_write, prio, ten, pend = f
         sort_key = jnp.where(pend, prio, jnp.int32(jnp.iinfo(jnp.int32).max))
         order = jnp.argsort(sort_key, stable=True)
         return (keys[order], dst[order], is_write[order], prio[order],
-                pend[order])
+                ten[order], pend[order])
 
-    has_ra = jnp.any(flat_pend & (flat_prio != PRIO_DEMAND))
-    keys_o, dst_o, is_write_o, prio_o, pend_o = jax.lax.cond(
-        has_ra, _arbitrate, lambda f: f, flat)
+    if nt == 1:
+        has_ra = jnp.any(flat_pend & (flat_prio != PRIO_DEMAND))
+        keys_o, dst_o, is_write_o, prio_o, ten_o, pend_o = jax.lax.cond(
+            has_ra, _arbitrate, lambda f: f, flat)
+    else:
+        # Weighted-fair queuing across tenants.  Within each priority
+        # class, the i-th pending command of tenant t (in ring order)
+        # finishes at virtual time (i+1)/w_t; draining in ascending
+        # virtual time interleaves tenants in proportion to their weights.
+        # Ranks are per (tenant, priority) class so a tenant's demand
+        # backlog never delays its own readahead relative to other
+        # tenants' readahead — WFQ orders strictly *within* a class.
+        def _wfq(f):
+            keys, dst, is_write, prio, ten, pend = f
+            w = jnp.asarray(qs.tenant_weights, jnp.float32)
+            cls = ten * 2 + jnp.clip(prio, 0, 1)         # (tenant, prio)
+            cids = jnp.arange(2 * nt, dtype=jnp.int32)
+            oh = ((cls[:, None] == cids[None, :])
+                  & pend[:, None]).astype(jnp.int32)
+            rank = jnp.take_along_axis(
+                jnp.cumsum(oh, axis=0) - oh, cls[:, None], axis=1)[:, 0]
+            vfinish = (rank + 1).astype(jnp.float32) / w[ten]
+            sort_key = jnp.where(pend, prio,
+                                 jnp.int32(jnp.iinfo(jnp.int32).max))
+            pos = jnp.arange(pend.shape[0], dtype=jnp.int32)
+            order = jnp.lexsort((pos, vfinish, sort_key))
+            return tuple(x[order] for x in f)
+
+        has_ra = jnp.any(flat_pend & (flat_prio != PRIO_DEMAND))
+        multi = jnp.sum((count_tenant > 0).astype(jnp.int32)) > 1
+        keys_o, dst_o, is_write_o, prio_o, ten_o, pend_o = jax.lax.cond(
+            has_ra | multi, _wfq, lambda f: f, flat)
     comps = Completions(
         keys=keys_o, dst=dst_o, is_write=is_write_o, prio=prio_o,
-        valid=pend_o, count=count, count_dev=count_dev,
+        tenant=ten_o, valid=pend_o, count=count, count_dev=count_dev,
+        count_tenant=count_tenant,
     )
     qs2 = QueueState(
         num_queues=qs.num_queues, depth=qs.depth, n_devices=qs.n_devices,
         stripe_blocks=qs.stripe_blocks,
+        n_tenants=nt, tenant_weights=qs.tenant_weights,
         sq_key=jnp.full_like(qs.sq_key, -1),
         sq_dst=jnp.full_like(qs.sq_dst, -1),
         sq_is_write=jnp.zeros_like(qs.sq_is_write),
         sq_prio=jnp.zeros_like(qs.sq_prio),
+        sq_tenant=jnp.zeros_like(qs.sq_tenant),
         sq_tail=qs.sq_tail,
         sq_head=qs.sq_tail,           # all consumed
         rr_ptr=qs.rr_ptr,
@@ -321,6 +438,11 @@ def service_all(qs: QueueState) -> Tuple[QueueState, Completions]:
         completions=qs.completions + count,
         dropped=qs.dropped,
         dev_dropped=qs.dev_dropped,
+        dev_enqueued=qs.dev_enqueued,
+        dev_completed=qs.dev_completed + count_dev,
+        tenant_enqueued=qs.tenant_enqueued,
+        tenant_dropped=qs.tenant_dropped,
+        tenant_completed=qs.tenant_completed + count_tenant,
     )
     return qs2, comps
 
@@ -334,3 +456,17 @@ def in_flight_per_device(qs: QueueState) -> jax.Array:
     """Per-device in-flight depth: (n_devices,) — each channel's own Q_d."""
     return jnp.sum((qs.sq_tail - qs.sq_head)
                    .reshape(qs.n_devices, qs.group_size), axis=1)
+
+
+def in_flight_per_tenant(qs: QueueState) -> jax.Array:
+    """Pending commands currently in the rings per tenant: (n_tenants,).
+
+    Counts live SQ entries by their tenant stamp (equivalently,
+    ``tenant_enqueued - tenant_completed`` — the conservation law the
+    property tests check).
+    """
+    pend = (qs.sq_key >= 0).reshape(-1)
+    ten = qs.sq_tenant.reshape(-1)
+    return jnp.sum(
+        (ten[:, None] == jnp.arange(qs.n_tenants, dtype=jnp.int32)[None, :])
+        & pend[:, None], axis=0).astype(jnp.int32)

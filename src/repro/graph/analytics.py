@@ -79,6 +79,35 @@ class BamGraph:
             edge_src=jnp.asarray(edge_src),
             edges=arr, state=st)
 
+    @staticmethod
+    def from_runtime(rt, rst, name: str, indptr: np.ndarray) -> "BamGraph":
+        """Attach a CSR graph whose edge-target array is a *shared-runtime
+        tenant* (multi-tenant BaM: one cache + one queue pool for many
+        apps).
+
+        The tenant registered as ``name`` on :class:`~repro.core.BamRuntime`
+        ``rt`` must hold the CSR ``dst`` array.  :func:`bfs`/:func:`cc`
+        then run against the shared cache/queues under the tenant's way
+        quota and arbitration weight.  The returned graph's ``state`` is
+        the tenant's *view* of ``rst`` — fold the post-traversal state back
+        with ``rt.absorb(rst, name, g_state)`` so neighbours and the global
+        metrics see the traversal's effects.
+        """
+        arr = rt.array(name)
+        n_nodes = len(indptr) - 1
+        n_edges = arr.size
+        if int(indptr[-1]) != n_edges:
+            raise ValueError(
+                f"indptr covers {int(indptr[-1])} edges but tenant "
+                f"{name!r} holds {n_edges}")
+        edge_src = np.repeat(np.arange(n_nodes, dtype=np.int32),
+                             np.diff(indptr))
+        return BamGraph(
+            n_nodes=n_nodes, n_edges=n_edges,
+            indptr=jnp.asarray(indptr, jnp.int32),
+            edge_src=jnp.asarray(edge_src),
+            edges=arr, state=rt.tenant_view(rst, name))
+
 
 # --------------------------------------------------------------------- BFS --
 def bfs(g: BamGraph, source: int, max_iters: Optional[int] = None,

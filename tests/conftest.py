@@ -3,6 +3,22 @@
 import numpy as np
 import pytest
 
+# Reproducible property tests: when hypothesis is installed, register and
+# load a derandomized profile (examples derived from each test's source, no
+# RNG seed dependence) so a CI failure replays identically on a dev box.
+# Set HYPOTHESIS_PROFILE=dev for interactive randomized exploration.
+try:
+    import os
+
+    from hypothesis import settings
+
+    settings.register_profile("ci", derandomize=True, deadline=None,
+                              print_blob=True)
+    settings.register_profile("dev", deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+except ModuleNotFoundError:         # tier-1 runs without hypothesis
+    pass
+
 
 @pytest.fixture
 def rng():

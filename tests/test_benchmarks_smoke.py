@@ -1,0 +1,65 @@
+"""Tier-1 smoke coverage for every benchmark module.
+
+Each ``benchmarks/*.py`` is imported and run under ``BAM_BENCH_SMOKE=1``
+(tiny problem sizes, see ``benchmarks/common.py``), so a benchmark that
+crashes fails the tier-1 suite directly instead of only the separate CI
+bench-smoke job.  The numbers are meaningless at smoke sizes — the
+acceptance gates (device_channels, mixed_tenants) assert only at full
+size in their ``__main__`` blocks.
+"""
+import importlib
+import pathlib
+import sys
+
+import pytest
+
+# repo root (location-independent), so `benchmarks` resolves as a package
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+from benchmarks.run import MODULES           # noqa: E402
+
+
+def _reload_in_smoke_mode(mod_name):
+    """(Re-)import benchmarks.common + the module with smoke mode on, so
+    module-level ``scaled(...)`` constants pick the tiny sizes."""
+    import benchmarks.common as common
+    common = importlib.reload(common)
+    assert common.SMOKE, "BAM_BENCH_SMOKE=1 not seen by benchmarks.common"
+    full = f"benchmarks.{mod_name}"
+    if full in sys.modules:
+        return importlib.reload(sys.modules[full])
+    return importlib.import_module(full)
+
+
+@pytest.fixture()
+def smoke_env(monkeypatch):
+    monkeypatch.setenv("BAM_BENCH_SMOKE", "1")
+    yield
+    # monkeypatch restored the env; drop the smoke-size module objects so
+    # nothing later in the session sees shrunken constants.
+    monkeypatch.undo()
+    for name in list(sys.modules):
+        if name == "benchmarks.common" or name.startswith("benchmarks."):
+            del sys.modules[name]
+
+
+@pytest.mark.parametrize("mod_name", MODULES)
+def test_benchmark_module_smokes(mod_name, smoke_env):
+    mod = _reload_in_smoke_mode(mod_name)
+    rows = mod.run()
+    assert rows, f"{mod_name}.run() returned no rows"
+    for row in rows:
+        name, us, derived = row               # the run.py CSV contract
+        assert isinstance(name, str) and name
+        assert float(us) == float(us)         # not NaN
+        assert isinstance(derived, str)
+
+
+def test_module_list_covers_every_benchmark_file():
+    """A new benchmarks/*.py must be registered in run.MODULES (and hence
+    in this smoke matrix and docs lint)."""
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parent.parent / "benchmarks"
+    files = {p.stem for p in root.glob("*.py")} - {"run", "common"}
+    assert files == set(MODULES), (
+        f"benchmarks/ files {sorted(files)} != run.MODULES "
+        f"{sorted(MODULES)}")

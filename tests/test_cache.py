@@ -98,3 +98,137 @@ def test_same_set_misses_get_distinct_ways(keys):
     cache, alloc = C.allocate(cache, kj, jnp.ones(len(keys), bool))
     slots = np.asarray(alloc.slot)[np.asarray(alloc.ok)]
     assert len(set(slots.tolist())) == len(slots)   # no slot granted twice
+
+
+@given(st.lists(st.tuples(st.sampled_from(["acquire", "release"]),
+                          st.lists(st.integers(-1, 7), min_size=1,
+                                   max_size=6)),
+                min_size=1, max_size=12))
+@settings(max_examples=100, deadline=None)
+def test_refcount_never_negative(ops):
+    """Arbitrary acquire/release interleavings (including releases of slots
+    never acquired and invalid slots) keep every refcount >= 0."""
+    cache = make(num_sets=2, ways=4)
+    for kind, slots in ops:
+        sj = jnp.asarray(slots, jnp.int32)
+        cache = C.acquire(cache, sj) if kind == "acquire" \
+            else C.release(cache, sj)
+        rc = np.asarray(cache.refcount)
+        assert (rc >= 0).all(), rc
+
+
+def test_refcount_example_release_then_acquire():
+    cache = make(num_sets=1, ways=2)
+    cache = C.release(cache, jnp.asarray([0, 0, 1], jnp.int32))
+    assert (np.asarray(cache.refcount) >= 0).all()
+    cache = C.acquire(cache, jnp.asarray([0], jnp.int32))
+    assert np.asarray(cache.refcount).reshape(-1)[0] == 1
+    cache = C.release(cache, jnp.asarray([0, -1], jnp.int32))
+    assert (np.asarray(cache.refcount) == 0).all()
+
+
+def test_promote_only_clears_granted_slots():
+    """promote() clears the speculative bit on exactly the slots passed
+    (negative slots ignored), leaving other speculative lines pending."""
+    cache = make(num_sets=1, ways=4)
+    keys = jnp.asarray([1, 2, 3], jnp.int32)
+    cache, alloc = C.allocate(cache, keys, jnp.ones(3, bool),
+                              speculative=True)
+    assert bool(alloc.ok.all())
+    spec_before = np.asarray(cache.speculative).reshape(-1)
+    assert spec_before[np.asarray(alloc.slot)].all()
+    # promote only the middle line (and an ignored -1)
+    tags_before = np.asarray(cache.tags).copy()
+    cache = C.promote(cache, jnp.asarray([int(alloc.slot[1]), -1], jnp.int32))
+    spec = np.asarray(cache.speculative).reshape(-1)
+    slots = np.asarray(alloc.slot)
+    assert not spec[slots[1]]
+    assert spec[slots[0]] and spec[slots[2]]
+    # tags untouched by promote
+    assert np.array_equal(np.asarray(cache.tags), tags_before)
+
+
+# ------------------------------------------------------------ multi-tenant --
+def _fill_tenant(cache, keys, tenant, way_lo, way_hi, dirty=False):
+    kj = jnp.asarray(keys, jnp.int32)
+    cache, alloc = C.allocate(cache, kj, jnp.ones(len(keys), bool),
+                              tenant=tenant, way_lo=way_lo, way_hi=way_hi)
+    cache = C.fill(cache, alloc.slot, alloc.ok,
+                   jnp.full((len(keys), cache.line_elems), float(tenant)))
+    if dirty:
+        cache = C.mark_dirty(cache, jnp.where(alloc.ok, alloc.slot, -1))
+    return cache, alloc
+
+
+def test_tenant_namespacing_same_keys_distinct_lines():
+    """Block key k of tenant 0 and tenant 1 are different cache lines."""
+    cache = make(num_sets=2, ways=4)
+    keys = [3, 5]
+    cache, a0 = _fill_tenant(cache, keys, 0, 0, 2)
+    cache, a1 = _fill_tenant(cache, keys, 1, 2, 4)
+    assert bool(a0.ok.all()) and bool(a1.ok.all())
+    assert set(np.asarray(a0.slot).tolist()).isdisjoint(
+        np.asarray(a1.slot).tolist())
+    pr0 = C.probe(cache, jnp.asarray(keys, jnp.int32), tenant=0)
+    pr1 = C.probe(cache, jnp.asarray(keys, jnp.int32), tenant=1)
+    assert bool(pr0.hit.all()) and bool(pr1.hit.all())
+    assert not np.array_equal(np.asarray(pr0.slot), np.asarray(pr1.slot))
+    # and the data is each tenant's own
+    assert np.all(np.asarray(cache.data)[np.asarray(pr0.slot)] == 0.0)
+    assert np.all(np.asarray(cache.data)[np.asarray(pr1.slot)] == 1.0)
+
+
+@given(st.lists(st.lists(st.integers(0, 40), min_size=1, max_size=12),
+                min_size=1, max_size=8))
+@settings(max_examples=100, deadline=None)
+def test_partitioned_allocate_never_evicts_foreign_line(rounds):
+    """However hard tenant 1 hammers its way window, tenant 0's resident
+    lines (ways [0, 2)) survive untouched."""
+    cache = make(num_sets=4, ways=4)
+    keys0 = [100, 101, 102, 103]
+    cache, a0 = _fill_tenant(cache, keys0, 0, 0, 2)
+    resident0 = [k for k, ok in zip(keys0, np.asarray(a0.ok)) if ok]
+    for rnd in rounds:
+        keys = np.unique(np.asarray(rnd, np.int32))
+        kj = jnp.asarray(keys)
+        pr = C.probe(cache, kj, tenant=1)
+        cache, alloc = C.allocate(cache, kj, ~pr.hit, protect_slots=pr.slot,
+                                  tenant=1, way_lo=2, way_hi=4)
+        # every granted way lies inside tenant 1's window
+        ways = np.asarray(alloc.slot)[np.asarray(alloc.ok)] % cache.ways
+        assert ((ways >= 2) & (ways < 4)).all(), ways
+        # tenant 0's lines are all still resident
+        pr0 = C.probe(cache, jnp.asarray(resident0, jnp.int32), tenant=0)
+        assert bool(pr0.hit.all())
+        owner = np.asarray(cache.owner)
+        tags = np.asarray(cache.tags)
+        assert not np.any((owner[:, :2] == 1) & (tags[:, :2] >= 0))
+
+
+def test_shared_mode_never_evicts_foreign_dirty_line():
+    """Free-for-all sharing may evict foreign *clean* lines but must leave
+    foreign *dirty* lines alone (their write-back belongs to the owner's
+    storage tier)."""
+    cache = make(num_sets=1, ways=2)
+    cache, a0 = _fill_tenant(cache, [7], 0, 0, 2, dirty=True)   # dirty
+    cache, a1 = _fill_tenant(cache, [9], 0, 0, 2)               # clean
+    assert bool(a0.ok[0]) and bool(a1.ok[0])
+    # tenant 1 wants both ways; only the clean line is a legal victim
+    cache, alloc = C.allocate(cache, jnp.asarray([20, 21], jnp.int32),
+                              jnp.ones(2, bool), tenant=1)
+    assert int(alloc.ok.astype(np.int32).sum()) == 1
+    pr_dirty = C.probe(cache, jnp.asarray([7], jnp.int32), tenant=0)
+    assert bool(pr_dirty.hit[0]), "foreign dirty line was evicted"
+    pr_clean = C.probe(cache, jnp.asarray([9], jnp.int32), tenant=0)
+    assert not bool(pr_clean.hit[0]), "clean line should have been the victim"
+
+
+def test_way_window_validation():
+    cache = make(num_sets=2, ways=4)
+    keys = jnp.asarray([1], jnp.int32)
+    ok = jnp.ones(1, bool)
+    import pytest
+    with pytest.raises(ValueError):
+        C.allocate(cache, keys, ok, way_lo=3, way_hi=3)
+    with pytest.raises(ValueError):
+        C.allocate(cache, keys, ok, way_lo=0, way_hi=5)

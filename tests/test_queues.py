@@ -65,3 +65,142 @@ def test_round_robin_balance():
     qs, _ = Q.enqueue(qs, jnp.arange(32, dtype=jnp.int32))
     per_q = np.asarray(qs.sq_tail)
     assert np.all(per_q == 8)                   # perfectly balanced
+
+
+# ------------------------------------------------- conservation properties --
+def _run_schedule(nq, depth, n_devices, n_tenants, schedule):
+    """Random submit/service schedule; returns the final QueueState and the
+    multiset of serviced keys."""
+    qs = Q.make_queues(nq, depth, n_devices=n_devices, n_tenants=n_tenants)
+    serviced = []
+    for tenant, wave, do_service in schedule:
+        keys = jnp.asarray(wave, jnp.int32)
+        qs, rec = Q.enqueue(qs, keys, tenant=tenant % n_tenants)
+        # drops + accepts partition the valid submissions of every wave
+        assert int(rec.n_accepted) + int(rec.n_dropped) \
+            == int((keys >= 0).sum())
+        # per-device in-flight never exceeds the device's ring capacity
+        inflight_dev = np.asarray(Q.in_flight_per_device(qs))
+        assert (inflight_dev <= (nq // n_devices) * depth).all()
+        assert (inflight_dev >= 0).all()
+        if do_service:
+            qs, comps = Q.service_all(qs)
+            got = np.asarray(comps.keys)[np.asarray(comps.valid)]
+            serviced.extend(got.tolist())
+    return qs, serviced
+
+
+@given(st.integers(1, 2),            # n_devices multiplier
+       st.integers(2, 6),            # depth
+       st.integers(1, 3),            # n_tenants
+       st.lists(st.tuples(st.integers(0, 2),
+                          st.lists(st.integers(-2, 60), min_size=1,
+                                   max_size=16),
+                          st.booleans()),
+                min_size=1, max_size=8))
+@settings(max_examples=100, deadline=None)
+def test_conservation_per_device_and_tenant(ndev, depth, n_tenants,
+                                            schedule):
+    nq = 2 * ndev
+    qs, _ = _run_schedule(nq, depth, ndev, n_tenants, schedule)
+    qs, _ = Q.service_all(qs)        # final drain
+    # global: every valid submission (= ticket issued) was either
+    # completed or dropped — nothing lost, nothing invented
+    assert int(qs.completions) + int(qs.dropped) == int(qs.ticket_total)
+    # per tenant: enqueued == completed after a full drain, and enqueued +
+    # dropped covers every valid submission of that tenant
+    enq = np.asarray(qs.tenant_enqueued)
+    comp = np.asarray(qs.tenant_completed)
+    drop = np.asarray(qs.tenant_dropped)
+    assert np.array_equal(enq, comp), (enq, comp)
+    assert (drop >= 0).all()
+    assert int(qs.dropped) == int(drop.sum())
+    assert int(qs.completions) == int(comp.sum())
+    # per device: same conservation on the channel axis
+    denq = np.asarray(qs.dev_enqueued)
+    dcomp = np.asarray(qs.dev_completed)
+    ddrop = np.asarray(qs.dev_dropped)
+    assert np.array_equal(denq, dcomp), (denq, dcomp)
+    assert int(qs.dropped) == int(ddrop.sum())
+    assert np.asarray(Q.in_flight_per_tenant(qs)).sum() == 0
+
+
+def test_conservation_example_tiny_rings():
+    """Deterministic slice of the property: depth-2 rings, 2 tenants, heavy
+    overflow; nothing lost, nothing double-counted."""
+    qs = Q.make_queues(2, 2, n_tenants=2)
+    qs, r0 = Q.enqueue(qs, jnp.arange(10, dtype=jnp.int32), tenant=0)
+    qs, r1 = Q.enqueue(qs, 100 + jnp.arange(6, dtype=jnp.int32), tenant=1)
+    assert int(r0.n_accepted) + int(r0.n_dropped) == 10
+    assert int(r1.n_accepted) + int(r1.n_dropped) == 6
+    inflight = np.asarray(Q.in_flight_per_tenant(qs))
+    assert inflight.sum() == int(r0.n_accepted) + int(r1.n_accepted)
+    qs, comps = Q.service_all(qs)
+    assert np.array_equal(np.asarray(qs.tenant_enqueued),
+                          np.asarray(qs.tenant_completed))
+    assert int(qs.dropped) == int(r0.n_dropped) + int(r1.n_dropped)
+    assert np.asarray(Q.in_flight_per_tenant(qs)).sum() == 0
+
+
+def test_weighted_fair_drain_interleaves_tenants():
+    """With weights (1, 2) tenant 1 retires ~2 commands per tenant-0
+    command in every drain prefix (WFQ, not FIFO bursts)."""
+    qs = Q.make_queues(2, 32, n_tenants=2, tenant_weights=(1.0, 2.0))
+    qs, _ = Q.enqueue(qs, jnp.arange(8, dtype=jnp.int32), tenant=0)
+    qs, _ = Q.enqueue(qs, 100 + jnp.arange(16, dtype=jnp.int32), tenant=1)
+    qs, comps = Q.service_all(qs)
+    ten = np.asarray(comps.tenant)[np.asarray(comps.valid)]
+    # prefix fairness: after k completions, tenant 1 has at least its
+    # weighted share minus one command of slack
+    for k in range(1, len(ten) + 1):
+        n1 = int((ten[:k] == 1).sum())
+        assert n1 >= (2 * k) // 3 - 1, (k, ten[:k].tolist())
+    # both tenants fully drained
+    assert int((ten == 0).sum()) == 8 and int((ten == 1).sum()) == 16
+
+
+def test_priority_still_dominates_tenant_arbitration():
+    """Demand commands of any tenant drain before readahead of any tenant;
+    WFQ only orders *within* a priority class."""
+    qs = Q.make_queues(2, 32, n_tenants=2)
+    qs, _ = Q.enqueue(qs, jnp.arange(4, dtype=jnp.int32),
+                      prio=Q.PRIO_READAHEAD, tenant=0)
+    qs, _ = Q.enqueue(qs, 100 + jnp.arange(4, dtype=jnp.int32), tenant=1)
+    qs, comps = Q.service_all(qs)
+    prio = np.asarray(comps.prio)[np.asarray(comps.valid)]
+    assert (np.diff(prio) >= 0).all(), prio
+    assert prio[0] == Q.PRIO_DEMAND and prio[-1] == Q.PRIO_READAHEAD
+
+
+def test_wfq_ranks_are_per_priority_class():
+    """A tenant's demand backlog must not delay its readahead relative to
+    other tenants' readahead: ranks reset per (tenant, priority) class."""
+    qs = Q.make_queues(2, 32, n_tenants=2)
+    qs, _ = Q.enqueue(qs, jnp.arange(16, dtype=jnp.int32), tenant=0)
+    qs, _ = Q.enqueue(qs, 50 + jnp.arange(4, dtype=jnp.int32),
+                      prio=Q.PRIO_READAHEAD, tenant=0)
+    qs, _ = Q.enqueue(qs, 100 + jnp.arange(4, dtype=jnp.int32),
+                      prio=Q.PRIO_READAHEAD, tenant=1)
+    qs, comps = Q.service_all(qs)
+    v = np.asarray(comps.valid)
+    prio = np.asarray(comps.prio)[v]
+    ten = np.asarray(comps.tenant)[v]
+    ra = ten[prio == Q.PRIO_READAHEAD]
+    # equal weights -> strict 1:1 interleave inside the readahead class,
+    # regardless of tenant 0's 16-command demand backlog
+    for k in range(1, len(ra) + 1):
+        assert abs(int((ra[:k] == 0).sum()) - int((ra[:k] == 1).sum())) <= 1, \
+            ra.tolist()
+
+
+def test_single_active_tenant_keeps_ring_order():
+    """Multi-tenant pool, but only one tenant has pending commands and no
+    readahead: the fast path must return plain ring order."""
+    qs = Q.make_queues(2, 8, n_tenants=3)
+    keys = jnp.arange(6, dtype=jnp.int32)
+    qs, _ = Q.enqueue(qs, keys, tenant=1)
+    qs, comps = Q.service_all(qs)
+    got = np.asarray(comps.keys)[np.asarray(comps.valid)]
+    # round-robin over 2 queues: queue-major drain order is 0,2,4,1,3,5
+    assert got.tolist() == [0, 2, 4, 1, 3, 5]
+    assert int(qs.tenant_completed[1]) == 6

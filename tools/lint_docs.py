@@ -10,7 +10,8 @@ import pathlib
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
-REQUIRED_DOCS = ["README.md", "docs/architecture.md", "docs/benchmarks.md"]
+REQUIRED_DOCS = ["README.md", "docs/architecture.md", "docs/benchmarks.md",
+                 "docs/testing.md"]
 
 
 def main() -> int:
