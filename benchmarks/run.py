@@ -17,6 +17,7 @@ Prints ``name,us_per_call,derived`` CSV.  Each module's ``run()`` returns
   moe_paging               (beyond paper) expert paging
   prefetch_sweep           (beyond paper) readahead window sweep
   mixed_tenants            (§I sharing claim) multi-tenant isolation
+  async_overlap            (§II-C) submit/wait token window depth sweep
 
 Set ``BAM_BENCH_SMOKE=1`` to shrink every module to smoke-test sizes (CI).
 """
@@ -28,7 +29,7 @@ MODULES = [
     "littles_law", "ssd_cost", "uvm_bound", "analytics_amplification",
     "iops_scaling", "graph_analytics", "cacheline_sweep", "ssd_scaling",
     "device_channels", "taxi_queries", "paged_kv", "moe_paging",
-    "prefetch_sweep", "mixed_tenants",
+    "prefetch_sweep", "mixed_tenants", "async_overlap",
 ]
 
 

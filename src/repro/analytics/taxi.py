@@ -23,7 +23,7 @@ import numpy as np
 
 from typing import Optional
 
-from repro.core import BamArray, BamState, PrefetchConfig
+from repro.core import BamArray, BamState, IORequest, PrefetchConfig
 from repro.core.ssd import ArrayOfSSDs, INTEL_OPTANE_P5800X
 
 COLUMNS = ["pickup_gid", "trip_dist", "total_amt", "surcharge",
@@ -121,10 +121,16 @@ def run_query(tbl: TaxiTable, query: str) -> Tuple[dict, dict]:
     return {"query": query, "value": res}, io
 
 
-def scan_column(tbl: TaxiTable, name: str, *, wavefront: int = 1024
-                ) -> Tuple[float, dict]:
+def scan_column(tbl: TaxiTable, name: str, *, wavefront: int = 1024,
+                window: int = 0) -> Tuple[float, dict]:
     """Full sequential scan of one BaM-resident column, one wavefront at a
-    time — the readahead showcase.
+    time — the readahead / async-window showcase.
+
+    With ``window >= 1`` the scan holds that many wavefronts *in flight*
+    through the submit/wait token API: up to ``window`` reads' SQ commands
+    coexist in the rings before the oldest is drained, so the queues fill
+    toward the Little's-law depth instead of draining one wavefront at a
+    time (``window=0`` keeps the synchronous per-op path).
 
     With the table built under ``PrefetchConfig(enabled=True)``, each
     wavefront's stride-1 pattern triggers the readahead detector, so every
@@ -133,8 +139,24 @@ def scan_column(tbl: TaxiTable, name: str, *, wavefront: int = 1024
     where the summary is the column's cumulative :class:`IOMetrics`.
     """
     arr, st = tbl.cols[name], tbl.states[name]
-    read = jax.jit(arr.read)
     total = 0.0
+    if window > 0:
+        submit = jax.jit(lambda s, i: arr.submit(s, IORequest.read(i)))
+        wait = jax.jit(arr.wait)
+        pending: List = []
+        for start in range(0, tbl.n_rows, wavefront):
+            idx = jnp.arange(start, start + wavefront, dtype=jnp.int32)
+            st, tok = submit(st, idx)
+            pending.append(tok)
+            if len(pending) >= window:
+                st, v = wait(st, pending.pop(0))
+                total += float(v.sum())
+        while pending:
+            st, v = wait(st, pending.pop(0))
+            total += float(v.sum())
+        tbl.states[name] = st
+        return total, st.metrics.summary()
+    read = jax.jit(arr.read)
     for start in range(0, tbl.n_rows, wavefront):
         idx = jnp.arange(start, start + wavefront, dtype=jnp.int32)
         v, st = read(st, idx)

@@ -12,8 +12,8 @@ Layers (bottom-up):
   metrics.py    I/O amplification & throughput counters  (paper §II-B)
 """
 from repro.core.bam_array import (
-    BamArray, BamKVStore, BamRuntime, BamState, RuntimeState, TenantCtx,
-    TenantSpec,
+    BamArray, BamKVStore, BamRuntime, BamState, IORequest, IOToken,
+    RuntimeState, TenantCtx, TenantSpec,
 )
 from repro.core.cache import CacheState, make_cache
 from repro.core.coalescer import CoalesceResult, coalesce
@@ -34,7 +34,8 @@ from repro.core.ssd import (
 from repro.core.storage import HBMStorage, SimStorage
 
 __all__ = [
-    "BamArray", "BamKVStore", "BamRuntime", "BamState", "RuntimeState",
+    "BamArray", "BamKVStore", "BamRuntime", "BamState", "IORequest",
+    "IOToken", "RuntimeState",
     "TenantCtx", "TenantSpec", "CacheState", "make_cache",
     "CoalesceResult", "coalesce", "IOMetrics", "metrics_accumulate",
     "metrics_delta", "metrics_sum", "pipelined_bam_map",

@@ -10,6 +10,20 @@ and returns elements.  Here the subscript is a *functional* ``read``:
 with every piece of BaM state (cache, queues, I/O metrics, and — for the
 in-graph backend — the storage tier itself) threaded through explicitly.
 
+Asynchrony is first-class: the primitive surface is ``submit(st, req) ->
+(st, token)`` / ``wait(st, token) -> (st, values)``, where
+:class:`IORequest` is the unified op descriptor (read / write / prefetch
+share one submission path) and :class:`IOToken` the redeemable future.
+``submit`` probes, pins, allocates and enqueues SQ commands *without*
+draining; ``wait`` drains, performs the deferred fetch DMA, fills,
+gathers and unpins.  Many tokens may be outstanding at once — that is
+the paper's whole point (§II-C): the queues must hold ``Q_d = T x L``
+requests in flight, which a synchronous per-op API can never reach.
+Duplicate blocks are coalesced *across* pending ops (a submission that
+probes a line another token is already fetching rides that command — the
+cache's in-flight bit is the per-line lock), and the legacy ``read`` /
+``write`` / ``prefetch`` calls below are thin submit+wait shims.
+
 The life of a wavefront (paper Fig. 3, adapted):
 
     element idx ──► block key + offset
@@ -67,7 +81,8 @@ from repro.core.storage import HBMStorage, SimStorage
 from repro.utils import pytree_dataclass, round_up
 
 __all__ = ["BamArray", "BamState", "BamKVStore", "PrefetchConfig",
-           "TenantCtx", "TenantSpec", "BamRuntime", "RuntimeState"]
+           "TenantCtx", "TenantSpec", "BamRuntime", "RuntimeState",
+           "IORequest", "IOToken"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +110,64 @@ class BamState:
     storage: Any  # HBMStorage pytree for the in-graph backend, else None
 
 
+@pytree_dataclass(meta_fields=("kind",))
+class IORequest:
+    """Unified op descriptor: read / write / prefetch share one submission
+    path (:meth:`BamArray.submit`).
+
+    ``idx`` is a wavefront of element indices; ``valid`` masks lanes
+    (``None`` = in-bounds check); ``values`` carries the write payload for
+    ``kind="write"``.  Build with the :meth:`read`/:meth:`write`/
+    :meth:`prefetch` constructors rather than the raw dataclass.
+    """
+
+    kind: str                       # "read" | "write" | "prefetch"
+    idx: jax.Array                  # (n,) element indices
+    values: jax.Array | None = None  # (n,) write payload (kind="write")
+    valid: jax.Array | None = None  # (n,) lane mask; None = bounds check
+
+    @staticmethod
+    def read(idx: jax.Array, valid: jax.Array | None = None) -> "IORequest":
+        return IORequest(kind="read", idx=idx, valid=valid)
+
+    @staticmethod
+    def write(idx: jax.Array, values: jax.Array,
+              valid: jax.Array | None = None) -> "IORequest":
+        return IORequest(kind="write", idx=idx, values=values, valid=valid)
+
+    @staticmethod
+    def prefetch(idx: jax.Array,
+                 valid: jax.Array | None = None) -> "IORequest":
+        return IORequest(kind="prefetch", idx=idx, valid=valid)
+
+
+@pytree_dataclass(meta_fields=("kind",))
+class IOToken:
+    """Future returned by :meth:`BamArray.submit`; redeem exactly once with
+    :meth:`BamArray.wait`.
+
+    A token is a fixed-shape pytree (it rides ``lax.scan`` carries), holding
+    what completion needs: the request's lane geometry, the unique block
+    keys, the cache slots pinned at submit (released at wait), the write
+    payload, and the per-device command histograms for the accounting that
+    is deferred to the drain.  Dropping a token without waiting it leaks
+    its cache pins; waiting it twice over-releases them.
+    """
+
+    kind: str                       # mirrors the IORequest kind
+    valid: jax.Array                # (n,) request lanes
+    off: jax.Array                  # (n,) element offset within its line
+    inverse: jax.Array              # (n,) request lane -> unique-key row
+    ukeys: jax.Array                # (n,) coalesced block keys, -1 padded
+    pin_slots: jax.Array            # (n,) flat slots pinned at submit (-1 none)
+    values: jax.Array | None        # (n,) write payload (kind="write")
+    ra_keys: jax.Array | None       # (window,) stride-readahead keys issued
+    dev_reads: jax.Array            # (nd,) read commands issued (incl. dropped)
+    dev_writes: jax.Array           # (nd,) write commands issued (incl. dropped)
+    drop_dev_reads: jax.Array       # (nd,) read commands the rings rejected
+    drop_dev_writes: jax.Array      # (nd,) write commands the rings rejected
+
+
 @dataclasses.dataclass
 class BamArray:
     """Static description of one BaM-backed array (not a pytree)."""
@@ -113,10 +186,6 @@ class BamArray:
     # (BamRuntime.drain), so several tenants' commands genuinely coexist
     # and the weighted-fair arbitration orders a real mixed stream.
     defer_drain: bool = False
-
-    def _drain(self, qs: Q.QueueState) -> Q.QueueState:
-        """Per-op ring drain, skipped under the runtime's deferred mode."""
-        return qs if self.defer_drain else Q.service_all(qs)[0]
 
     # ---------------------------------------------------------------- init
     @staticmethod
@@ -208,44 +277,34 @@ class BamArray:
         return (idx // self.block_elems).astype(jnp.int32), \
                (idx % self.block_elems).astype(jnp.int32)
 
-    def _charge_channels(self, mt: IOMetrics, qs: Q.QueueState,
-                         dev_reads: jax.Array, dev_writes: jax.Array,
-                         depth_now: jax.Array, depth_dev: jax.Array) -> dict:
-        """Device-time and per-device counter updates shared by every I/O
-        path (read/write/prefetch/flush).
+    # ----------------------------------------------------------- async core
+    def submit(self, st: BamState, req: IORequest
+               ) -> Tuple[BamState, IOToken]:
+        """Issue a wavefront of storage commands without draining them.
 
-        Each channel drains its own share at its own Little's-law rate
-        (concurrency capped by its queue group's depth); the wavefront is
-        gated by the slowest channel.  Returns the IOMetrics field updates
-        as kwargs so callers splice them into their own counter math.
+        The submission half of every op (read/write/prefetch — one path):
+
+            coalesce -> probe -> pin -> allocate (+mark in-flight)
+                     -> write back evicted dirty lines -> enqueue SQ commands
+
+        No DMA fetch, no ring drain, no device-time charge happens here;
+        those belong to :meth:`wait`.  Multiple tokens may be outstanding at
+        once: every line this op touched (hit or newly granted) is pinned
+        until its wait, granted-but-unfilled lines carry the cache's
+        ``inflight`` bit, and a later submission that probes a key another
+        pending token is already fetching *coalesces* against it (counted in
+        ``cross_op_coalesced``) instead of enqueuing a duplicate command —
+        the submission-window coalescer working across ops, not just within
+        one wavefront.
         """
-        group_limit = qs.group_size * qs.depth
-        t_read, t_read_dev = self.ssd.service_time_per_device_traced(
-            dev_reads, self.block_bytes, queue_depth_limit=group_limit)
-        t_write, t_write_dev = self.ssd.service_time_per_device_traced(
-            dev_writes, self.block_bytes, write=True,
-            queue_depth_limit=group_limit)
-        return dict(
-            sim_time_s=mt.sim_time_s + t_read + t_write,
-            read_time_s=mt.read_time_s + t_read,
-            write_time_s=mt.write_time_s + t_write,
-            max_queue_depth=jnp.maximum(mt.max_queue_depth,
-                                        depth_now.astype(jnp.int32)),
-            dev_reads=mt.dev_reads + dev_reads,
-            dev_writes=mt.dev_writes + dev_writes,
-            dev_bytes=mt.dev_bytes
-                + (dev_reads + dev_writes) * self.block_bytes,
-            dev_time_s=mt.dev_time_s + t_read_dev + t_write_dev,
-            dev_max_depth=jnp.maximum(mt.dev_max_depth,
-                                      depth_dev.astype(jnp.int32)),
-        )
-
-    # ---------------------------------------------------------------- read
-    def read(self, st: BamState, idx: jax.Array,
-             valid: jax.Array | None = None) -> Tuple[jax.Array, BamState]:
-        """Gather ``self.flat[idx]`` for a wavefront of element indices."""
         self._check_channels(st)
-        n = idx.shape[0]
+        kind = req.kind
+        if kind not in ("read", "write", "prefetch"):
+            raise ValueError(f"unknown IORequest kind {kind!r}")
+        if kind == "write" and req.values is None:
+            raise ValueError("IORequest(kind='write') needs values")
+        idx = req.idx
+        valid = req.valid
         if valid is None:
             valid = (idx >= 0) & (idx < self.size)
         blk, off = self._split(jnp.where(valid, idx, 0))
@@ -255,35 +314,55 @@ class BamArray:
         co = coalesce(blk, valid)
         ukeys = co.unique_keys                      # (n,) padded with -1
         uvalid = ukeys >= 0
-
-        # 2) probe the software cache.  A demand hit on a prefetched line is
-        #    a prefetch hit: promote the line to an ordinary resident.
         ctx = self.tenant_ctx
+        nd = self.ssd.n_devices
+        sb = self.ssd.stripe_blocks
+        mt = st.metrics
         pr = C.probe(st.cache, ukeys, uvalid, tenant=ctx.tenant)
+
+        if kind == "prefetch":
+            return self._submit_prefetch(st, co, pr, off, valid)
+
+        # 2) demand probe accounting.  A hit on a prefetched line promotes
+        #    it; a hit on an *in-flight* line is a cross-op coalesce — some
+        #    pending token already has the fetch in the rings, so this op
+        #    rides that command instead of issuing its own.
         n_hit = jnp.sum(pr.hit.astype(jnp.int32))
         n_pref_hit = jnp.sum(pr.speculative.astype(jnp.int32))
+        n_cross = jnp.sum(pr.inflight.astype(jnp.int32))
         cache1 = C.count_hits(st.cache, n_hit)
         cache1 = C.promote(cache1, jnp.where(pr.speculative, pr.slot, -1))
         miss = uvalid & ~pr.hit
 
-        # 3) allocate victims for the misses (hits protected this round).
+        # 3) allocate victims for the misses (hits protected this round;
+        #    lines pinned by other outstanding tokens are refcount-protected).
         cache2, alloc = C.allocate(cache1, ukeys, miss,
                                    protect_slots=pr.slot,
                                    tenant=ctx.tenant, way_lo=ctx.way_lo,
                                    way_hi=ctx.way_hi)
 
-        # 4) evicted dirty lines -> write-back commands (gather before fill).
+        # 3b) pin everything this token touched until its wait, and mark
+        #     granted (not-yet-filled) lines in flight.
+        pin_slots = jnp.where(pr.hit, pr.slot,
+                              jnp.where(alloc.ok, alloc.slot, -1))
+        cache2 = C.acquire(cache2, pin_slots)
+        cache2 = C.mark_inflight(cache2,
+                                 jnp.where(alloc.ok, alloc.slot, -1))
+
+        # 4) evicted dirty lines -> write-back commands + immediate DMA
+        #    (the line leaves the cache now, so its bytes must be persisted
+        #    now; only the *fetch* side of the op is deferred to wait()).
         ev_rows = jnp.where(alloc.ok, alloc.slot, 0)
         ev_lines = cache2.data[ev_rows]
         wb = alloc.ok & alloc.evicted_dirty & (alloc.evicted_key >= 0)
         wb_keys = jnp.where(wb, alloc.evicted_key, -1)
 
-        # 4b) readahead: extrapolate the wavefront's stride pattern and
-        #     speculatively allocate the predicted lines.  Demand slots (this
-        #     round's hits and grants) are protected, so readahead can only
-        #     claim invalid or stale lines — it never displaces the wavefront.
+        # 4b) readahead (read ops): extrapolate the wavefront's stride and
+        #     speculatively claim the predicted lines — enqueued in the
+        #     low-priority lane, fetched at wait.
         cfg = self.prefetch_cfg
-        ra_on = cfg.enabled and cfg.window > 0
+        ra_on = kind == "read" and cfg.enabled and cfg.window > 0
+        ra_keys_tok = None
         if ra_on:
             ra_cand = readahead_keys(
                 ukeys, uvalid, window=cfg.window, num_blocks=self.num_blocks,
@@ -312,16 +391,40 @@ class BamArray:
             ra_wb = ra_alloc.ok & ra_alloc.evicted_dirty \
                 & (ra_alloc.evicted_key >= 0)
             ra_wb_keys = jnp.where(ra_wb, ra_alloc.evicted_key, -1)
+            cache2 = C.mark_inflight(
+                cache2, jnp.where(ra_alloc.ok, ra_alloc.slot, -1))
+            ra_keys_tok = ra_keys
 
-        # 5) submit reads + write-backs to the SQ rings; ring doorbells.
+        # 5) enqueue reads + write-backs into the SQ rings; ring doorbells.
         #    Readahead goes last and in the low-priority lane: it is the
         #    first thing dropped under back-pressure and the last retired.
-        qs1, rec_r = Q.enqueue(st.queues, jnp.where(miss, ukeys, -1),
+        #    The rings are NOT drained here — that is wait()'s job, so
+        #    commands from several outstanding tokens genuinely coexist and
+        #    the queues fill toward the Little's-law depth.
+        qs2, rec_r = Q.enqueue(st.queues, jnp.where(miss, ukeys, -1),
                                dst=alloc.slot, tenant=ctx.tenant)
-        qs2, rec_w = Q.enqueue(qs1, wb_keys,
+        qs2, rec_w = Q.enqueue(qs2, wb_keys,
                                is_write=jnp.ones_like(wb), tenant=ctx.tenant)
         n_doorbells = rec_r.n_doorbells + rec_w.n_doorbells
         n_dropped = rec_r.n_dropped + rec_w.n_dropped
+        dev_reads_tok = device_histogram(ukeys, nd, miss, sb)
+        dev_writes_tok = device_histogram(wb_keys, nd, stripe_blocks=sb)
+        drop_reads = device_histogram(jnp.where(miss, ukeys, -1), nd,
+                                      ~rec_r.accepted, sb)
+        drop_writes = device_histogram(wb_keys, nd, ~rec_w.accepted, sb)
+        if kind == "write":
+            # Bypassed lines (no slot granted) are written through at wait;
+            # their commands ride the rings like every other write.
+            byp = miss & ~alloc.ok
+            bt_keys = jnp.where(byp, ukeys, -1)
+            qs2, rec_bt = Q.enqueue(qs2, bt_keys, is_write=jnp.ones_like(byp),
+                                    tenant=ctx.tenant)
+            n_doorbells = n_doorbells + rec_bt.n_doorbells
+            n_dropped = n_dropped + rec_bt.n_dropped
+            dev_writes_tok = dev_writes_tok + device_histogram(
+                bt_keys, nd, stripe_blocks=sb)
+            drop_writes = drop_writes + device_histogram(
+                bt_keys, nd, ~rec_bt.accepted, sb)
         if ra_on:
             qs2, rec_rw = Q.enqueue(qs2, ra_wb_keys,
                                     is_write=jnp.ones_like(ra_wb),
@@ -330,84 +433,326 @@ class BamArray:
                                     prio=Q.PRIO_READAHEAD, tenant=ctx.tenant)
             n_doorbells = n_doorbells + rec_rw.n_doorbells + rec_ra.n_doorbells
             n_dropped = n_dropped + rec_rw.n_dropped + rec_ra.n_dropped
+            dev_reads_tok = dev_reads_tok + device_histogram(
+                ra_keys, nd, stripe_blocks=sb)
+            dev_writes_tok = dev_writes_tok + device_histogram(
+                ra_wb_keys, nd, stripe_blocks=sb)
+            drop_reads = drop_reads + device_histogram(
+                ra_keys, nd, ~rec_ra.accepted, sb)
+            drop_writes = drop_writes + device_histogram(
+                ra_wb_keys, nd, ~rec_rw.accepted, sb)
         depth_now = Q.in_flight(qs2)
         depth_dev = Q.in_flight_per_device(qs2)
-        qs3 = self._drain(qs2)
 
-        # 6) the DMA: fetch missed lines / write back dirty lines.  Fetch
-        #    keys are disjoint from this round's evictions (demand misses
-        #    by the probe, readahead by the explicit exclusion above), so
-        #    the unordered fetch callback can never race a write-back of
-        #    the same line.
+        # 6) persist evicted dirty lines (write DMA happens at submit; the
+        #    fetch DMA is deferred to wait).
         store = self._store(st)
-        lines_u = store.fetch_blocks(jnp.where(miss, ukeys, -1))
         new_storage = st.storage
         if self.storage is None:                    # in-graph backend
             new_storage = store.write_blocks(wb_keys, ev_lines)
             if ra_on:
-                new_storage = new_storage.write_blocks(ra_wb_keys, ra_ev_lines)
-                lines_ra = new_storage.fetch_blocks(ra_keys)
+                new_storage = new_storage.write_blocks(ra_wb_keys,
+                                                       ra_ev_lines)
         else:
             self.storage.write_blocks(wb_keys, ev_lines)
             if ra_on:
                 self.storage.write_blocks(ra_wb_keys, ra_ev_lines)
-                lines_ra = self.storage.fetch_blocks(ra_keys)
 
-        # 7) completion: fill granted slots with fetched lines.
-        cache3 = C.fill(cache2, alloc.slot, alloc.ok, lines_u)
-        if ra_on:
-            cache3 = C.fill(cache3, ra_alloc.slot, ra_alloc.ok, lines_ra)
-
-        # 8) gather elements back to every requester (leader broadcast).
-        u = co.inverse_idx                          # (n,) request -> unique row
-        hit_u = pr.hit[u]
-        slot_u = jnp.where(pr.slot[u] >= 0, pr.slot[u], 0)
-        from_cache = cache3.data[slot_u, off]
-        from_fetch = lines_u[u, off]
-        vals = jnp.where(hit_u, from_cache, from_fetch)
-        vals = jnp.where(valid, vals, 0).astype(self.dtype)
-
-        # 9) metrics.  Readahead reads share the device drain with demand
-        #    (one busy-time accumulation) but are accounted separately:
-        #    ``misses`` stays demand-only, ``prefetch_issued`` carries the
-        #    speculative lines, and both contribute to bytes moved.  Device
-        #    time is per channel: each device drains its own share, the
-        #    slowest one gates the wavefront (max, not average).
+        # 7) submission-side metrics.  Device busy time, bytes fetched and
+        #    the per-device charge histograms are wait-side (they belong to
+        #    the drain); everything the submission itself decides is here.
         n_valid = jnp.sum(valid.astype(jnp.int32))
         n_miss = jnp.sum(miss.astype(jnp.int32))
         n_wb = jnp.sum(wb.astype(jnp.int32))
         n_ra = jnp.zeros((), jnp.int32)
-        nd = self.ssd.n_devices
-        dev_reads = device_histogram(ukeys, nd, miss, self.ssd.stripe_blocks)
-        dev_writes = device_histogram(wb_keys, nd,
-                                      stripe_blocks=self.ssd.stripe_blocks)
         if ra_on:
             n_ra = jnp.sum(ra_alloc.ok.astype(jnp.int32))
             n_wb = n_wb + jnp.sum(ra_wb.astype(jnp.int32))
-            dev_reads = dev_reads + device_histogram(
-                ra_keys, nd, stripe_blocks=self.ssd.stripe_blocks)
-            dev_writes = dev_writes + device_histogram(
-                ra_wb_keys, nd, stripe_blocks=self.ssd.stripe_blocks)
+        if kind == "write":
+            n_wb = n_wb + jnp.sum(byp.astype(jnp.int32))
         itemsize = jnp.dtype(self.dtype).itemsize
-        mt = st.metrics
-        metrics = IOMetrics(
+        tok_new = jnp.any(valid).astype(mt.requests.dtype)
+        window_now = (mt.tokens_in_flight + tok_new).astype(jnp.int32)
+        metrics = dataclasses.replace(
+            mt,
             requests=mt.requests + n_valid,
             bytes_requested=mt.bytes_requested + n_valid * itemsize,
             hits=mt.hits + n_hit,
             misses=mt.misses + n_miss,
-            bytes_from_storage=mt.bytes_from_storage
-                + (n_miss + n_ra) * self.block_bytes,
             write_ops=mt.write_ops + n_wb,
             bytes_to_storage=mt.bytes_to_storage + n_wb * self.block_bytes,
             doorbells=mt.doorbells + n_doorbells,
             dropped=mt.dropped + n_dropped,
             prefetch_issued=mt.prefetch_issued + n_ra,
             prefetch_hits=mt.prefetch_hits + n_pref_hit,
-            **self._charge_channels(mt, st.queues, dev_reads, dev_writes,
-                                    depth_now, depth_dev),
+            max_queue_depth=jnp.maximum(mt.max_queue_depth,
+                                        depth_now.astype(jnp.int32)),
+            dev_max_depth=jnp.maximum(mt.dev_max_depth,
+                                      depth_dev.astype(jnp.int32)),
+            tokens_submitted=mt.tokens_submitted + tok_new,
+            tokens_in_flight=mt.tokens_in_flight + tok_new,
+            cross_op_coalesced=mt.cross_op_coalesced + n_cross,
+            max_tokens_in_flight=jnp.maximum(mt.max_tokens_in_flight,
+                                             window_now),
         )
-        return vals, BamState(cache=cache3, queues=qs3, metrics=metrics,
-                              storage=new_storage)
+        token = IOToken(
+            kind=kind, valid=valid, off=off, inverse=co.inverse_idx,
+            ukeys=ukeys, pin_slots=pin_slots,
+            values=req.values if kind == "write" else None,
+            ra_keys=ra_keys_tok,
+            dev_reads=dev_reads_tok, dev_writes=dev_writes_tok,
+            drop_dev_reads=drop_reads, drop_dev_writes=drop_writes)
+        return BamState(cache=cache2, queues=qs2, metrics=metrics,
+                        storage=new_storage), token
+
+    def _submit_prefetch(self, st: BamState, co, pr, off, valid
+                         ) -> Tuple[BamState, IOToken]:
+        """Prefetch submission: speculative insert-without-pin through the
+        readahead lane.  Unlike demand ops the granted lines are *not*
+        pinned (a hint that never materialises stays the clock hand's first
+        victim), but they do carry the in-flight bit so demand submissions
+        coalesce against them instead of double-fetching."""
+        ctx = self.tenant_ctx
+        nd = self.ssd.n_devices
+        sb = self.ssd.stripe_blocks
+        mt = st.metrics
+        ukeys = co.unique_keys
+        uvalid = ukeys >= 0
+        # A hint landing on a line some pending token is already fetching
+        # is a cross-op coalesce too: nothing to claim, nothing to enqueue.
+        n_cross = jnp.sum(pr.inflight.astype(jnp.int32))
+        want = uvalid & ~pr.hit
+        cache1, alloc = C.allocate(st.cache, ukeys, want,
+                                   protect_slots=pr.slot, speculative=True,
+                                   tenant=ctx.tenant, way_lo=ctx.way_lo,
+                                   way_hi=ctx.way_hi)
+        ev_rows = jnp.where(alloc.ok, alloc.slot, 0)
+        ev_lines = cache1.data[ev_rows]
+        wb = alloc.ok & alloc.evicted_dirty & (alloc.evicted_key >= 0)
+        wb_keys = jnp.where(wb, alloc.evicted_key, -1)
+        keys = jnp.where(alloc.ok, ukeys, -1)
+        cache1 = C.mark_inflight(cache1,
+                                 jnp.where(alloc.ok, alloc.slot, -1))
+
+        qs2, rec_w = Q.enqueue(st.queues, wb_keys, is_write=jnp.ones_like(wb),
+                               tenant=ctx.tenant)
+        qs2, rec_r = Q.enqueue(qs2, keys, dst=alloc.slot,
+                               prio=Q.PRIO_READAHEAD, tenant=ctx.tenant)
+        depth_now = Q.in_flight(qs2)
+        depth_dev = Q.in_flight_per_device(qs2)
+
+        store = self._store(st)
+        new_storage = st.storage
+        if self.storage is None:                    # in-graph backend
+            new_storage = store.write_blocks(wb_keys, ev_lines)
+        else:
+            self.storage.write_blocks(wb_keys, ev_lines)
+
+        n_ra = jnp.sum(alloc.ok.astype(jnp.int32))
+        n_wb = jnp.sum(wb.astype(jnp.int32))
+        dev_reads_tok = device_histogram(keys, nd, stripe_blocks=sb)
+        dev_writes_tok = device_histogram(wb_keys, nd, stripe_blocks=sb)
+        drop_reads = device_histogram(keys, nd, ~rec_r.accepted, sb)
+        drop_writes = device_histogram(wb_keys, nd, ~rec_w.accepted, sb)
+        tok_new = jnp.any(valid).astype(mt.requests.dtype)
+        window_now = (mt.tokens_in_flight + tok_new).astype(jnp.int32)
+        metrics = dataclasses.replace(
+            mt,
+            write_ops=mt.write_ops + n_wb,
+            bytes_to_storage=mt.bytes_to_storage + n_wb * self.block_bytes,
+            doorbells=mt.doorbells + rec_r.n_doorbells + rec_w.n_doorbells,
+            dropped=mt.dropped + rec_r.n_dropped + rec_w.n_dropped,
+            prefetch_issued=mt.prefetch_issued + n_ra,
+            max_queue_depth=jnp.maximum(mt.max_queue_depth,
+                                        depth_now.astype(jnp.int32)),
+            dev_max_depth=jnp.maximum(mt.dev_max_depth,
+                                      depth_dev.astype(jnp.int32)),
+            tokens_submitted=mt.tokens_submitted + tok_new,
+            tokens_in_flight=mt.tokens_in_flight + tok_new,
+            cross_op_coalesced=mt.cross_op_coalesced + n_cross,
+            max_tokens_in_flight=jnp.maximum(mt.max_tokens_in_flight,
+                                             window_now),
+        )
+        token = IOToken(
+            kind="prefetch", valid=valid, off=off, inverse=co.inverse_idx,
+            ukeys=ukeys, pin_slots=jnp.full_like(ukeys, -1),
+            values=None, ra_keys=None,
+            dev_reads=dev_reads_tok, dev_writes=dev_writes_tok,
+            drop_dev_reads=drop_reads, drop_dev_writes=drop_writes)
+        return BamState(cache=cache1, queues=qs2, metrics=metrics,
+                        storage=new_storage), token
+
+    def wait(self, st: BamState, token: IOToken
+             ) -> Tuple[BamState, jax.Array]:
+        """Complete a pending token: drain, fetch, fill, gather, unpin.
+
+        Drains the SQ rings (the simulated controller retires *everything*
+        pending — commands from every outstanding token, so deep submission
+        windows are serviced at batched Little's-law concurrency and the
+        drain's device time is charged here, to the waiter), performs the
+        deferred fetch DMA for this token's lines that are still in flight,
+        fills and un-flags them, gathers/applies the op's element values,
+        and releases the pins taken at submit.
+
+        Under ``defer_drain`` (the runtime's ``drain="deferred"`` mode) the
+        rings are left pending for :meth:`BamRuntime.drain` and the token's
+        own command histograms are charged instead, exactly like the
+        pre-async deferred accounting.
+
+        Returns ``(state', values)``: the gathered elements for a read
+        token, the (masked) written values for a write token, zeros for a
+        prefetch token.
+        """
+        self._check_channels(st)
+        ctx = self.tenant_ctx
+        nd = self.ssd.n_devices
+        sb = self.ssd.stripe_blocks
+        ukeys = token.ukeys
+        uvalid = ukeys >= 0
+        valid = token.valid
+        off = token.off
+
+        # 1) drain the rings and pick the device-time charge basis: the
+        #    drained batch (plus this token's ring-rejected commands, which
+        #    are still served read/write-through) — or, under deferred
+        #    drain, this token's own commands.
+        if self.defer_drain:
+            qs2 = st.queues
+            reads_charge = token.dev_reads
+            writes_charge = token.dev_writes
+        else:
+            qs2, comps = Q.service_all(st.queues)
+            cvalid = comps.valid
+            reads_charge = device_histogram(
+                comps.keys, nd, cvalid & ~comps.is_write, sb) \
+                + token.drop_dev_reads
+            writes_charge = device_histogram(
+                comps.keys, nd, cvalid & comps.is_write, sb) \
+                + token.drop_dev_writes
+
+        # 2) fresh probe: lines this token submitted may since have been
+        #    filled by another token's wait (cross-op coalescing), written
+        #    to, or — for unpinned speculative lines — evicted.
+        pr2 = C.probe(st.cache, ukeys, uvalid, tenant=ctx.tenant)
+        pend = pr2.hit & pr2.inflight              # resident, fill pending
+        if token.kind == "prefetch":
+            # only materialise lines still awaiting their speculative fill
+            need = pend
+        else:
+            # fetch everything not gatherable from the cache: still-pending
+            # grants plus bypassed keys (read/write-through).
+            need = uvalid & (~pr2.hit | pend)
+
+        # 3) the deferred fetch DMA + completion fill.  Filling only lines
+        #    that are *still* in flight makes completion idempotent across
+        #    tokens: whoever waits first fills; later waiters see a filled
+        #    resident line and never clobber newer data with a re-fetch.
+        store = self._store(st)
+        lines = store.fetch_blocks(jnp.where(need, ukeys, -1))
+        cache1 = C.fill(st.cache, pr2.slot, pend, lines)
+        cache1 = C.clear_inflight(cache1, jnp.where(pend, pr2.slot, -1))
+        n_fetch = jnp.sum(need.astype(jnp.int32))
+        new_storage = st.storage
+
+        # 3b) stride-readahead lines issued by this token's submit.
+        if token.ra_keys is not None:
+            ra = token.ra_keys
+            ra_pr = C.probe(cache1, ra, ra >= 0, tenant=ctx.tenant)
+            ra_pend = ra_pr.hit & ra_pr.inflight
+            lines_ra = store.fetch_blocks(jnp.where(ra_pend, ra, -1))
+            cache1 = C.fill(cache1, ra_pr.slot, ra_pend, lines_ra)
+            cache1 = C.clear_inflight(cache1,
+                                      jnp.where(ra_pend, ra_pr.slot, -1))
+            n_fetch = n_fetch + jnp.sum(ra_pend.astype(jnp.int32))
+
+        # 4) op-specific completion.
+        u = token.inverse
+        if token.kind == "read":
+            hit_u = pr2.hit[u]
+            slot_u = jnp.where(pr2.slot[u] >= 0, pr2.slot[u], 0)
+            vals = jnp.where(hit_u, cache1.data[slot_u, off],
+                             lines[u, off])
+            vals = jnp.where(valid, vals, 0).astype(self.dtype)
+            cache_f = cache1
+        elif token.kind == "write":
+            values = token.values
+            assert values is not None   # write tokens carry their payload
+            # scatter the new element values into resident lines...
+            slot_r = jnp.where(pr2.hit[u], pr2.slot[u], -1)
+            in_cache = slot_r >= 0
+            rows = jnp.where(valid & in_cache, slot_r, cache1.num_lines)
+            cols = jnp.where(valid & in_cache, off, 0)
+            data = cache1.data.at[rows, cols].set(
+                values.astype(self.dtype), mode="drop")
+            cache_f = C._replace_data(cache1, data=data)
+            cache_f = C.mark_dirty(cache_f,
+                                   jnp.where(valid & in_cache, slot_r, -1))
+            # ...and write through the lines that have no slot (bypass).
+            byp_u = (~pr2.hit[u]) & valid
+            byp_rows = jnp.where(byp_u, u, lines.shape[0])
+            byp_lines = lines.at[byp_rows, jnp.where(byp_u, off, 0)].set(
+                values.astype(self.dtype), mode="drop")
+            bt_keys = jnp.where(uvalid & ~pr2.hit, ukeys, -1)
+            if self.storage is None:
+                new_storage = new_storage.write_blocks(bt_keys, byp_lines)
+            else:
+                self.storage.write_blocks(bt_keys, byp_lines)
+            vals = jnp.where(valid, values, 0).astype(self.dtype)
+        else:                                       # prefetch: no values
+            vals = jnp.zeros(off.shape, self.dtype)
+            cache_f = cache1
+
+        # 5) release the pins taken at submit.
+        cache_f = C.release(cache_f, token.pin_slots)
+
+        # 6) completion-side metrics: bytes actually fetched + the drain's
+        #    device busy time (max over channels gates the batch).
+        mt = st.metrics
+        tok_done = jnp.any(valid).astype(mt.requests.dtype)
+        metrics = dataclasses.replace(
+            mt,
+            bytes_from_storage=mt.bytes_from_storage
+                + n_fetch * self.block_bytes,
+            tokens_waited=mt.tokens_waited + tok_done,
+            tokens_in_flight=mt.tokens_in_flight - tok_done,
+            **self._charge_wait(mt, st.queues, reads_charge, writes_charge),
+        )
+        return BamState(cache=cache_f, queues=qs2, metrics=metrics,
+                        storage=new_storage), vals
+
+    def _charge_wait(self, mt: IOMetrics, qs: Q.QueueState,
+                     reads_hist: jax.Array, writes_hist: jax.Array) -> dict:
+        """Device-time charge for a drain: each channel retires its share at
+        its own Little's-law rate, the straggler gates the batch."""
+        group_limit = qs.group_size * qs.depth
+        t_read, t_read_dev = self.ssd.service_time_per_device_traced(
+            reads_hist, self.block_bytes, queue_depth_limit=group_limit)
+        t_write, t_write_dev = self.ssd.service_time_per_device_traced(
+            writes_hist, self.block_bytes, write=True,
+            queue_depth_limit=group_limit)
+        return dict(
+            sim_time_s=mt.sim_time_s + t_read + t_write,
+            read_time_s=mt.read_time_s + t_read,
+            write_time_s=mt.write_time_s + t_write,
+            dev_reads=mt.dev_reads + reads_hist,
+            dev_writes=mt.dev_writes + writes_hist,
+            dev_bytes=mt.dev_bytes
+                + (reads_hist + writes_hist) * self.block_bytes,
+            dev_time_s=mt.dev_time_s + t_read_dev + t_write_dev,
+        )
+
+    # ----------------------------------------------- synchronous shims
+    def read(self, st: BamState, idx: jax.Array,
+             valid: jax.Array | None = None) -> Tuple[jax.Array, BamState]:
+        """Gather ``self.flat[idx]`` for a wavefront of element indices.
+
+        Compatibility shim: exactly ``submit`` + ``wait`` back to back (the
+        op drains alone, paying full miss latency — use the token API to
+        keep a multi-wavefront window in flight).
+        """
+        st, tok = self.submit(st, IORequest.read(idx, valid))
+        st, vals = self.wait(st, tok)
+        return vals, st
 
     # ------------------------------------------------------------- prefetch
     def prefetch(self, st: BamState, idx: jax.Array,
@@ -422,68 +767,14 @@ class BamArray:
         (that flag only gates the automatic stride readahead in
         :meth:`read`).  Demand counters (requests/hits/misses) are untouched:
         a prefetch is not compute traffic.
+
+        Compatibility shim over ``submit`` + ``wait``; submitting an
+        ``IORequest.prefetch`` and waiting it later turns the hint into a
+        genuinely asynchronous warm-up.
         """
-        self._check_channels(st)
-        if valid is None:
-            valid = (idx >= 0) & (idx < self.size)
-        blk, _ = self._split(jnp.where(valid, idx, 0))
-        blk = jnp.where(valid, blk, -1)
-
-        co = coalesce(blk, valid)
-        ukeys = co.unique_keys
-        uvalid = ukeys >= 0
-        ctx = self.tenant_ctx
-        pr = C.probe(st.cache, ukeys, uvalid, tenant=ctx.tenant)
-        want = uvalid & ~pr.hit
-        cache1, alloc = C.allocate(st.cache, ukeys, want,
-                                   protect_slots=pr.slot, speculative=True,
-                                   tenant=ctx.tenant, way_lo=ctx.way_lo,
-                                   way_hi=ctx.way_hi)
-        ev_rows = jnp.where(alloc.ok, alloc.slot, 0)
-        ev_lines = cache1.data[ev_rows]
-        wb = alloc.ok & alloc.evicted_dirty & (alloc.evicted_key >= 0)
-        wb_keys = jnp.where(wb, alloc.evicted_key, -1)
-        keys = jnp.where(alloc.ok, ukeys, -1)
-
-        qs1, rec_w = Q.enqueue(st.queues, wb_keys, is_write=jnp.ones_like(wb),
-                               tenant=ctx.tenant)
-        qs2, rec_r = Q.enqueue(qs1, keys, dst=alloc.slot,
-                               prio=Q.PRIO_READAHEAD, tenant=ctx.tenant)
-        depth_now = Q.in_flight(qs2)
-        depth_dev = Q.in_flight_per_device(qs2)
-        qs3 = self._drain(qs2)
-
-        store = self._store(st)
-        new_storage = st.storage
-        if self.storage is None:                    # in-graph backend
-            new_storage = store.write_blocks(wb_keys, ev_lines)
-            lines = new_storage.fetch_blocks(keys)
-        else:
-            self.storage.write_blocks(wb_keys, ev_lines)
-            lines = self.storage.fetch_blocks(keys)
-        cache2 = C.fill(cache1, alloc.slot, alloc.ok, lines)
-
-        n_ra = jnp.sum(alloc.ok.astype(jnp.int32))
-        n_wb = jnp.sum(wb.astype(jnp.int32))
-        nd = self.ssd.n_devices
-        dev_reads = device_histogram(keys, nd,
-                                     stripe_blocks=self.ssd.stripe_blocks)
-        dev_writes = device_histogram(wb_keys, nd,
-                                      stripe_blocks=self.ssd.stripe_blocks)
-        mt = st.metrics
-        metrics = dataclasses.replace(
-            mt,
-            bytes_from_storage=mt.bytes_from_storage + n_ra * self.block_bytes,
-            write_ops=mt.write_ops + n_wb,
-            bytes_to_storage=mt.bytes_to_storage + n_wb * self.block_bytes,
-            doorbells=mt.doorbells + rec_r.n_doorbells + rec_w.n_doorbells,
-            dropped=mt.dropped + rec_r.n_dropped + rec_w.n_dropped,
-            prefetch_issued=mt.prefetch_issued + n_ra,
-            **self._charge_channels(mt, st.queues, dev_reads, dev_writes,
-                                    depth_now, depth_dev),
-        )
-        return BamState(cache=cache2, queues=qs3, metrics=metrics,
-                        storage=new_storage)
+        st, tok = self.submit(st, IORequest.prefetch(idx, valid))
+        st, _ = self.wait(st, tok)
+        return st
 
     # --------------------------------------------------------------- write
     def write(self, st: BamState, idx: jax.Array, values: jax.Array,
@@ -491,109 +782,12 @@ class BamArray:
         """Element-level writes: read-modify-write with write-allocate.
 
         Duplicate element indices within one wavefront are last-writer-wins
-        with unspecified order (as on the GPU).
+        with unspecified order (as on the GPU).  Compatibility shim over
+        ``submit`` + ``wait``.
         """
-        self._check_channels(st)
-        n = idx.shape[0]
-        if valid is None:
-            valid = (idx >= 0) & (idx < self.size)
-        blk, off = self._split(jnp.where(valid, idx, 0))
-        blk = jnp.where(valid, blk, -1)
-
-        co = coalesce(blk, valid)
-        ukeys = co.unique_keys
-        uvalid = ukeys >= 0
-        ctx = self.tenant_ctx
-        pr = C.probe(st.cache, ukeys, uvalid, tenant=ctx.tenant)
-        n_hit = jnp.sum(pr.hit.astype(jnp.int32))
-        n_pref_hit = jnp.sum(pr.speculative.astype(jnp.int32))
-        cache1 = C.count_hits(st.cache, n_hit)
-        cache1 = C.promote(cache1, jnp.where(pr.speculative, pr.slot, -1))
-        miss = uvalid & ~pr.hit
-
-        cache2, alloc = C.allocate(cache1, ukeys, miss, protect_slots=pr.slot,
-                                   tenant=ctx.tenant, way_lo=ctx.way_lo,
-                                   way_hi=ctx.way_hi)
-        ev_rows = jnp.where(alloc.ok, alloc.slot, 0)
-        ev_lines = cache2.data[ev_rows]
-        wb = alloc.ok & alloc.evicted_dirty & (alloc.evicted_key >= 0)
-        wb_keys = jnp.where(wb, alloc.evicted_key, -1)
-        # Bypassed lines (no slot granted) will be written through below;
-        # their commands ride the rings like every other write.
-        byp = miss & ~alloc.ok
-        bt_keys = jnp.where(byp, ukeys, -1)
-
-        qs1, rec_r = Q.enqueue(st.queues, jnp.where(miss, ukeys, -1),
-                               dst=alloc.slot, tenant=ctx.tenant)
-        qs2, rec_w = Q.enqueue(qs1, wb_keys, is_write=jnp.ones_like(wb),
-                               tenant=ctx.tenant)
-        qs2, rec_bt = Q.enqueue(qs2, bt_keys, is_write=jnp.ones_like(byp),
-                                tenant=ctx.tenant)
-        depth_now = Q.in_flight(qs2)
-        depth_dev = Q.in_flight_per_device(qs2)
-        qs3 = self._drain(qs2)
-
-        store = self._store(st)
-        lines_u = store.fetch_blocks(jnp.where(miss, ukeys, -1))  # write-allocate
-        new_storage = st.storage
-        if self.storage is None:
-            new_storage = store.write_blocks(wb_keys, ev_lines)
-        else:
-            self.storage.write_blocks(wb_keys, ev_lines)
-        cache3 = C.fill(cache2, alloc.slot, alloc.ok, lines_u)
-
-        # Scatter the new element values into their lines *in the cache*.
-        u = co.inverse_idx
-        slot_r = jnp.where(pr.hit[u], pr.slot[u], alloc.slot[u])  # (n,)
-        in_cache = slot_r >= 0
-        rows = jnp.where(valid & in_cache, slot_r, cache3.num_lines)
-        cols = jnp.where(valid & in_cache, off, 0)
-        data = cache3.data.at[rows, cols].set(
-            values.astype(self.dtype), mode="drop")
-        cache4 = C._replace_data(cache3, data=data)
-        touched_slots = jnp.where(valid & in_cache, slot_r, -1)
-        cache5 = C.mark_dirty(cache4, touched_slots)
-
-        # Bypassed lines: write-through directly (enqueued above).
-        byp_any = byp[u] & valid
-        byp_rows = jnp.where(byp_any, u, lines_u.shape[0])
-        byp_lines = lines_u.at[byp_rows, jnp.where(byp_any, off, 0)].set(
-            values.astype(self.dtype), mode="drop")
-        if self.storage is None:
-            new_storage = new_storage.write_blocks(bt_keys, byp_lines)
-        else:
-            self.storage.write_blocks(bt_keys, byp_lines)
-
-        n_valid = jnp.sum(valid.astype(jnp.int32))
-        n_miss = jnp.sum(miss.astype(jnp.int32))
-        n_wb = jnp.sum(wb.astype(jnp.int32)) + jnp.sum(byp.astype(jnp.int32))
-        nd = self.ssd.n_devices
-        dev_reads = device_histogram(ukeys, nd, miss, self.ssd.stripe_blocks)
-        dev_writes = device_histogram(
-            wb_keys, nd, stripe_blocks=self.ssd.stripe_blocks) \
-            + device_histogram(bt_keys, nd,
-                               stripe_blocks=self.ssd.stripe_blocks)
-        itemsize = jnp.dtype(self.dtype).itemsize
-        mt = st.metrics
-        metrics = IOMetrics(
-            requests=mt.requests + n_valid,
-            bytes_requested=mt.bytes_requested + n_valid * itemsize,
-            hits=mt.hits + n_hit,
-            misses=mt.misses + n_miss,
-            bytes_from_storage=mt.bytes_from_storage + n_miss * self.block_bytes,
-            write_ops=mt.write_ops + n_wb,
-            bytes_to_storage=mt.bytes_to_storage + n_wb * self.block_bytes,
-            doorbells=mt.doorbells + rec_r.n_doorbells + rec_w.n_doorbells
-                + rec_bt.n_doorbells,
-            dropped=mt.dropped + rec_r.n_dropped + rec_w.n_dropped
-                + rec_bt.n_dropped,
-            prefetch_issued=mt.prefetch_issued,
-            prefetch_hits=mt.prefetch_hits + n_pref_hit,
-            **self._charge_channels(mt, st.queues, dev_reads, dev_writes,
-                                    depth_now, depth_dev),
-        )
-        return BamState(cache=cache5, queues=qs3, metrics=metrics,
-                        storage=new_storage)
+        st, tok = self.submit(st, IORequest.write(idx, values, valid))
+        st, _ = self.wait(st, tok)
+        return st
 
     def flush(self, st: BamState) -> BamState:
         """Write back every dirty resident line (shutdown / barrier path).
@@ -611,6 +805,8 @@ class BamArray:
         """
         self._check_channels(st)
         ctx = self.tenant_ctx
+        nd = self.ssd.n_devices
+        sb = self.ssd.stripe_blocks
         tags = st.cache.tags.reshape(-1)
         dirty = st.cache.dirty.reshape(-1)
         mine = st.cache.owner.reshape(-1) == jnp.int32(ctx.tenant)
@@ -620,7 +816,23 @@ class BamArray:
                                tenant=ctx.tenant)
         depth_now = Q.in_flight(qs1)
         depth_dev = Q.in_flight_per_device(qs1)
-        qs2 = self._drain(qs1)
+        # Drain charges the clock, exactly as in wait(): the retired batch
+        # may also carry outstanding tokens' commands (a flush inside a
+        # submission window), whose device time lands here, on the
+        # barrier; their own waits then drain an empty ring.  Ring-dropped
+        # flush write-backs are still persisted, so they are charged too.
+        if self.defer_drain:
+            qs2 = qs1
+            reads_charge = jnp.zeros((nd,), jnp.int32)
+            writes_charge = device_histogram(keys, nd, stripe_blocks=sb)
+        else:
+            qs2, comps = Q.service_all(qs1)
+            cvalid = comps.valid
+            reads_charge = device_histogram(comps.keys, nd,
+                                            cvalid & ~comps.is_write, sb)
+            writes_charge = device_histogram(comps.keys, nd,
+                                             cvalid & comps.is_write, sb) \
+                + device_histogram(keys, nd, ~rec_w.accepted, sb)
         store = self._store(st)
         new_storage = st.storage
         if self.storage is None:
@@ -628,9 +840,6 @@ class BamArray:
         else:
             self.storage.write_blocks(keys, st.cache.data)
         n_wb = jnp.sum((keys >= 0).astype(jnp.int32))
-        nd = self.ssd.n_devices
-        dev_writes = device_histogram(keys, nd,
-                                      stripe_blocks=self.ssd.stripe_blocks)
         flushed = (keys >= 0).reshape(st.cache.dirty.shape)
         cache = C._replace_data(st.cache, dirty=st.cache.dirty & ~flushed)
         mt = st.metrics
@@ -640,9 +849,11 @@ class BamArray:
             bytes_to_storage=mt.bytes_to_storage + n_wb * self.block_bytes,
             doorbells=mt.doorbells + rec_w.n_doorbells,
             dropped=mt.dropped + rec_w.n_dropped,
-            **self._charge_channels(mt, st.queues,
-                                    jnp.zeros_like(dev_writes), dev_writes,
-                                    depth_now, depth_dev),
+            max_queue_depth=jnp.maximum(mt.max_queue_depth,
+                                        depth_now.astype(jnp.int32)),
+            dev_max_depth=jnp.maximum(mt.dev_max_depth,
+                                      depth_dev.astype(jnp.int32)),
+            **self._charge_wait(mt, st.queues, reads_charge, writes_charge),
         )
         return BamState(cache=cache, queues=qs2, metrics=metrics,
                         storage=new_storage)
@@ -731,9 +942,15 @@ class BamKVStore:
                         value_elems=value_elems, probes=probes)
         return kv, jnp.asarray(table), st
 
-    def lookup(self, st: BamState, table: jax.Array, keys: jax.Array
-               ) -> Tuple[jax.Array, jax.Array, BamState]:
-        """Return (values, found_mask, state') for a wavefront of keys."""
+    def lookup_submit(self, st: BamState, table: jax.Array, keys: jax.Array
+                      ) -> Tuple[BamState, IOToken, jax.Array]:
+        """Asynchronous lookup, submission half: probe the device-resident
+        index and *submit* the value gather, returning ``(state', token,
+        found_mask)``.  The found mask is available immediately (the index
+        is device memory); the values arrive at :meth:`lookup_wait`.
+        Several lookups' tokens may be outstanding at once — duplicate hot
+        keys across pending lookups coalesce onto one storage fetch.
+        """
         cap = self.capacity
         h = self._hash_traced(keys)
         slot = jnp.full_like(keys, -1)
@@ -748,8 +965,22 @@ class BamKVStore:
         # flatten to a single wavefront of element indices instead:
         idx = (base[:, None] + jnp.arange(self.value_elems)[None, :]).reshape(-1)
         vmask = jnp.repeat(found, self.value_elems)
-        flat, st = self.array.read(st, idx, vmask)
-        vals = flat.reshape(keys.shape[0], self.value_elems)
+        st, tok = self.array.submit(st, IORequest.read(idx, vmask))
+        return st, tok, found
+
+    def lookup_wait(self, st: BamState, token: IOToken
+                    ) -> Tuple[BamState, jax.Array]:
+        """Redeem a :meth:`lookup_submit` token: ``(state', values)`` with
+        values shaped ``(n_keys, value_elems)``."""
+        st, flat = self.array.wait(st, token)
+        return st, flat.reshape(-1, self.value_elems)
+
+    def lookup(self, st: BamState, table: jax.Array, keys: jax.Array
+               ) -> Tuple[jax.Array, jax.Array, BamState]:
+        """Return (values, found_mask, state') for a wavefront of keys
+        (synchronous shim: ``lookup_submit`` + ``lookup_wait``)."""
+        st, tok, found = self.lookup_submit(st, table, keys)
+        st, vals = self.lookup_wait(st, tok)
         return vals, found, st
 
 
@@ -1001,6 +1232,27 @@ class BamRuntime:
         st = self.tenants[name].write(self.tenant_view(rst, name),
                                       idx, values, valid)
         return self.absorb(rst, name, st)
+
+    def submit(self, rst: RuntimeState, name: str, req: IORequest
+               ) -> Tuple[RuntimeState, IOToken]:
+        """Asynchronously submit one tenant's op against the shared state.
+
+        Tokens from different tenants freely interleave: their commands
+        coexist in the shared rings and their pins/in-flight lines in the
+        shared cache.  Under ``drain="deferred"`` the per-token wait leaves
+        the rings pending and :meth:`drain` retires the WFQ-ordered mixed
+        stream, exactly as with the synchronous ops.
+        """
+        st, tok = self.tenants[name].submit(self.tenant_view(rst, name), req)
+        return self.absorb(rst, name, st), tok
+
+    def wait(self, rst: RuntimeState, name: str, token: IOToken
+             ) -> Tuple[RuntimeState, jax.Array]:
+        """Complete one tenant's pending token (see :meth:`BamArray.wait`).
+        ``name`` must be the tenant that submitted the token."""
+        st, vals = self.tenants[name].wait(self.tenant_view(rst, name),
+                                           token)
+        return self.absorb(rst, name, st), vals
 
     def prefetch(self, rst: RuntimeState, name: str, idx: jax.Array,
                  valid: jax.Array | None = None) -> RuntimeState:

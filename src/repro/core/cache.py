@@ -30,6 +30,17 @@ order), so a wrong prefetch is reclaimed before any demand line is touched
 speculative line *promotes* it (clears the bit): from then on it is an
 ordinary resident line.
 
+Async submission support (``BamArray.submit``/``wait``): a line whose tag
+has been claimed but whose DMA has not completed carries an ``inflight``
+bit — the vectorized analogue of the paper's per-line lock held between
+command submission and completion.  A later submission that probes the
+same key *hits* the in-flight line (cross-op coalescing: the duplicate
+fetch is suppressed before it ever touches the SQ rings) and whichever
+token completes first performs the fill and clears the bit.  Reference
+counts now hold across the whole submit→wait span: every line a pending
+token touched (hit or newly granted) stays pinned until that token is
+waited, so interleaved tokens can never evict each other's in-flight data.
+
 Multi-tenant support (``BamRuntime``): several BaM arrays can share one
 ``CacheState``.  Every resident line records its ``owner`` tenant, and
 ``probe``/``allocate`` take a ``tenant`` id so block key *k* of tenant A
@@ -56,6 +67,7 @@ from repro.utils import mix_hash, pytree_dataclass, segment_rank
 __all__ = [
     "CacheState", "make_cache", "probe", "allocate", "fill",
     "acquire", "release", "pin_keys", "mark_dirty", "promote",
+    "mark_inflight", "clear_inflight",
 ]
 
 
@@ -69,6 +81,7 @@ class CacheState:
     refcount: jax.Array    # (num_sets, ways) int32 — pinned lines have >0
     dirty: jax.Array       # (num_sets, ways) bool — needs write-back on evict
     speculative: jax.Array  # (num_sets, ways) bool — prefetched, evict-first
+    inflight: jax.Array    # (num_sets, ways) bool — tag claimed, fill pending
     clock_hand: jax.Array  # (num_sets,) int32 in [0, ways)
     data: jax.Array        # (num_sets*ways, line_elems)
     hits: jax.Array        # () int32 cumulative line hits (post-coalesce)
@@ -90,6 +103,7 @@ def make_cache(num_sets: int, ways: int, line_elems: int,
         refcount=jnp.zeros((num_sets, ways), jnp.int32),
         dirty=jnp.zeros((num_sets, ways), bool),
         speculative=jnp.zeros((num_sets, ways), bool),
+        inflight=jnp.zeros((num_sets, ways), bool),
         clock_hand=jnp.zeros((num_sets,), jnp.int32),
         data=jnp.zeros((num_sets * ways, line_elems), dtype),
         hits=z(), misses=z(), bypasses=z(),
@@ -106,6 +120,7 @@ class ProbeResult:
     slot: jax.Array   # (m,) int32 flat line slot (set*ways+way); -1 on miss
     set_idx: jax.Array  # (m,) int32 (reused by allocate)
     speculative: jax.Array  # (m,) bool — hit landed on a prefetched line
+    inflight: jax.Array  # (m,) bool — hit landed on a not-yet-filled line
 
 
 def probe(cache: CacheState, keys: jax.Array,
@@ -127,8 +142,9 @@ def probe(cache: CacheState, keys: jax.Array,
     way = jnp.argmax(eq, axis=1).astype(jnp.int32)
     slot = jnp.where(hit, sets * cache.ways + way, -1).astype(jnp.int32)
     spec = hit & cache.speculative[sets, way]
+    infl = hit & cache.inflight[sets, way]
     return ProbeResult(hit=hit, slot=slot, set_idx=sets.astype(jnp.int32),
-                       speculative=spec)
+                       speculative=spec, inflight=infl)
 
 
 _segment_rank = segment_rank
@@ -239,6 +255,9 @@ def allocate(cache: CacheState, keys: jax.Array,
     owner = cache.owner.at[s_i, w_i].set(jnp.int32(tenant), mode="drop")
     dirty = cache.dirty.at[s_i, w_i].set(False, mode="drop")
     spec = cache.speculative.at[s_i, w_i].set(speculative, mode="drop")
+    # A granted line starts life *filled from the grantor's perspective*:
+    # the async submit path re-marks it in flight right after allocation.
+    infl = cache.inflight.at[s_i, w_i].set(False, mode="drop")
 
     # Advance each touched set's hand past the granted way's clock position
     # (way_pos indexes the class-sorted sweep, not clock distance).
@@ -256,7 +275,7 @@ def allocate(cache: CacheState, keys: jax.Array,
     cache2 = CacheState(
         num_sets=cache.num_sets, ways=ways, line_elems=cache.line_elems,
         tags=tags, owner=owner, refcount=cache.refcount, dirty=dirty,
-        speculative=spec,
+        speculative=spec, inflight=infl,
         clock_hand=clock_hand, data=cache.data,
         hits=cache.hits, misses=cache.misses + miss_inc,
         bypasses=cache.bypasses + byp_inc,
@@ -317,6 +336,33 @@ def promote(cache: CacheState, slots: jax.Array) -> CacheState:
                          speculative=s.reshape(cache.num_sets, cache.ways))
 
 
+def mark_inflight(cache: CacheState, slots: jax.Array) -> CacheState:
+    """Mark the given flat slots as *in flight* (slot<0 ignored).
+
+    An in-flight line has its tag claimed (so concurrent submissions
+    coalesce against it — the paper's per-line lock / BaM's duplicate-fetch
+    suppression) but its data not yet DMA'd.  The token that fills the line
+    (or any waiter that finds it still pending) clears the bit; readers
+    must never gather from a line whose in-flight bit is set.
+    """
+    ok = slots >= 0
+    idx = jnp.where(ok, slots, cache.num_lines)          # OOB -> dropped
+    s = cache.inflight.reshape(-1)
+    s = s.at[idx].set(True, mode="drop")
+    return _replace_data(cache,
+                         inflight=s.reshape(cache.num_sets, cache.ways))
+
+
+def clear_inflight(cache: CacheState, slots: jax.Array) -> CacheState:
+    """Clear the in-flight bit on the given flat slots (slot<0 ignored)."""
+    ok = slots >= 0
+    idx = jnp.where(ok, slots, cache.num_lines)          # OOB -> dropped
+    s = cache.inflight.reshape(-1)
+    s = s.at[idx].set(False, mode="drop")
+    return _replace_data(cache,
+                         inflight=s.reshape(cache.num_sets, cache.ways))
+
+
 def mark_dirty(cache: CacheState, slots: jax.Array) -> CacheState:
     ok = slots >= 0
     idx = jnp.where(ok, slots, cache.num_lines)          # OOB -> dropped
@@ -337,6 +383,7 @@ def _replace_data(cache: CacheState, **kw) -> CacheState:
         num_sets=cache.num_sets, ways=cache.ways, line_elems=cache.line_elems,
         tags=cache.tags, owner=cache.owner, refcount=cache.refcount,
         dirty=cache.dirty, speculative=cache.speculative,
+        inflight=cache.inflight,
         clock_hand=cache.clock_hand, data=cache.data,
         hits=cache.hits, misses=cache.misses, bypasses=cache.bypasses,
     )

@@ -39,6 +39,13 @@ class IOMetrics:
     max_queue_depth: jax.Array   # high-watermark of in-flight requests
     prefetch_issued: jax.Array   # cache lines fetched speculatively (readahead)
     prefetch_hits: jax.Array     # demand line-hits served by a prefetched line
+    # Async submission-window accounting (submit/wait tokens).
+    tokens_submitted: jax.Array  # IOTokens issued (submits with >=1 valid lane)
+    tokens_waited: jax.Array     # IOTokens completed by wait()
+    tokens_in_flight: jax.Array  # running outstanding-token count (+1/-1)
+    cross_op_coalesced: jax.Array  # line requests merged with a *pending*
+    #                                token's in-flight fetch (saved commands)
+    max_tokens_in_flight: jax.Array  # high-watermark of the in-flight window
     # Per-device channel breakdown, all shape (n_devices,).
     dev_reads: jax.Array         # lines fetched per device (demand + readahead)
     dev_writes: jax.Array        # lines written back per device
@@ -48,7 +55,8 @@ class IOMetrics:
 
     @staticmethod
     def zeros(n_devices: int = 1) -> "IOMetrics":
-        ftype = jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
+        # float64 under x64, float32 otherwise (the canonical float dtype)
+        ftype = jax.dtypes.canonicalize_dtype(jnp.float64)
         f = lambda: jnp.zeros((), ftype)
         i = lambda: jnp.zeros((), jnp.int32)
         return IOMetrics(
@@ -58,6 +66,8 @@ class IOMetrics:
             sim_time_s=f(), read_time_s=f(), write_time_s=f(),
             max_queue_depth=i(),
             prefetch_issued=f(), prefetch_hits=f(),
+            tokens_submitted=f(), tokens_waited=f(), tokens_in_flight=f(),
+            cross_op_coalesced=f(), max_tokens_in_flight=i(),
             dev_reads=jnp.zeros((n_devices,), ftype),
             dev_writes=jnp.zeros((n_devices,), ftype),
             dev_bytes=jnp.zeros((n_devices,), ftype),
@@ -129,6 +139,11 @@ class IOMetrics:
             "prefetch_issued": float(self.prefetch_issued),
             "prefetch_hits": float(self.prefetch_hits),
             "prefetch_accuracy": self.prefetch_accuracy(),
+            "tokens_submitted": float(self.tokens_submitted),
+            "tokens_waited": float(self.tokens_waited),
+            "tokens_in_flight": float(self.tokens_in_flight),
+            "cross_op_coalesced": float(self.cross_op_coalesced),
+            "max_tokens_in_flight": int(self.max_tokens_in_flight),
             "n_devices": self.n_devices,
             "dev_reads": [float(x) for x in jax.device_get(self.dev_reads)],
             "dev_writes": [float(x) for x in jax.device_get(self.dev_writes)],
@@ -145,7 +160,8 @@ class IOMetrics:
 # accumulates each tenant op's *delta* into the global IOMetrics, and the
 # invariant "additive tenant counters sum exactly to the global counters"
 # is what the multi-tenant tests (and the mixed_tenants gate) assert.
-WATERMARK_FIELDS = ("max_queue_depth", "dev_max_depth")
+WATERMARK_FIELDS = ("max_queue_depth", "dev_max_depth",
+                    "max_tokens_in_flight")
 ADDITIVE_FIELDS = tuple(
     f for f in IOMetrics.__dataclass_fields__ if f not in WATERMARK_FIELDS)
 

@@ -1,22 +1,31 @@
-"""Latency hiding: double-buffered fetch/compute software pipeline.
+"""Latency hiding: token-pipelined fetch/compute software pipeline.
 
 BaM hides 10–300 µs device latency with 10⁴–10⁵ oversubscribed GPU threads:
 while some threads wait on the SSD, others compute.  A TPU has no thread
 oversubscription — the idiomatic equivalent (used by Pallas's
 ``emit_pipeline`` for HBM→VMEM and by every production input pipeline) is a
 *software pipeline*: inside a ``lax.scan``, step ``t`` issues the fetch for
-step ``t+1``'s data while computing on the data fetched at ``t``.  The two
-halves of each iteration are data-independent, so the compiler/runtime can
-overlap the storage DMA with the compute — structurally the same
-latency-hiding budget Little's law demands (the in-flight window is one
-wavefront of ``Q_d`` requests).
+step ``t+1``'s data while computing on the data fetched at ``t``.
 
-``software_pipeline`` is generic over any (read_fn, compute_fn) pair; BaM
-reads plug in as ``read_fn = lambda st, idx: bam.read(st, idx)``.
+With the first-class async I/O surface this is now a *real* in-flight
+window, not just instruction-level overlap: the scan carry holds an
+:class:`~repro.core.bam_array.IOToken` for the next step's wavefront, so
+step ``t+1``'s SQ commands are pending in the rings while step ``t``
+computes — the submit/complete split of BaM's §III-C queues expressed in
+the scan's dataflow.  The epilogue is exact: the scan runs ``T-1`` steps
+and the last wavefront is waited/computed after the loop, so no dummy
+``-1`` wavefront is ever submitted (the old epilogue issued a junk fetch
+that polluted metrics and cache state).
+
+``software_pipeline`` is generic over any (submit_fn, wait_fn) pair; BaM
+arrays plug in as ``submit_fn = lambda st, idx: bam.submit(st,
+IORequest.read(idx))`` and ``wait_fn = bam.wait``.  A legacy synchronous
+``read_fn`` is adapted automatically (the "token" is the eagerly fetched
+wavefront itself, preserving the old fetch-ahead schedule).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,58 +34,96 @@ __all__ = ["software_pipeline", "pipelined_bam_map"]
 
 
 def software_pipeline(
-    read_fn: Callable[[Any, jax.Array], Tuple[jax.Array, Any]],
+    read_fn: Optional[Callable[[Any, jax.Array], Tuple[jax.Array, Any]]],
     compute_fn: Callable[[Any, jax.Array, jax.Array], Tuple[Any, Any]],
     idx_seq: jax.Array,          # (T, n) element indices per step
     read_state: Any,
     compute_carry: Any,
+    *,
+    submit_fn: Optional[Callable[[Any, jax.Array], Tuple[Any, Any]]] = None,
+    wait_fn: Optional[Callable[[Any, Any], Tuple[Any, jax.Array]]] = None,
 ):
-    """Run ``T`` steps with fetch(t+1) overlapped against compute(t).
+    """Run ``T`` steps with fetch(t+1) in flight while compute(t) runs.
 
     Args:
-      read_fn: ``(read_state, idx) -> (values, read_state')``.
+      read_fn: legacy synchronous ``(read_state, idx) -> (values,
+        read_state')`` — adapted to a degenerate submit/wait pair when no
+        explicit one is given.  Pass ``None`` when using submit/wait.
       compute_fn: ``(carry, values, idx) -> (carry', y)`` — consumes the
         values fetched for its own step.
       idx_seq: stacked per-step index wavefronts.
       read_state: e.g. a ``BamState``.
       compute_carry: initial compute carry.
+      submit_fn: async ``(read_state, idx) -> (read_state', token)``.
+      wait_fn: async ``(read_state, token) -> (read_state', values)``.
 
     Returns ``(read_state', compute_carry', ys)``.
-    """
-    T = idx_seq.shape[0]
-    # Prologue: fetch step 0 before the loop (pipeline fill).
-    vals0, read_state = read_fn(read_state, idx_seq[0])
 
-    # Steady state: at iteration t we carry values for step t, fetch t+1.
-    nxt = jnp.concatenate(
-        [idx_seq[1:], jnp.full_like(idx_seq[:1], -1)], axis=0)  # (T, n)
+    Schedule: the prologue submits step 0; iteration ``t`` submits step
+    ``t+1`` *then* waits step ``t`` (so two wavefronts overlap in flight)
+    and computes on the waited values; the epilogue waits and computes the
+    final step outside the scan — no junk wavefront is ever issued.
+    """
+    if (submit_fn is None) != (wait_fn is None):
+        raise ValueError("pass submit_fn and wait_fn together")
+    if submit_fn is None:
+        if read_fn is None:
+            raise ValueError("need read_fn or a submit_fn/wait_fn pair")
+        sync_read = read_fn
+
+        # Legacy adapter: "submit" performs the read eagerly (keeping the
+        # old fetch-ahead-of-compute schedule); the token is the wavefront.
+        def submit_fn(rs, idx):
+            vals, rs = sync_read(rs, idx)
+            return rs, vals
+
+        def wait_fn(rs, tok):
+            return rs, tok
+    assert wait_fn is not None
+
+    T = idx_seq.shape[0]
+    read_state, tok0 = submit_fn(read_state, idx_seq[0])
 
     def body(carry, x):
-        rs, cc, vals_t = carry
+        rs, cc, tok_t = carry
         idx_t, idx_next = x
-        # (a) issue the prefetch for t+1 — independent of (b), overlappable.
-        vals_next, rs = read_fn(rs, idx_next)
-        # (b) compute on this step's already-fetched values.
+        # (a) issue t+1 — its commands sit in the rings while (b) runs.
+        rs, tok_next = submit_fn(rs, idx_next)
+        # (b) complete step t and compute on its values.
+        rs, vals_t = wait_fn(rs, tok_t)
         cc, y = compute_fn(cc, vals_t, idx_t)
-        return (rs, cc, vals_next), y
+        return (rs, cc, tok_next), y
 
-    (read_state, compute_carry, _), ys = jax.lax.scan(
-        body, (read_state, compute_carry, vals0), (idx_seq, nxt))
+    (read_state, compute_carry, tok_last), ys = jax.lax.scan(
+        body, (read_state, compute_carry, tok0),
+        (idx_seq[:-1], idx_seq[1:]))
+
+    # Exact epilogue: the last step completes outside the loop.
+    read_state, vals_last = wait_fn(read_state, tok_last)
+    compute_carry, y_last = compute_fn(compute_carry, vals_last,
+                                       idx_seq[-1])
+    ys = jax.tree_util.tree_map(
+        lambda a, b: jnp.concatenate([a, b[None]], axis=0), ys, y_last)
     return read_state, compute_carry, ys
 
 
 def pipelined_bam_map(bam, st, idx_seq: jax.Array,
                       fn: Callable[[jax.Array], jax.Array]):
-    """Map ``fn`` over BaM-fetched value wavefronts with overlap.
+    """Map ``fn`` over BaM-fetched value wavefronts with a real async window.
 
     ``ys[t] = fn(bam.flat[idx_seq[t]])`` — the pipelined analogue of the
-    paper's Listing 1 kernel loop.
+    paper's Listing 1 kernel loop, now carrying an :class:`IOToken` in the
+    scan carry so step ``t+1``'s storage commands are genuinely in flight
+    while ``fn`` runs on step ``t``.
     """
-    def read_fn(s, idx):
-        return bam.read(s, idx)
+    from repro.core.bam_array import IORequest
+
+    def submit_fn(s, idx):
+        return bam.submit(s, IORequest.read(idx))
 
     def compute_fn(carry, vals, _idx):
         return carry, fn(vals)
 
-    st, _, ys = software_pipeline(read_fn, compute_fn, idx_seq, st, None)
+    st, _, ys = software_pipeline(None, compute_fn, idx_seq, st, None,
+                                  submit_fn=submit_fn, wait_fn=bam.wait)
     return ys, st

@@ -23,6 +23,15 @@ drains demand reads first, and they are inserted **without protection** as
 *speculative* lines (``speculative=True`` in :mod:`repro.core.cache`) so an
 unlucky prediction is the first thing the clock hand reclaims — prefetch
 can delay demand, but never starve it.
+
+Under the first-class async surface the two pieces ride the token
+lifecycle: ``BamArray.submit`` runs the detector and *claims* the
+predicted lines (speculative + in-flight, commands enqueued, nothing
+fetched), and the issuing token's ``wait`` performs the deferred fill.  A
+demand submission that lands on a claimed-but-unfilled prediction
+coalesces against it (promote + ``cross_op_coalesced``) instead of
+re-fetching, and an explicit ``IORequest.prefetch`` token turns the old
+synchronous hint into a genuinely asynchronous warm-up.
 """
 from __future__ import annotations
 

@@ -63,7 +63,7 @@ single-tenant behaviour above.
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

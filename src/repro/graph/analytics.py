@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BamArray, BamState
+from repro.core import BamArray, BamState, IORequest
 from repro.core.ssd import ArrayOfSSDs, INTEL_OPTANE_P5800X
 
 
@@ -111,21 +111,62 @@ class BamGraph:
 
 # --------------------------------------------------------------------- BFS --
 def bfs(g: BamGraph, source: int, max_iters: Optional[int] = None,
-        prefetch: bool = False) -> Tuple[np.ndarray, BamState]:
+        prefetch: bool = False, async_tokens: bool = False
+        ) -> Tuple[np.ndarray, BamState]:
     """Frontier BFS; returns (depth per node (-1 unreachable), BamState).
 
-    With ``prefetch=True`` each iteration also *hints* the next frontier's
-    edges through :meth:`BamArray.prefetch` (frontier-ahead prefetch, the
+    With ``async_tokens=True`` the traversal is *frontier-ahead via
+    tokens*: as soon as iteration ``t`` has updated the depth array it
+    submits the read for iteration ``t+1``'s frontier edges as an
+    :class:`~repro.core.IORequest` and carries the :class:`IOToken` into
+    the next iteration, which redeems it as its demand values — the fetch
+    is genuinely in flight across the iteration boundary and no edge is
+    read twice.  This supersedes the hint path below for overlap.
+
+    With ``prefetch=True`` each iteration instead *hints* the next
+    frontier's edges through :meth:`BamArray.prefetch` (the legacy
     GIDS-style workload hint): the next iteration's demand wavefront then
     finds its lines resident.  The hints ride the low-priority readahead
     lane as evict-first speculative fills, so they never displace the
     current iteration's demand lines.
     """
+    if prefetch and async_tokens:
+        raise ValueError("pick one of prefetch= (hints) or async_tokens=")
     max_iters = max_iters or g.n_nodes
     INF = jnp.int32(2 ** 30)
     depth = jnp.full((g.n_nodes,), INF, jnp.int32).at[source].set(0)
     edge_ids = jnp.arange(g.n_edges, dtype=jnp.int32)
     st = g.state
+
+    if async_tokens:
+        def frontier_req(depth, it):
+            active = (depth == it)[g.edge_src]     # (E,) edges to expand
+            return IORequest.read(jnp.where(active, edge_ids, -1), active)
+
+        @jax.jit
+        def submit0(depth, st):
+            return g.edges.submit(st, frontier_req(depth, 0))
+
+        @jax.jit
+        def step(depth, st, tok, it):
+            st, nbrs = g.edges.wait(st, tok)       # values for frontier @ it
+            active = (depth == it)[g.edge_src]
+            nbrs = jnp.where(active, nbrs.astype(jnp.int32), 0)
+            first_visit = active & (depth[nbrs] >= INF)
+            depth = depth.at[jnp.where(first_visit, nbrs, 0)].min(
+                jnp.where(first_visit, it + 1, INF))
+            # frontier-ahead: issue t+1's read before t's caller even looks
+            st, tok = g.edges.submit(st, frontier_req(depth, it + 1))
+            return depth, st, tok, jnp.any(first_visit)
+
+        st, tok = submit0(depth, st)
+        for it in range(max_iters):
+            depth, st, tok, more = step(depth, st, tok, it)
+            if not bool(more):
+                break
+        st, _ = g.edges.wait(st, tok)              # retire the last token
+        depth = jnp.where(depth >= INF, -1, depth)
+        return np.asarray(depth), st
 
     @jax.jit
     def step(depth, st, it):
@@ -173,21 +214,53 @@ def bfs_oracle(indptr: np.ndarray, dst: np.ndarray, source: int
 
 # ---------------------------------------------------------------------- CC --
 def cc(g: BamGraph, max_iters: Optional[int] = None,
-       prefetch: bool = False) -> Tuple[np.ndarray, BamState]:
+       prefetch: bool = False, async_tokens: bool = False
+       ) -> Tuple[np.ndarray, BamState]:
     """Connected components by min-label propagation (bursty all-edge
     reads — the paper's CC access pattern). Returns (labels, BamState).
 
+    With ``async_tokens=True`` each round submits the next round's
+    all-edge read as an :class:`IOToken` before the label update is even
+    consumed, so round ``t+1``'s storage commands are pending while round
+    ``t``'s caller checks convergence (after warmup the reads are all
+    pinned cache hits and the tokens are pure overlap).
+
     CC's frontier is *every* edge, every round, so with ``prefetch=True``
-    the whole edge array is hinted once up front (a warmup through the
-    readahead lane); iterations after the first then run at full cache
+    the whole edge array is instead hinted once up front (a warmup through
+    the readahead lane); iterations after the first then run at full cache
     speed for the portion that fits.
     """
+    if prefetch and async_tokens:
+        raise ValueError("pick one of prefetch= (hints) or async_tokens=")
     max_iters = max_iters or g.n_nodes
     labels = jnp.arange(g.n_nodes, dtype=jnp.int32)
     edge_ids = jnp.arange(g.n_edges, dtype=jnp.int32)
     st = g.state
     if prefetch:
         st = g.edges.prefetch(st, edge_ids)
+
+    if async_tokens:
+        @jax.jit
+        def submit0(st):
+            return g.edges.submit(st, IORequest.read(edge_ids))
+
+        @jax.jit
+        def step_tok(labels, st, tok):
+            st, nbrs = g.edges.wait(st, tok)
+            nbrs = nbrs.astype(jnp.int32)
+            lsrc = labels[g.edge_src]
+            new = labels.at[nbrs].min(lsrc)
+            new = new.at[g.edge_src].min(new[nbrs])
+            st, tok = g.edges.submit(st, IORequest.read(edge_ids))
+            return new, st, tok, jnp.any(new != labels)
+
+        st, tok = submit0(st)
+        for _ in range(max_iters):
+            labels, st, tok, more = step_tok(labels, st, tok)
+            if not bool(more):
+                break
+        st, _ = g.edges.wait(st, tok)              # retire the last token
+        return np.asarray(labels), st
 
     @jax.jit
     def step(labels, st):

@@ -123,6 +123,16 @@ class PagedKVManager:
     The PAPER mapping: pool pages = BaM cache lines in GPU memory; this
     host store = the NVMe tier; spill/fetch = BaM write/read I/O; the
     Little's-law cost model charges simulated device time per page moved.
+
+    Submit/wait split (mirrors ``BamArray.submit``/``wait``): with
+    ``deferred=True`` the page *moves* still happen inside
+    :meth:`maybe_spill`/:meth:`ensure_resident` (correctness is
+    synchronous) but the device-time charge is deferred — pending page
+    counts accumulate until :meth:`drain`, which charges the whole batch
+    at its batched Little's-law concurrency.  A decode round that spills
+    and fetches across several layers then pays one deep-queue drain
+    instead of many shallow ones, exactly the async win of the core's
+    token API.  ``deferred=False`` (default) keeps per-call charging.
     """
 
     ssd: ArrayOfSSDs = dataclasses.field(
@@ -132,6 +142,9 @@ class PagedKVManager:
     metrics: IOMetrics = dataclasses.field(
         default_factory=IOMetrics.zeros)
     page_bytes: int = 0
+    deferred: bool = False           # defer device-time charge to drain()
+    pending_spills: int = 0          # pages moved but not yet time-charged
+    pending_fetches: int = 0
 
     def _store_fn(self, layer, b, lp, k_page, v_page):
         self.store[(layer, b, lp)] = (k_page.copy(), v_page.copy())
@@ -145,12 +158,13 @@ class PagedKVManager:
         if n:
             import dataclasses as dc
             m = self.metrics
-            t = self.ssd.service_time(n, max(self.page_bytes, 1), write=True)
             self.metrics = dc.replace(
                 m, write_ops=m.write_ops + n,
-                bytes_to_storage=m.bytes_to_storage + n * self.page_bytes,
-                sim_time_s=m.sim_time_s + t,
-                write_time_s=m.write_time_s + t)
+                bytes_to_storage=m.bytes_to_storage + n * self.page_bytes)
+            if self.deferred:
+                self.pending_spills += n
+            else:
+                self._charge(n_writes=n)
         return cache, n
 
     def ensure_resident(self, cache):
@@ -158,11 +172,36 @@ class PagedKVManager:
         if n:
             import dataclasses as dc
             m = self.metrics
-            t = self.ssd.service_time(n, max(self.page_bytes, 1))
             self.metrics = dc.replace(
                 m, misses=m.misses + n,
                 bytes_from_storage=m.bytes_from_storage
-                + n * self.page_bytes,
-                sim_time_s=m.sim_time_s + t,
-                read_time_s=m.read_time_s + t)
+                + n * self.page_bytes)
+            if self.deferred:
+                self.pending_fetches += n
+            else:
+                self._charge(n_reads=n)
         return cache, n
+
+    def drain(self) -> Tuple[int, int]:
+        """Charge every deferred page move as one batched drain.
+
+        Returns ``(n_reads, n_writes)`` retired.  A no-op when nothing is
+        pending, so callers may drain unconditionally (per-round barrier).
+        """
+        n_r, n_w = self.pending_fetches, self.pending_spills
+        self.pending_fetches = self.pending_spills = 0
+        self._charge(n_reads=n_r, n_writes=n_w)
+        return n_r, n_w
+
+    def _charge(self, n_reads: int = 0, n_writes: int = 0) -> None:
+        import dataclasses as dc
+        m = self.metrics
+        t_r = self.ssd.service_time(n_reads, max(self.page_bytes, 1)) \
+            if n_reads else 0.0
+        t_w = self.ssd.service_time(n_writes, max(self.page_bytes, 1),
+                                    write=True) if n_writes else 0.0
+        if t_r or t_w:
+            self.metrics = dc.replace(
+                m, sim_time_s=m.sim_time_s + t_r + t_w,
+                read_time_s=m.read_time_s + t_r,
+                write_time_s=m.write_time_s + t_w)

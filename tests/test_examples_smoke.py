@@ -1,0 +1,46 @@
+"""Tier-1 smoke coverage for every example script.
+
+Each ``examples/*.py`` runs in-process (``runpy``) with tiny CLI sizes, so
+a broken example fails the suite directly — before this file, examples had
+zero coverage (benchmarks are covered by ``test_benchmarks_smoke.py``).
+A new ``examples/*.py`` must be registered in ``SMOKE_ARGS`` (the
+completeness test at the bottom enforces it) with arguments small enough
+to finish in seconds.
+"""
+import pathlib
+import runpy
+import sys
+
+import pytest
+
+EXAMPLES_DIR = pathlib.Path(__file__).resolve().parent.parent / "examples"
+
+# script stem -> smoke-size argv (keep each under ~a minute on CPU)
+SMOKE_ARGS = {
+    "quickstart": ["--elems", "65536", "--wavefront", "512",
+                   "--window", "2"],
+    "graph_analytics": ["--nodes", "300", "--avg-deg", "4", "--ssds", "2"],
+    "taxi_analytics": ["--rows", "4096", "--scan-window", "2"],
+    "serve_lm": ["--requests", "2", "--slots", "2", "--max-seq", "64",
+                 "--new-tokens", "4", "--hot-window", "16"],
+    "train_lm": ["--steps", "3", "--seq", "32", "--batch", "2"],
+}
+
+
+@pytest.mark.parametrize("name", sorted(SMOKE_ARGS))
+def test_example_smokes(name, monkeypatch, capsys, tmp_path):
+    path = EXAMPLES_DIR / f"{name}.py"
+    argv = [str(path)] + SMOKE_ARGS[name]
+    if name == "train_lm":
+        argv += ["--workdir", str(tmp_path / "train_demo")]
+    monkeypatch.setattr(sys, "argv", argv)
+    runpy.run_path(str(path), run_name="__main__")
+    out = capsys.readouterr().out
+    assert out.strip(), f"{name} produced no output"
+
+
+def test_smoke_args_cover_every_example():
+    files = {p.stem for p in EXAMPLES_DIR.glob("*.py")}
+    assert files == set(SMOKE_ARGS), (
+        f"examples/ files {sorted(files)} != SMOKE_ARGS "
+        f"{sorted(SMOKE_ARGS)}")
