@@ -18,16 +18,32 @@ def scaled(full, tiny):
     return tiny if SMOKE else full
 
 
-def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
-    for _ in range(warmup):
-        fn(*args)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    # block on async dispatch if jax arrays
+def _block(out) -> None:
+    """Wait for async JAX dispatch on ``out`` (no-op without jax).
+
+    Only the *import* is guarded: an error raised by the computation
+    itself at block time must propagate, or timed loops would report
+    dispatch-only wall clock for ops that never actually completed.
+    """
     try:
         import jax
-        jax.block_until_ready(out)
-    except Exception:
-        pass
+    except ImportError:
+        return
+    jax.block_until_ready(out)
+
+
+def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Host wall-clock per call, in µs.
+
+    Every warmup *and* timed iteration blocks on its output: leftover
+    async dispatch from warmup never leaks into the timed window, and the
+    clock stops only when the last iteration's values actually exist.
+    """
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+    _block(out)                       # drain warmup dispatch before t0
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        _block(fn(*args))
     return (time.perf_counter() - t0) / iters * 1e6

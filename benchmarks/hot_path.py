@@ -1,0 +1,213 @@
+"""Hot-path wall-clock microbenchmark: fused kernels + the jit-cached op
+family (§III-D/E — "the software request path must be cheap enough to
+keep the queues full").
+
+BaM's throughput claim is a *request-rate* claim: the Little's-law math
+of §II-C only holds if submitting an I/O costs less than servicing it.
+This module measures the host-side software cost of every stage of this
+repo's request path, at several wavefront sizes:
+
+* ``probe``          — kernel-dispatched tag probe (`cache.probe`);
+* ``alloc_fused``    — the fused probe+allocate pass
+                       (`cache.probe_allocate`, argsort-free);
+* ``alloc_argsort``  — the legacy two-step probe + argsort clock sweep
+                       (`cache.allocate`), kept as the baseline the fused
+                       pass replaces;
+* ``submit`` / ``wait`` — the token API halves, jit-cached
+                       (`BamArray.submit_jit` / `wait_jit`);
+* ``read_jit``       — end-to-end read through the jit-cached op family;
+* ``read_eager``     — the identical read with NO jit: every jnp op
+                       dispatches one by one, the state of the hot path
+                       before this PR's jit-cached op family.
+
+All numbers are host wall-clock µs per call (``time_us`` blocks on every
+iteration's output), with derived ops/sec.  The driver (`run.py`) writes
+them to ``BENCH_hot_path.json`` — the repo's measured perf trajectory.
+
+Standalone (``python benchmarks/hot_path.py``) prints a JSON report and
+exits nonzero unless (the PR acceptance gate, CI-runnable):
+
+* the jit-cached end-to-end read is ≥ 2× faster than the eager path at
+  the largest swept batch (CPU ref backend);
+* the fused ``probe_allocate`` kernel (``impl='pallas', interpret=True``)
+  is bit-identical to the jnp oracle across a differential mini-sweep;
+* steady-state ``read``/``submit``/``wait`` at fixed shapes trigger zero
+  retraces after the first call (the trace-count probe).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from benchmarks.common import SMOKE, scaled, time_us
+except ImportError:        # standalone: python benchmarks/<module>.py
+    from common import SMOKE, scaled, time_us
+from repro.core import BamArray, IORequest
+from repro.core import cache as C
+from repro.kernels import ops
+
+BLOCK_ELEMS = 128                       # 512B lines of float32
+BATCHES = scaled((256, 1024, 4096), (32, 64))
+WAYS = 8
+NUM_SETS = scaled(512, 16)
+N_BLOCKS = 4 * NUM_SETS * WAYS          # 4x oversubscribed storage tier
+READ_ITERS = scaled(5, 2)
+
+
+def _build():
+    data = np.random.default_rng(7).standard_normal(
+        (N_BLOCKS, BLOCK_ELEMS)).astype(np.float32)
+    return BamArray.build(data, block_elems=BLOCK_ELEMS,
+                          num_sets=NUM_SETS, ways=WAYS,
+                          num_queues=8, queue_depth=4096)
+
+
+def _warm_cache(m: int):
+    """A cache directory with a resident working set + the request mix."""
+    rng = np.random.default_rng(m)
+    cache = C.make_cache(NUM_SETS, WAYS, BLOCK_ELEMS)
+    resident = jnp.asarray(
+        rng.choice(N_BLOCKS, NUM_SETS * WAYS // 2, replace=False), jnp.int32)
+    cache, _, _ = C.probe_allocate(cache, resident, impl="ref")
+    # request mix: half the resident set, half fresh keys
+    keys = jnp.asarray(np.concatenate([
+        rng.choice(np.asarray(resident), m // 2),
+        rng.integers(0, N_BLOCKS, m - m // 2),
+    ]).astype(np.int32))
+    return jax.block_until_ready(cache), keys
+
+
+def _stage_times(m: int) -> dict:
+    cache, keys = _warm_cache(m)
+    probe = jax.jit(lambda c, k: C.probe(c, k))
+    fused = jax.jit(lambda c, k: C.probe_allocate(c, k))
+
+    def _two_step(c, k):
+        pr = C.probe(c, k)
+        return C.allocate(c, k, (k >= 0) & ~pr.hit, protect_slots=pr.slot)
+
+    argsort = jax.jit(_two_step)
+    return {
+        "probe_us": time_us(probe, cache, keys),
+        "alloc_fused_us": time_us(fused, cache, keys),
+        "alloc_argsort_us": time_us(argsort, cache, keys),
+    }
+
+
+def _op_times(arr, st, m: int) -> dict:
+    rng = np.random.default_rng(100 + m)
+    idx = jnp.asarray(rng.integers(0, arr.size, m), jnp.int32)
+    submit = arr.submit_jit()
+    wait = arr.wait_jit()
+    read = arr.read_jit()
+    st1, tok = submit(st, IORequest.read(idx))
+    jax.block_until_ready(st1)
+    out = {
+        "submit_us": time_us(submit, st, IORequest.read(idx)),
+        "wait_us": time_us(wait, st1, tok),
+        "read_jit_us": time_us(read, st, idx, warmup=1, iters=READ_ITERS),
+        "read_eager_us": time_us(arr.read, st, idx, warmup=1,
+                                 iters=READ_ITERS),
+    }
+    out["jit_speedup"] = out["read_eager_us"] / max(out["read_jit_us"], 1e-9)
+    out["elems_per_s"] = m / (out["read_jit_us"] * 1e-6)
+    return out
+
+
+def _differential_sweep() -> bool:
+    """Fused kernel (pallas, interpret) vs jnp oracle: bit-identical."""
+    rng = np.random.default_rng(0)
+    cases = [(4, 1, 7), (8, 4, 33), (16, 8, 64)]
+    variants = [dict(), dict(tenant=1), dict(way_lo=1, way_hi=3),
+                dict(spec_insert=True), dict(protect_hits=False)]
+    for S, W, m in cases:
+        tags = jnp.asarray(rng.integers(-1, 200, (S, W)), jnp.int32)
+        owner = jnp.asarray(rng.integers(0, 2, (S, W)), jnp.int32)
+        refc = jnp.asarray(rng.integers(0, 2, (S, W)), jnp.int32)
+        dirty = jnp.asarray(rng.integers(0, 2, (S, W)).astype(bool))
+        spec = jnp.asarray(rng.integers(0, 2, (S, W)).astype(bool))
+        hand = jnp.asarray(rng.integers(0, W, (S,)), jnp.int32)
+        keys = jnp.asarray(rng.integers(-1, 250, m), jnp.int32)
+        prot = jnp.asarray(rng.integers(-1, S * W, 5), jnp.int32)
+        for kw in variants:
+            if W == 1 and "way_hi" in kw:
+                continue
+            args = (tags, owner, refc, dirty, spec, hand, keys)
+            r = ops.probe_allocate(*args, protect_slots=prot, impl="ref",
+                                   **kw)
+            p = ops.probe_allocate(*args, protect_slots=prot, impl="pallas",
+                                   interpret=True, **kw)
+            for a, b in zip(r, p):
+                if not np.array_equal(np.asarray(a), np.asarray(b)):
+                    return False
+    return True
+
+
+def _retrace_check() -> bool:
+    """Fixed-shape steady state must trace each op exactly once (a fresh
+    array, so the sweep's other batch shapes don't pollute the counts)."""
+    arr, st = _build()
+    idx = jnp.asarray(np.arange(64) * 3 % arr.size, jnp.int32)
+    read, submit, wait = arr.read_jit(), arr.submit_jit(), arr.wait_jit()
+    for _ in range(3):
+        _, st = read(st, idx)
+        st, tok = submit(st, IORequest.read(idx))
+        st, _ = wait(st, tok)
+    tc = arr.trace_counts
+    return tc.get("read") == 1 and tc.get("submit") == 1 \
+        and tc.get("wait") == 1
+
+
+def sweep() -> dict:
+    arr, st = _build()
+    report = {
+        "workload": {"block_bytes": BLOCK_ELEMS * 4, "num_sets": NUM_SETS,
+                     "ways": WAYS, "n_blocks": N_BLOCKS,
+                     "batches": list(BATCHES)},
+        "batches": [],
+    }
+    for m in BATCHES:
+        point = {"batch": m}
+        point.update(_stage_times(m))
+        point.update(_op_times(arr, st, m))
+        report["batches"].append(point)
+    last = report["batches"][-1]
+    report["jit_speedup_at_max"] = last["jit_speedup"]
+    report["jit_beats_eager_2x"] = last["jit_speedup"] >= 2.0
+    report["differential_ok"] = _differential_sweep()
+    report["no_retrace"] = _retrace_check()
+    report["gate_ok"] = (report["jit_beats_eager_2x"]
+                         and report["differential_ok"]
+                         and report["no_retrace"])
+    return report
+
+
+def run():
+    rep = sweep()
+    rows = []
+    for p in rep["batches"]:
+        m = p["batch"]
+        for stage in ("probe", "alloc_fused", "alloc_argsort", "submit",
+                      "wait", "read_eager"):
+            us = p[f"{stage}_us"]
+            rows.append((
+                f"hot_path/{stage}_b{m}", us,
+                f"ops_per_s={1e6 / max(us, 1e-9):.0f}"))
+        rows.append((
+            f"hot_path/read_jit_b{m}", p["read_jit_us"],
+            f"ops_per_s={1e6 / max(p['read_jit_us'], 1e-9):.0f} "
+            f"speedup_vs_eager={p['jit_speedup']:.2f}x "
+            f"elems_per_s={p['elems_per_s']:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    rep = sweep()
+    print(json.dumps(rep, indent=2))
+    # Speedup threshold is calibrated for full sizes; at smoke sizes only
+    # correctness (differential + retrace) must hold.
+    ok = rep["differential_ok"] and rep["no_retrace"] \
+        and (SMOKE or rep["jit_beats_eager_2x"])
+    raise SystemExit(0 if ok else 1)

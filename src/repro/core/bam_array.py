@@ -72,6 +72,7 @@ import jax.numpy as jnp
 from repro.core import cache as C
 from repro.core import queues as Q
 from repro.core.coalescer import coalesce
+from repro.kernels import ops as K
 from repro.core.metrics import (
     IOMetrics, metrics_accumulate, metrics_delta, metrics_sum,
 )
@@ -83,6 +84,31 @@ from repro.utils import pytree_dataclass, round_up
 __all__ = ["BamArray", "BamState", "BamKVStore", "PrefetchConfig",
            "TenantCtx", "TenantSpec", "BamRuntime", "RuntimeState",
            "IORequest", "IOToken"]
+
+
+def _cached_jit(cache: Dict[str, Any], counts: Dict[str, int], key: str,
+                make):
+    """One ``jax.jit`` per op key, cached in ``cache``; jit itself keys
+    compiled executables by argument shape/dtype/pytree structure, so
+    steady-state ops at fixed shapes never retrace.
+
+    The Python body of the traced callable bumps ``counts[key]`` — Python
+    runs only while JAX *traces* (a jit cache miss), so the counter is an
+    exact retrace probe (the retrace-regression tests and
+    ``benchmarks/hot_path.py`` read it).  Shared by :class:`BamArray` and
+    :class:`BamRuntime`.
+    """
+    fn = cache.get(key)
+    if fn is None:
+        raw = make()
+
+        def counted(*args, _raw=raw, _key=key, **kw):
+            counts[_key] = counts.get(_key, 0) + 1
+            return _raw(*args, **kw)
+
+        fn = jax.jit(counted)
+        cache[key] = fn
+    return fn
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,6 +212,18 @@ class BamArray:
     # (BamRuntime.drain), so several tenants' commands genuinely coexist
     # and the weighted-fair arbitration orders a real mixed stream.
     defer_drain: bool = False
+    # Kernel dispatch policy for the probe / fused probe+allocate / gather
+    # hot path: "auto" (Pallas on TPU, jnp-oracle XLA elsewhere),
+    # "pallas", or "ref" — threaded to repro.kernels.ops on every op.
+    kernel_impl: str = "auto"
+    # Per-instance jit cache for the op family (read/write/submit/wait/…)
+    # plus the trace-count probe the retrace-regression tests read.  Both
+    # are identity-bound to this instance's static config — `with_prefetch`
+    # resets them on the copy.
+    _jit_ops: Dict[str, Any] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+    _trace_counts: Dict[str, int] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     # ---------------------------------------------------------------- init
     @staticmethod
@@ -194,7 +232,8 @@ class BamArray:
               num_queues: int = 8, queue_depth: int = 1024,
               ssd: Optional[ArrayOfSSDs] = None,
               prefetch: Optional[PrefetchConfig] = None,
-              backend: str = "sim") -> Tuple["BamArray", BamState]:
+              backend: str = "sim",
+              kernel_impl: str = "auto") -> Tuple["BamArray", BamState]:
         """Create the array + its initial state from a host/jnp array.
 
         ``backend='sim'``: data lives on the host, fetched via pure_callback
@@ -204,6 +243,12 @@ class BamArray:
         The SQ pool is partitioned per storage device (``ssd.n_devices``
         equal ring groups); ``num_queues`` is rounded up to the next
         multiple of the device count so every channel gets the same depth.
+
+        ``kernel_impl`` picks the hot-path kernels (probe, fused
+        probe+allocate, line gather): ``"auto"`` compiles the Pallas
+        kernels natively on TPU and runs the bit-identical jnp oracles as
+        XLA graphs elsewhere; ``"pallas"``/``"ref"`` pin one side (tests
+        pin ``"pallas"`` with interpret mode for the differential sweeps).
         """
         import numpy as np
         shape = tuple(data.shape)
@@ -216,12 +261,17 @@ class BamArray:
             store, state_store, dtype = None, hs, hs.dtype
         else:
             raise ValueError(f"unknown backend {backend!r}")
+        if kernel_impl not in ("auto", "pallas", "ref"):
+            raise ValueError(
+                f"kernel_impl must be 'auto', 'pallas' or 'ref', "
+                f"got {kernel_impl!r}")
         ssd = ssd or ArrayOfSSDs(INTEL_OPTANE_P5800X, 1)
         num_queues = round_up(num_queues, ssd.n_devices)
         arr = BamArray(
             storage=store, shape=shape, dtype=dtype, block_elems=block_elems,
             ssd=ssd,
-            prefetch_cfg=prefetch or PrefetchConfig())
+            prefetch_cfg=prefetch or PrefetchConfig(),
+            kernel_impl=kernel_impl)
         st = BamState(
             cache=C.make_cache(num_sets, ways, block_elems, dtype),
             queues=Q.make_queues(num_queues, queue_depth,
@@ -249,8 +299,53 @@ class BamArray:
         return -(-self.size // self.block_elems)
 
     def with_prefetch(self, cfg: PrefetchConfig) -> "BamArray":
-        """Same array, different (static) readahead policy."""
-        return dataclasses.replace(self, prefetch_cfg=cfg)
+        """Same array, different (static) readahead policy.
+
+        The jit-op cache is reset on the copy: its cached callables close
+        over the *original* instance's static config.
+        """
+        return dataclasses.replace(self, prefetch_cfg=cfg,
+                                   _jit_ops={}, _trace_counts={})
+
+    # ------------------------------------------------- jit-cached op family
+    def _jit_op(self, name: str, make):
+        """See :func:`_cached_jit` (the shared cache + retrace probe)."""
+        return _cached_jit(self._jit_ops, self._trace_counts, name, make)
+
+    @property
+    def trace_counts(self) -> Dict[str, int]:
+        """How many times each jit-cached op has been traced (not called)."""
+        return dict(self._trace_counts)
+
+    def read_jit(self):
+        """Cached ``jax.jit`` of :meth:`read` — grab it every wavefront,
+        it compiles once per distinct index shape."""
+        return self._jit_op(
+            "read", lambda: lambda st, idx, valid=None:
+                self.read(st, idx, valid))
+
+    def write_jit(self):
+        return self._jit_op(
+            "write", lambda: lambda st, idx, values, valid=None:
+                self.write(st, idx, values, valid))
+
+    def prefetch_jit(self):
+        return self._jit_op(
+            "prefetch", lambda: lambda st, idx, valid=None:
+                self.prefetch(st, idx, valid))
+
+    def submit_jit(self):
+        """Cached ``jax.jit`` of :meth:`submit` ``(st, req) -> (st, tok)``
+        — the token API's steady-state entry point.  ``IORequest.kind`` is
+        pytree metadata, so read/write/prefetch submissions share the one
+        cached callable and key their compilations by request structure."""
+        return self._jit_op(
+            "submit", lambda: lambda st, req: self.submit(st, req))
+
+    def wait_jit(self):
+        """Cached ``jax.jit`` of :meth:`wait` ``(st, tok) -> (st, vals)``."""
+        return self._jit_op(
+            "wait", lambda: lambda st, tok: self.wait(st, tok))
 
     def _store(self, st: BamState):
         return self.storage if self.storage is not None else st.storage
@@ -318,28 +413,30 @@ class BamArray:
         nd = self.ssd.n_devices
         sb = self.ssd.stripe_blocks
         mt = st.metrics
-        pr = C.probe(st.cache, ukeys, uvalid, tenant=ctx.tenant)
-
         if kind == "prefetch":
-            return self._submit_prefetch(st, co, pr, off, valid)
+            return self._submit_prefetch(st, co, off, valid)
 
-        # 2) demand probe accounting.  A hit on a prefetched line promotes
+        # 2+3) fused probe + victim allocate: ONE kernel pass
+        #    (repro.kernels.ops.probe_allocate, Pallas on TPU / jnp oracle
+        #    elsewhere) probes the tags and grants a victim slot per miss.
+        #    This round's hits are protected in-pass; lines pinned by
+        #    other outstanding tokens are refcount-protected.
+        cache2, pr, alloc = C.probe_allocate(
+            st.cache, ukeys, uvalid, tenant=ctx.tenant,
+            way_lo=ctx.way_lo, way_hi=ctx.way_hi, impl=self.kernel_impl)
+
+        #    Demand probe accounting.  A hit on a prefetched line promotes
         #    it; a hit on an *in-flight* line is a cross-op coalesce — some
         #    pending token already has the fetch in the rings, so this op
-        #    rides that command instead of issuing its own.
+        #    rides that command instead of issuing its own.  (Hit slots and
+        #    granted slots are disjoint, so promoting after the allocation
+        #    scatters is bit-identical to promoting before them.)
         n_hit = jnp.sum(pr.hit.astype(jnp.int32))
         n_pref_hit = jnp.sum(pr.speculative.astype(jnp.int32))
         n_cross = jnp.sum(pr.inflight.astype(jnp.int32))
-        cache1 = C.count_hits(st.cache, n_hit)
-        cache1 = C.promote(cache1, jnp.where(pr.speculative, pr.slot, -1))
+        cache2 = C.count_hits(cache2, n_hit)
+        cache2 = C.promote(cache2, jnp.where(pr.speculative, pr.slot, -1))
         miss = uvalid & ~pr.hit
-
-        # 3) allocate victims for the misses (hits protected this round;
-        #    lines pinned by other outstanding tokens are refcount-protected).
-        cache2, alloc = C.allocate(cache1, ukeys, miss,
-                                   protect_slots=pr.slot,
-                                   tenant=ctx.tenant, way_lo=ctx.way_lo,
-                                   way_hi=ctx.way_hi)
 
         # 3b) pin everything this token touched until its wait, and mark
         #     granted (not-yet-filled) lines in flight.
@@ -368,9 +465,6 @@ class BamArray:
                 ukeys, uvalid, window=cfg.window, num_blocks=self.num_blocks,
                 min_support=cfg.min_support, max_stride=cfg.max_stride,
                 raw_keys=blk, raw_valid=valid)
-            ra_pr = C.probe(cache2, ra_cand, ra_cand >= 0,
-                            tenant=ctx.tenant)
-            ra_want = (ra_cand >= 0) & ~ra_pr.hit
             # Never speculatively re-fetch a line this wavefront just
             # evicted: on the sim backend the fetch (pure_callback) is not
             # ordered against the dirty write-back (io_callback), so it
@@ -378,13 +472,17 @@ class BamArray:
             # just-evicted line is pure thrash regardless of backend.
             evk = jnp.where(alloc.ok & (alloc.evicted_key >= 0),
                             alloc.evicted_key, -2)
-            ra_want = ra_want & ~jnp.any(
+            not_evicted = ~jnp.any(
                 ra_cand[:, None] == evk[None, :], axis=1)
-            cache2, ra_alloc = C.allocate(
-                cache2, ra_cand, ra_want,
+            # Fused probe + speculative allocate for the predicted lines
+            # (probe hits are NOT protected here — only the demand
+            # wavefront's hit and granted slots are, as before).
+            cache2, _, ra_alloc = C.probe_allocate(
+                cache2, ra_cand, ra_cand >= 0, alloc_mask=not_evicted,
                 protect_slots=jnp.concatenate([pr.slot, alloc.slot]),
-                speculative=True,
-                tenant=ctx.tenant, way_lo=ctx.way_lo, way_hi=ctx.way_hi)
+                protect_hits=False, speculative=True,
+                tenant=ctx.tenant, way_lo=ctx.way_lo, way_hi=ctx.way_hi,
+                impl=self.kernel_impl)
             ra_keys = jnp.where(ra_alloc.ok, ra_cand, -1)
             ra_rows = jnp.where(ra_alloc.ok, ra_alloc.slot, 0)
             ra_ev_lines = cache2.data[ra_rows]
@@ -505,7 +603,7 @@ class BamArray:
         return BamState(cache=cache2, queues=qs2, metrics=metrics,
                         storage=new_storage), token
 
-    def _submit_prefetch(self, st: BamState, co, pr, off, valid
+    def _submit_prefetch(self, st: BamState, co, off, valid
                          ) -> Tuple[BamState, IOToken]:
         """Prefetch submission: speculative insert-without-pin through the
         readahead lane.  Unlike demand ops the granted lines are *not*
@@ -518,14 +616,14 @@ class BamArray:
         mt = st.metrics
         ukeys = co.unique_keys
         uvalid = ukeys >= 0
-        # A hint landing on a line some pending token is already fetching
-        # is a cross-op coalesce too: nothing to claim, nothing to enqueue.
+        # Fused probe + speculative allocate (probe hits protected, as
+        # before).  A hint landing on a line some pending token is already
+        # fetching is a cross-op coalesce too: nothing to claim, nothing
+        # to enqueue.
+        cache1, pr, alloc = C.probe_allocate(
+            st.cache, ukeys, uvalid, speculative=True, tenant=ctx.tenant,
+            way_lo=ctx.way_lo, way_hi=ctx.way_hi, impl=self.kernel_impl)
         n_cross = jnp.sum(pr.inflight.astype(jnp.int32))
-        want = uvalid & ~pr.hit
-        cache1, alloc = C.allocate(st.cache, ukeys, want,
-                                   protect_slots=pr.slot, speculative=True,
-                                   tenant=ctx.tenant, way_lo=ctx.way_lo,
-                                   way_hi=ctx.way_hi)
         ev_rows = jnp.where(alloc.ok, alloc.slot, 0)
         ev_lines = cache1.data[ev_rows]
         wb = alloc.ok & alloc.evicted_dirty & (alloc.evicted_key >= 0)
@@ -633,7 +731,8 @@ class BamArray:
         # 2) fresh probe: lines this token submitted may since have been
         #    filled by another token's wait (cross-op coalescing), written
         #    to, or — for unpinned speculative lines — evicted.
-        pr2 = C.probe(st.cache, ukeys, uvalid, tenant=ctx.tenant)
+        pr2 = C.probe(st.cache, ukeys, uvalid, tenant=ctx.tenant,
+                      impl=self.kernel_impl)
         pend = pr2.hit & pr2.inflight              # resident, fill pending
         if token.kind == "prefetch":
             # only materialise lines still awaiting their speculative fill
@@ -657,7 +756,8 @@ class BamArray:
         # 3b) stride-readahead lines issued by this token's submit.
         if token.ra_keys is not None:
             ra = token.ra_keys
-            ra_pr = C.probe(cache1, ra, ra >= 0, tenant=ctx.tenant)
+            ra_pr = C.probe(cache1, ra, ra >= 0, tenant=ctx.tenant,
+                            impl=self.kernel_impl)
             ra_pend = ra_pr.hit & ra_pr.inflight
             lines_ra = store.fetch_blocks(jnp.where(ra_pend, ra, -1))
             cache1 = C.fill(cache1, ra_pr.slot, ra_pend, lines_ra)
@@ -668,10 +768,15 @@ class BamArray:
         # 4) op-specific completion.
         u = token.inverse
         if token.kind == "read":
+            # Gather the hit lanes through the kernel dispatch layer
+            # (Pallas scalar-prefetch line gather on TPU — the BlockSpec
+            # index map *is* the page-table walk; on the ref/XLA path the
+            # `off` column keeps it an element gather, not line-wide).
             hit_u = pr2.hit[u]
-            slot_u = jnp.where(pr2.slot[u] >= 0, pr2.slot[u], 0)
-            vals = jnp.where(hit_u, cache1.data[slot_u, off],
-                             lines[u, off])
+            hit_vals = K.gather_blocks(
+                cache1.data, jnp.where(hit_u, pr2.slot[u], -1), off=off,
+                impl=self.kernel_impl)
+            vals = jnp.where(hit_u, hit_vals, lines[u, off])
             vals = jnp.where(valid, vals, 0).astype(self.dtype)
             cache_f = cache1
         elif token.kind == "write":
@@ -1053,7 +1158,9 @@ class BamRuntime:
     isolation: str
     ways: int
     drain_mode: str = "per_op"
-    _jit_reads: Dict[str, Any] = dataclasses.field(
+    _jit_ops: Dict[str, Any] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+    _trace_counts: Dict[str, int] = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
 
     # ---------------------------------------------------------------- build
@@ -1066,6 +1173,7 @@ class BamRuntime:
               drain: str = "per_op",
               backend: str = "sim",
               cache_dtype=jnp.float32,
+              kernel_impl: str = "auto",
               ) -> Tuple["BamRuntime", RuntimeState]:
         """``drain="per_op"`` (default) drains the rings inside every
         tenant op, exactly like a standalone ``BamArray``.
@@ -1084,6 +1192,10 @@ class BamRuntime:
         if drain not in ("per_op", "deferred"):
             raise ValueError(
                 f"drain must be 'per_op' or 'deferred', got {drain!r}")
+        if kernel_impl not in ("auto", "pallas", "ref"):
+            raise ValueError(
+                f"kernel_impl must be 'auto', 'pallas' or 'ref', "
+                f"got {kernel_impl!r}")
         if not specs:
             raise ValueError("need at least one TenantSpec")
         names = [s.name for s in specs]
@@ -1158,7 +1270,8 @@ class BamRuntime:
                 block_elems=block_elems, ssd=ssd,
                 prefetch_cfg=s.prefetch or PrefetchConfig(),
                 tenant_ctx=TenantCtx(tenant=tid, way_lo=lo, way_hi=hi),
-                defer_drain=(drain == "deferred"))
+                defer_drain=(drain == "deferred"),
+                kernel_impl=kernel_impl)
             tenant_ids[s.name] = tid
             storages.append(state_store)
 
@@ -1216,15 +1329,41 @@ class BamRuntime:
                                            idx, valid)
         return vals, self.absorb(rst, name, st)
 
+    def _jit_op(self, key: str, make):
+        """Per-(op, tenant) jit cache — see :func:`_cached_jit`."""
+        return _cached_jit(self._jit_ops, self._trace_counts, key, make)
+
+    @property
+    def trace_counts(self) -> Dict[str, int]:
+        return dict(self._trace_counts)
+
     def read_jit(self, name: str):
         """A cached ``jax.jit`` of ``lambda rst, idx: self.read(rst, name,
-        idx)`` — one compilation per tenant however often callers grab it
-        (streaming drivers call this every wavefront)."""
-        fn = self._jit_reads.get(name)
-        if fn is None:
-            fn = jax.jit(lambda rst, idx: self.read(rst, name, idx))
-            self._jit_reads[name] = fn
-        return fn
+        idx)`` — one compilation per (tenant, shape) however often callers
+        grab it (streaming drivers call this every wavefront)."""
+        return self._jit_op(
+            f"read:{name}",
+            lambda: lambda rst, idx: self.read(rst, name, idx))
+
+    def write_jit(self, name: str):
+        return self._jit_op(
+            f"write:{name}",
+            lambda: lambda rst, idx, values: self.write(rst, name, idx,
+                                                        values))
+
+    def submit_jit(self, name: str):
+        """Cached jit of :meth:`submit` for one tenant ``(rst, req) ->
+        (rst, token)``."""
+        return self._jit_op(
+            f"submit:{name}",
+            lambda: lambda rst, req: self.submit(rst, name, req))
+
+    def wait_jit(self, name: str):
+        """Cached jit of :meth:`wait` for one tenant ``(rst, token) ->
+        (rst, values)``."""
+        return self._jit_op(
+            f"wait:{name}",
+            lambda: lambda rst, tok: self.wait(rst, name, tok))
 
     def write(self, rst: RuntimeState, name: str, idx: jax.Array,
               values: jax.Array, valid: jax.Array | None = None

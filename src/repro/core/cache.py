@@ -62,11 +62,12 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as _ops
 from repro.utils import mix_hash, pytree_dataclass, segment_rank
 
 __all__ = [
-    "CacheState", "make_cache", "probe", "allocate", "fill",
-    "acquire", "release", "pin_keys", "mark_dirty", "promote",
+    "CacheState", "make_cache", "probe", "allocate", "probe_allocate",
+    "fill", "acquire", "release", "pin_keys", "mark_dirty", "promote",
     "mark_inflight", "clear_inflight",
 ]
 
@@ -124,30 +125,77 @@ class ProbeResult:
 
 
 def probe(cache: CacheState, keys: jax.Array,
-          valid: jax.Array | None = None, tenant: int = 0) -> ProbeResult:
+          valid: jax.Array | None = None, tenant: int = 0,
+          impl: str = "auto") -> ProbeResult:
     """Vectorized set-associative lookup for a wavefront of (unique) keys.
 
     ``tenant`` namespaces the tag match: a line counts as a hit only when
     its owner matches, so shared-cache tenants with overlapping key spaces
     never read each other's lines.  Single-tenant callers keep the default
     (every line is owned by tenant 0).
+
+    The tag compare is dispatched through :mod:`repro.kernels.ops`
+    (``impl="auto"``: the Pallas one-hot-matmul probe on TPU, the
+    bit-identical jnp oracle as an XLA graph elsewhere).
     """
     if valid is None:
         valid = keys >= 0
     sets = _set_of(cache, keys)                         # (m,)
-    tag_rows = cache.tags[sets]                         # (m, ways)
-    eq = (tag_rows == keys[:, None]) & valid[:, None] \
-        & (cache.owner[sets] == jnp.int32(tenant))
-    hit = eq.any(axis=1)
-    way = jnp.argmax(eq, axis=1).astype(jnp.int32)
-    slot = jnp.where(hit, sets * cache.ways + way, -1).astype(jnp.int32)
-    spec = hit & cache.speculative[sets, way]
-    infl = hit & cache.inflight[sets, way]
+    hit, slot = _ops.cache_probe(cache.tags, jnp.where(valid, keys, -1),
+                                 owner=cache.owner, tenant=tenant, impl=impl)
+    safe = jnp.where(hit, slot, 0)
+    spec = hit & cache.speculative.reshape(-1)[safe]
+    infl = hit & cache.inflight.reshape(-1)[safe]
     return ProbeResult(hit=hit, slot=slot, set_idx=sets.astype(jnp.int32),
                        speculative=spec, inflight=infl)
 
 
 _segment_rank = segment_rank
+
+
+def _apply_grants(cache: CacheState, keys: jax.Array, sets: jax.Array,
+                  way: jax.Array, ok: jax.Array, n_valid: jax.Array,
+                  speculative: bool, tenant: int) -> CacheState:
+    """Commit a wavefront of victim grants: scatter the claimed tags and
+    flags, advance each touched set's clock hand past the granted way,
+    bump the miss/bypass counters.
+
+    The single copy of the grant-commit block shared by :func:`allocate`
+    and :func:`probe_allocate` — the two paths stay bit-identical by
+    construction.  Rows with ``ok=False`` scatter out of bounds and drop;
+    granted ``(set, way)`` pairs are distinct per wavefront by the rank
+    disambiguation, so scatter order cannot matter.
+    """
+    ways = cache.ways
+    s_i = jnp.where(ok, sets, cache.num_sets)
+    w_i = jnp.where(ok, way, 0)
+    tags = cache.tags.at[s_i, w_i].set(keys, mode="drop")
+    owner = cache.owner.at[s_i, w_i].set(jnp.int32(tenant), mode="drop")
+    dirty = cache.dirty.at[s_i, w_i].set(False, mode="drop")
+    spec = cache.speculative.at[s_i, w_i].set(speculative, mode="drop")
+    # A granted line starts life *filled from the grantor's perspective*:
+    # the async submit path re-marks it in flight right after allocation.
+    infl = cache.inflight.at[s_i, w_i].set(False, mode="drop")
+
+    # Advance each touched set's hand past the granted way's clock
+    # position (the victim select may run in class-sorted order, so the
+    # position is recovered from the way index, not the sweep position).
+    hand = cache.clock_hand[sets]
+    clock_pos = (way - hand) % ways
+    adv = jnp.zeros((cache.num_sets,), jnp.int32).at[s_i].max(
+        clock_pos + 1, mode="drop")
+    clock_hand = (cache.clock_hand + adv) % ways
+
+    n_ok = jnp.sum(ok.astype(jnp.int32))
+    # Speculative fills are not demand traffic: keep the miss/bypass
+    # counters (the hit-rate denominators) demand-only.
+    miss_inc = jnp.int32(0) if speculative else n_valid
+    byp_inc = jnp.int32(0) if speculative else n_valid - n_ok
+    return _replace_data(
+        cache, tags=tags, owner=owner, dirty=dirty, speculative=spec,
+        inflight=infl, clock_hand=clock_hand,
+        misses=cache.misses + miss_inc,
+        bypasses=cache.bypasses + byp_inc)
 
 
 @pytree_dataclass
@@ -247,40 +295,75 @@ def allocate(cache: CacheState, keys: jax.Array,
     evicted_key = jnp.where(ok, cache.tags[sets, way], -1).astype(jnp.int32)
     evicted_dirty = jnp.where(ok, cache.dirty[sets, way], False)
 
-    # Scatter the new tags (distinct (set,way) per ok-row by construction;
-    # non-granted rows scatter out of bounds and are dropped).
-    s_i = jnp.where(ok, sets, cache.num_sets)
-    w_i = jnp.where(ok, way, 0)
-    tags = cache.tags.at[s_i, w_i].set(keys, mode="drop")
-    owner = cache.owner.at[s_i, w_i].set(jnp.int32(tenant), mode="drop")
-    dirty = cache.dirty.at[s_i, w_i].set(False, mode="drop")
-    spec = cache.speculative.at[s_i, w_i].set(speculative, mode="drop")
-    # A granted line starts life *filled from the grantor's perspective*:
-    # the async submit path re-marks it in flight right after allocation.
-    infl = cache.inflight.at[s_i, w_i].set(False, mode="drop")
-
-    # Advance each touched set's hand past the granted way's clock position
-    # (way_pos indexes the class-sorted sweep, not clock distance).
-    clock_pos = (way - hand) % ways
-    adv = jnp.zeros((cache.num_sets,), jnp.int32).at[s_i].max(
-        clock_pos + 1, mode="drop")
-    clock_hand = (cache.clock_hand + adv) % ways
-
-    n_ok = jnp.sum(ok.astype(jnp.int32))
-    n_valid = jnp.sum(valid.astype(jnp.int32))
-    # Speculative fills are not demand traffic: keep the miss/bypass
-    # counters (the hit-rate denominators) demand-only.
-    miss_inc = jnp.int32(0) if speculative else n_valid
-    byp_inc = jnp.int32(0) if speculative else n_valid - n_ok
-    cache2 = CacheState(
-        num_sets=cache.num_sets, ways=ways, line_elems=cache.line_elems,
-        tags=tags, owner=owner, refcount=cache.refcount, dirty=dirty,
-        speculative=spec, inflight=infl,
-        clock_hand=clock_hand, data=cache.data,
-        hits=cache.hits, misses=cache.misses + miss_inc,
-        bypasses=cache.bypasses + byp_inc,
-    )
+    cache2 = _apply_grants(cache, keys, sets, way, ok,
+                           jnp.sum(valid.astype(jnp.int32)),
+                           speculative, tenant)
     return cache2, AllocResult(
+        slot=jnp.where(ok, slot, -1), ok=ok,
+        evicted_key=evicted_key, evicted_dirty=evicted_dirty)
+
+
+def probe_allocate(cache: CacheState, keys: jax.Array,
+                   valid: jax.Array | None = None, *,
+                   alloc_mask: jax.Array | None = None,
+                   protect_slots: jax.Array | None = None,
+                   protect_hits: bool = True,
+                   speculative: bool = False,
+                   tenant: int = 0,
+                   way_lo: int = 0,
+                   way_hi: int | None = None,
+                   impl: str = "auto",
+                   ) -> Tuple[CacheState, ProbeResult, AllocResult]:
+    """Fused :func:`probe` + :func:`allocate` — the submission hot path.
+
+    One kernel pass (:func:`repro.kernels.ops.probe_allocate`) performs
+    the tag probe and, for the misses, the class-then-clock victim select
+    — argsort-free, honouring exactly what the two-step path honours:
+    pinned lines, foreign dirty lines, the ``[way_lo, way_hi)`` tenant
+    way window, pending speculative lines under ``speculative=True``,
+    this wavefront's own hits (``protect_hits=True``, the fused
+    equivalent of passing the probe's slots as ``protect_slots``) and any
+    extra ``protect_slots``.  ``alloc_mask`` further restricts which
+    misses may allocate (the readahead path's "never re-fetch a line this
+    wavefront just evicted" rule).
+
+    The scatters (tag claim, owner stamp, clock-hand advance, miss/bypass
+    counters) are identical to :func:`allocate`'s; results are
+    bit-identical to ``probe`` + ``allocate`` with
+    ``protect_slots=probe.slot`` — the oracle tests assert it.
+    """
+    m = keys.shape[0]
+    ways = cache.ways
+    way_hi = ways if way_hi is None else way_hi
+    if not (0 <= way_lo < way_hi <= ways):
+        raise ValueError(
+            f"way window [{way_lo}, {way_hi}) invalid for ways={ways}")
+    if valid is None:
+        valid = keys >= 0
+    sets = _set_of(cache, keys)
+
+    hit, hslot, way, ok, evicted_key, evicted_dirty = _ops.probe_allocate(
+        cache.tags, cache.owner, cache.refcount, cache.dirty,
+        cache.speculative, cache.clock_hand, keys, valid=valid,
+        alloc_mask=alloc_mask, protect_slots=protect_slots, tenant=tenant,
+        way_lo=way_lo, way_hi=way_hi, spec_insert=speculative,
+        protect_hits=protect_hits, impl=impl)
+
+    safe = jnp.where(hit, hslot, 0)
+    pr = ProbeResult(
+        hit=hit, slot=hslot, set_idx=sets.astype(jnp.int32),
+        speculative=hit & cache.speculative.reshape(-1)[safe],
+        inflight=hit & cache.inflight.reshape(-1)[safe])
+
+    slot = (sets * ways + jnp.where(ok, way, 0)).astype(jnp.int32)
+
+    miss = valid & ~hit
+    if alloc_mask is not None:
+        miss = miss & alloc_mask
+    cache2 = _apply_grants(cache, keys, sets, way, ok,
+                           jnp.sum(miss.astype(jnp.int32)),
+                           speculative, tenant)
+    return cache2, pr, AllocResult(
         slot=jnp.where(ok, slot, -1), ok=ok,
         evicted_key=evicted_key, evicted_dirty=evicted_dirty)
 

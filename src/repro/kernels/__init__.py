@@ -6,7 +6,7 @@ with ``ops.py`` as the jit'd public wrapper (auto interpret off-TPU) and
 """
 from repro.kernels import ops, ref
 from repro.kernels.ops import (cache_probe, flash_attention, gather_blocks,
-                               paged_attention)
+                               paged_attention, probe_allocate)
 
 __all__ = ["ops", "ref", "cache_probe", "flash_attention", "gather_blocks",
-           "paged_attention"]
+           "paged_attention", "probe_allocate"]

@@ -33,28 +33,38 @@ def _hash(k):
     return (k.astype(jnp.int32) & jnp.int32(0x7FFFFFFF))
 
 
-def _probe_kernel(keys_ref, tags_ref, hit_ref, slot_ref, *, num_sets: int,
-                  ways: int, bm: int):
-    keys = keys_ref[0]                               # (bm,)
-    valid = keys >= 0
-    sets = _hash(jnp.where(valid, keys, 0)) % num_sets  # (bm,)
-
-    tags = tags_ref[...]                             # (S, W) int32
-    t_u = tags.astype(jnp.uint32)
+def _exact_rows(onehot, table):
+    """Exact int32 row gather through the one-hot matmul (16-bit halves)."""
+    t_u = table.astype(jnp.uint32)
     lo = (t_u & jnp.uint32(0xFFFF)).astype(jnp.float32)       # (S, W)
     hi = (t_u >> 16).astype(jnp.float32)                      # (S, W)
-
-    onehot = (sets[:, None] ==
-              jax.lax.broadcasted_iota(jnp.int32, (bm, num_sets), 1)
-              ).astype(jnp.float32)                  # (bm, S)
     row_lo = jax.lax.dot_general(onehot, lo, (((1,), (0,)), ((), ())),
                                  preferred_element_type=jnp.float32)
     row_hi = jax.lax.dot_general(onehot, hi, (((1,), (0,)), ((), ())),
                                  preferred_element_type=jnp.float32)
     rows = (row_hi.astype(jnp.uint32) << 16) | row_lo.astype(jnp.uint32)
-    rows = rows.astype(jnp.int32)                    # (bm, W) gathered tags
+    return rows.astype(jnp.int32)
+
+
+def _probe_kernel(keys_ref, tags_ref, *rest, num_sets: int,
+                  ways: int, bm: int, tenant: int, has_owner: bool):
+    if has_owner:
+        owner_ref, hit_ref, slot_ref = rest
+    else:
+        owner_ref, (hit_ref, slot_ref) = None, rest
+    keys = keys_ref[0]                               # (bm,)
+    valid = keys >= 0
+    sets = _hash(jnp.where(valid, keys, 0)) % num_sets  # (bm,)
+
+    onehot = (sets[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (bm, num_sets), 1)
+              ).astype(jnp.float32)                  # (bm, S)
+    rows = _exact_rows(onehot, tags_ref[...])        # (bm, W) gathered tags
 
     eq = (rows == keys[:, None]) & valid[:, None]
+    if has_owner:
+        own_rows = _exact_rows(onehot, owner_ref[...])
+        eq = eq & (own_rows == jnp.int32(tenant))
     hit = eq.any(axis=1)
     way = jnp.argmax(eq, axis=1).astype(jnp.int32)
     slot = jnp.where(hit, sets * ways + way, -1).astype(jnp.int32)
@@ -63,11 +73,14 @@ def _probe_kernel(keys_ref, tags_ref, hit_ref, slot_ref, *, num_sets: int,
 
 
 def cache_probe_pallas(tags: jax.Array, keys: jax.Array, *,
+                       owner: jax.Array | None = None, tenant: int = 0,
                        block_m: int = 512, interpret: bool = False):
     """tags: (num_sets, ways) int32; keys: (m,) int32.
 
     Returns (hit (m,) bool, slot (m,) int32 flat line slot, -1 on miss) —
-    bit-identical to :func:`repro.core.cache.probe`.
+    bit-identical to :func:`repro.core.cache.probe`.  With ``owner`` (the
+    per-line tenant stamp), a hit additionally requires ``owner ==
+    tenant`` — the multi-tenant tag namespacing.
     """
     num_sets, ways = tags.shape
     m = keys.shape[0]
@@ -78,14 +91,18 @@ def cache_probe_pallas(tags: jax.Array, keys: jax.Array, *,
     kp2 = kp.reshape(nb, bm)
 
     kernel = functools.partial(_probe_kernel, num_sets=num_sets, ways=ways,
-                               bm=bm)
+                               bm=bm, tenant=tenant,
+                               has_owner=owner is not None)
+    dir_spec = pl.BlockSpec((num_sets, ways), lambda i: (0, 0))
+    in_specs = [pl.BlockSpec((1, bm), lambda i: (i, 0)), dir_spec]
+    operands = [kp2, tags]
+    if owner is not None:
+        in_specs.append(dir_spec)
+        operands.append(owner)
     hit, slot = pl.pallas_call(
         kernel,
         grid=(nb,),
-        in_specs=[
-            pl.BlockSpec((1, bm), lambda i: (i, 0)),
-            pl.BlockSpec((num_sets, ways), lambda i: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, bm), lambda i: (i, 0)),
             pl.BlockSpec((1, bm), lambda i: (i, 0)),
@@ -97,5 +114,5 @@ def cache_probe_pallas(tags: jax.Array, keys: jax.Array, *,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
-    )(kp2, tags)
+    )(*operands)
     return hit.reshape(-1)[:m].astype(bool), slot.reshape(-1)[:m]

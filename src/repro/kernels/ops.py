@@ -27,6 +27,7 @@ from repro.kernels.cache_probe import cache_probe_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.gather_blocks import gather_blocks_pallas
 from repro.kernels.paged_attention import paged_attention_pallas
+from repro.kernels.probe_allocate import probe_allocate_pallas
 
 Impl = Literal["auto", "pallas", "ref"]
 
@@ -69,17 +70,52 @@ def paged_attention(q, k_pages, v_pages, page_table, seq_lens, *, scale=None,
                                   scale=scale, interpret=itp)
 
 
-def gather_blocks(data, slots, *, impl: Impl = "auto",
+def gather_blocks(data, slots, *, off=None, impl: Impl = "auto",
                   interpret: bool | None = None):
+    """Paged line gather; with ``off``, an element gather ``data[slots,
+    off]``.  The Pallas path always DMAs whole lines (the TPU moves
+    line-granular anyway) and selects the element after; the ref/XLA path
+    gathers just the elements.
+    """
     if _resolve(impl) == "ref":
-        return _ref.gather_blocks_ref(data, slots)
+        return _ref.gather_blocks_ref(data, slots, off=off)
     itp = (not _on_tpu()) if interpret is None else interpret
-    return gather_blocks_pallas(data, slots, interpret=itp)
+    lines = gather_blocks_pallas(data, slots, interpret=itp)
+    if off is None:
+        return lines
+    return lines[jnp.arange(off.shape[0]), off]
 
 
-def cache_probe(tags, keys, *, block_m=512, impl: Impl = "auto",
-                interpret: bool | None = None):
+def cache_probe(tags, keys, *, owner=None, tenant=0, block_m=512,
+                impl: Impl = "auto", interpret: bool | None = None):
     if _resolve(impl) == "ref":
-        return _ref.cache_probe_ref(tags, keys)
+        return _ref.cache_probe_ref(tags, keys, owner=owner, tenant=tenant)
     itp = (not _on_tpu()) if interpret is None else interpret
-    return cache_probe_pallas(tags, keys, block_m=block_m, interpret=itp)
+    return cache_probe_pallas(tags, keys, owner=owner, tenant=tenant,
+                              block_m=block_m, interpret=itp)
+
+
+def probe_allocate(tags, owner, refcount, dirty, speculative, clock_hand,
+                   keys, *, valid=None, alloc_mask=None, protect_slots=None,
+                   tenant=0, way_lo=0, way_hi=None, spec_insert=False,
+                   protect_hits=True, impl: Impl = "auto",
+                   interpret: bool | None = None):
+    """Fused cache probe + clock-sweep victim select (the BaM submission
+    hot path, one set-local pass).  Returns ``(hit, hit_slot, way, ok,
+    evicted_key, evicted_dirty)`` — see
+    :func:`repro.kernels.ref.probe_allocate_ref` for the exact semantics.
+    """
+    if valid is None:
+        valid = keys >= 0
+    if _resolve(impl) == "ref":
+        return _ref.probe_allocate_ref(
+            tags, owner, refcount, dirty, speculative, clock_hand, keys,
+            valid, alloc_mask, protect_slots, tenant=tenant, way_lo=way_lo,
+            way_hi=way_hi, spec_insert=spec_insert,
+            protect_hits=protect_hits)
+    itp = (not _on_tpu()) if interpret is None else interpret
+    return probe_allocate_pallas(
+        tags, owner, refcount, dirty, speculative, clock_hand, keys, valid,
+        alloc_mask, protect_slots, tenant=tenant, way_lo=way_lo,
+        way_hi=way_hi, spec_insert=spec_insert, protect_hits=protect_hits,
+        interpret=itp)

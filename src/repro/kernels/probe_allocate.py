@@ -1,0 +1,224 @@
+"""Fused cache probe + clock-sweep victim select — Pallas-TPU kernel.
+
+This is the BaM submission hot path (probe → allocate) as *one* set-local
+pass: hash each request to its set, compare the set's tags (hit / miss),
+and — for the misses — pick the victim way in **class-then-clock** order
+(invalid first, speculative second, demand-resident last; clock order
+within each class), honouring pinned lines, the tenant way window, foreign
+dirty lines, pending speculative lines and protected slots.
+
+TPU adaptation, same playbook as ``cache_probe.py``:
+
+* every row gather (tags, owner, refcount, dirty, speculative, clock hand)
+  rides a **one-hot MXU matmul** instead of a random gather; int32 values
+  are exact-gathered by 16-bit halves;
+* the paper's "threads racing on the clock hand" becomes the segmented
+  rank of each miss among same-set misses — computed here as an exclusive
+  **cumsum of the one-hot set matrix** (no sort, no atomic);
+* the victim is selected *without materializing the ``(m, ways)`` stable
+  argsort* the jnp core used: each way's sort key is
+  ``class * ways + clock_pos`` (distinct per row), and the chosen way is
+  the eligible one whose *eligible-order index* — the count of eligible
+  ways with a strictly smaller key, a ``ways``-step unrolled comparison —
+  equals the request's rank.  This selects exactly the way the stable
+  argsort would;
+* protected slots (this wavefront's hits + the caller's explicit list)
+  are scattered into a per-(set, way) count matrix by a second one-hot
+  matmul — a scatter-by-matmul, no ``.at[]``.
+
+Grid: a single step; the wavefront, the directory and the one-hot matrix
+are resident in VMEM (same envelope as ``cache_probe.py`` — BaM
+directories are ≤ a few MB; larger ones shard over a grid axis).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.compat import tpu_compiler_params
+from repro.utils import round_up
+
+
+def _hash(k):
+    k = k.astype(jnp.uint32)
+    k = (k * jnp.uint32(2654435761)) & jnp.uint32(0xFFFFFFFF)
+    k = k ^ (k >> 16)
+    return (k.astype(jnp.int32) & jnp.int32(0x7FFFFFFF))
+
+
+def _pa_kernel(keys_ref, amask_ref, prot_ref, tags_ref, owner_ref,
+               refcount_ref, dirty_ref, spec_ref, hand_ref,
+               hit_ref, hslot_ref, way_ref, ok_ref, evk_ref, evd_ref, *,
+               num_sets: int, ways: int, m: int, tenant: int, way_lo: int,
+               way_hi: int, spec_insert: bool, protect_hits: bool):
+    f32 = jnp.float32
+    keys = keys_ref[0]                                   # (m,)
+    valid = keys >= 0
+    amask = amask_ref[0] != 0
+    sets = _hash(jnp.where(valid, keys, 0)) % num_sets   # (m,)
+
+    onehot = (sets[:, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (m, num_sets), 1)
+              ).astype(f32)                              # (m, S)
+
+    def gather_i32(table):
+        """Exact (m, ways) row gather of an int32 (S, W) table by 16-bit
+        halves through the one-hot matmul."""
+        t_u = table.astype(jnp.uint32)
+        lo = (t_u & jnp.uint32(0xFFFF)).astype(f32)
+        hi = (t_u >> 16).astype(f32)
+        row_lo = jax.lax.dot_general(onehot, lo, (((1,), (0,)), ((), ())),
+                                     preferred_element_type=f32)
+        row_hi = jax.lax.dot_general(onehot, hi, (((1,), (0,)), ((), ())),
+                                     preferred_element_type=f32)
+        rows = (row_hi.astype(jnp.uint32) << 16) | row_lo.astype(jnp.uint32)
+        return rows.astype(jnp.int32)
+
+    def gather_small(table_f32):
+        """Row gather of small non-negative counts/flags (exact in f32)."""
+        return jax.lax.dot_general(onehot, table_f32,
+                                   (((1,), (0,)), ((), ())),
+                                   preferred_element_type=f32)
+
+    tags_rows = gather_i32(tags_ref[...])                # (m, W)
+    owner_rows = gather_i32(owner_ref[...])
+    ref_rows = gather_small(refcount_ref[...].astype(f32))
+    dirty_rows = gather_small(dirty_ref[...].astype(f32)) > 0.5
+    spec_rows = gather_small(spec_ref[...].astype(f32)) > 0.5
+    hand = gather_small(hand_ref[...].astype(f32))[:, 0].astype(jnp.int32)
+
+    # ---- probe ----------------------------------------------------------
+    eq = (tags_rows == keys[:, None]) & valid[:, None] \
+        & (owner_rows == jnp.int32(tenant))
+    hit = eq.any(axis=1)
+    hway = jnp.argmax(eq, axis=1).astype(jnp.int32)
+    hslot = jnp.where(hit, sets * ways + hway, -1).astype(jnp.int32)
+
+    miss = valid & ~hit & amask
+
+    # ---- per-(row, way) eligibility -------------------------------------
+    warange = jax.lax.broadcasted_iota(jnp.int32, (m, ways), 1)
+    elig = ref_rows < 0.5
+    foreign_dirty = (owner_rows != jnp.int32(tenant)) \
+        & (tags_rows >= 0) & dirty_rows
+    elig = elig & ~foreign_dirty
+    if way_lo != 0 or way_hi != ways:
+        elig = elig & (warange >= way_lo) & (warange < way_hi)
+    if spec_insert:
+        elig = elig & ~(spec_rows & (tags_rows >= 0))
+
+    # protected (set, way) pairs: scatter-by-matmul into a count matrix.
+    prot_mat = jnp.zeros((num_sets, ways), f32)
+    if protect_hits:
+        w1 = ((hway[:, None] == warange) & hit[:, None]).astype(f32)
+        prot_mat = prot_mat + jax.lax.dot_general(
+            onehot * hit[:, None].astype(f32), w1,
+            (((0,), (0,)), ((), ())), preferred_element_type=f32)
+    prot = prot_ref[0]                                   # (p,) flat slots
+    pvalid = prot >= 0
+    psets = jnp.where(pvalid, prot // ways, 0)
+    pways = jnp.where(pvalid, prot % ways, 0)
+    p = prot.shape[0]
+    ponehot = ((psets[:, None] ==
+                jax.lax.broadcasted_iota(jnp.int32, (p, num_sets), 1))
+               & pvalid[:, None]).astype(f32)
+    pw1 = (pways[:, None] ==
+           jax.lax.broadcasted_iota(jnp.int32, (p, ways), 1)).astype(f32)
+    prot_mat = prot_mat + jax.lax.dot_general(
+        ponehot, pw1, (((0,), (0,)), ((), ())), preferred_element_type=f32)
+    elig = elig & ~(gather_small(prot_mat) > 0.5)
+
+    # ---- rank among same-set misses: exclusive cumsum, no sort ----------
+    miss_col = onehot * miss[:, None].astype(f32)        # (m, S)
+    csum = jnp.cumsum(miss_col, axis=0) - miss_col       # exclusive prefix
+    rank = jnp.sum(csum * onehot, axis=1).astype(jnp.int32)
+
+    # ---- class-then-clock victim select, argsort-free -------------------
+    clock_pos = (warange - hand[:, None]) % ways
+    vclass = jnp.where(tags_rows < 0, 0,
+                       jnp.where(spec_rows, 1, 2)).astype(jnp.int32)
+    key_w = vclass * ways + clock_pos                    # distinct per row
+    eidx = jnp.zeros((m, ways), jnp.int32)
+    for wp in range(ways):                               # static unroll
+        eidx = eidx + ((key_w[:, wp:wp + 1] < key_w)
+                       & elig[:, wp:wp + 1]).astype(jnp.int32)
+    n_elig = jnp.sum(elig.astype(jnp.int32), axis=1)
+    sel = elig & (eidx == rank[:, None]) & miss[:, None]
+    ok = miss & (n_elig >= rank + 1)
+    way = jnp.argmax(sel, axis=1).astype(jnp.int32)
+    evk = jnp.zeros((m,), jnp.int32)
+    evd = jnp.zeros((m,), bool)
+    for w in range(ways):                                # static unroll
+        pick = way == w
+        evk = jnp.where(pick, tags_rows[:, w], evk)
+        evd = jnp.where(pick, dirty_rows[:, w], evd)
+
+    hit_ref[0] = hit.astype(jnp.int32)
+    hslot_ref[0] = hslot
+    way_ref[0] = jnp.where(ok, way, -1)
+    ok_ref[0] = ok.astype(jnp.int32)
+    evk_ref[0] = jnp.where(ok, evk, -1)
+    evd_ref[0] = (ok & evd).astype(jnp.int32)
+
+
+def probe_allocate_pallas(tags, owner, refcount, dirty, speculative,
+                          clock_hand, keys, valid, alloc_mask=None,
+                          protect_slots=None, *, tenant: int = 0,
+                          way_lo: int = 0, way_hi: int | None = None,
+                          spec_insert: bool = False,
+                          protect_hits: bool = True,
+                          interpret: bool = False):
+    """Fused probe + victim select over a raw cache directory.
+
+    Inputs mirror :class:`repro.core.cache.CacheState` fields; ``keys`` /
+    ``valid`` / ``alloc_mask`` are the wavefront.  Returns ``(hit,
+    hit_slot, way, ok, evicted_key, evicted_dirty)``, bit-identical to
+    :func:`repro.kernels.ref.probe_allocate_ref`.
+    """
+    num_sets, ways = tags.shape
+    way_hi = ways if way_hi is None else way_hi
+    m = keys.shape[0]
+    mp = round_up(m, 128)
+    keys_p = jnp.full((mp,), -1, jnp.int32).at[:m].set(
+        jnp.where(valid, keys, -1).astype(jnp.int32))
+    am = jnp.ones((m,), jnp.int32) if alloc_mask is None \
+        else alloc_mask.astype(jnp.int32)
+    am_p = jnp.zeros((mp,), jnp.int32).at[:m].set(am)
+    prot = jnp.full((1,), -1, jnp.int32) if protect_slots is None \
+        else protect_slots.astype(jnp.int32)
+    pp = round_up(prot.shape[0], 128)
+    prot_p = jnp.full((pp,), -1, jnp.int32).at[:prot.shape[0]].set(prot)
+
+    kernel = functools.partial(
+        _pa_kernel, num_sets=num_sets, ways=ways, m=mp, tenant=tenant,
+        way_lo=way_lo, way_hi=way_hi, spec_insert=spec_insert,
+        protect_hits=protect_hits)
+    out = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, mp), lambda i: (0, 0)),
+            pl.BlockSpec((1, mp), lambda i: (0, 0)),
+            pl.BlockSpec((1, pp), lambda i: (0, 0)),
+            pl.BlockSpec((num_sets, ways), lambda i: (0, 0)),
+            pl.BlockSpec((num_sets, ways), lambda i: (0, 0)),
+            pl.BlockSpec((num_sets, ways), lambda i: (0, 0)),
+            pl.BlockSpec((num_sets, ways), lambda i: (0, 0)),
+            pl.BlockSpec((num_sets, ways), lambda i: (0, 0)),
+            pl.BlockSpec((num_sets, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, mp), lambda i: (0, 0))] * 6,
+        out_shape=[jax.ShapeDtypeStruct((1, mp), jnp.int32)] * 6,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(keys_p.reshape(1, mp), am_p.reshape(1, mp), prot_p.reshape(1, pp),
+      tags, owner, refcount.astype(jnp.int32),
+      dirty.astype(jnp.int32), speculative.astype(jnp.int32),
+      clock_hand.reshape(num_sets, 1))
+    hit, hslot, way, ok, evk, evd = [o.reshape(-1)[:m] for o in out]
+    return (hit.astype(bool), hslot, way, ok.astype(bool), evk,
+            evd.astype(bool))

@@ -217,22 +217,128 @@ def paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens, *,
     return out.astype(q.dtype)
 
 
-def gather_blocks_ref(data, slots):
-    """data: (num_lines, line_elems); slots: (n,) -> (n, line_elems)."""
+def gather_blocks_ref(data, slots, off=None):
+    """data: (num_lines, line_elems); slots: (n,) -> (n, line_elems).
+
+    With ``off`` (per-request in-line element offsets), gather single
+    elements — ``(n,)`` of ``data[slots, off]`` — instead of whole lines:
+    the XLA path moves one element per lane, not a full line per lane.
+    """
     safe = jnp.maximum(slots, 0)
+    if off is not None:
+        return jnp.where(slots >= 0, data[safe, off], 0)
     out = data[safe]
     return jnp.where((slots >= 0)[:, None], out, 0)
 
 
-def cache_probe_ref(tags, keys):
-    """Mirror of repro.core.cache.probe on a raw tag directory."""
+def cache_probe_ref(tags, keys, owner=None, tenant=0):
+    """Mirror of repro.core.cache.probe on a raw tag directory.
+
+    With ``owner`` (the per-line tenant stamp), a line only hits when its
+    owner matches ``tenant`` — the multi-tenant tag namespacing.  Negative
+    keys never hit.
+    """
     from repro.utils import mix_hash
     num_sets, ways = tags.shape
     valid = keys >= 0
     sets = mix_hash(jnp.where(valid, keys, 0)) % num_sets
     rows = tags[sets]                                          # (m, ways)
     eq = (rows == keys[:, None]) & valid[:, None]
+    if owner is not None:
+        eq = eq & (owner[sets] == jnp.int32(tenant))
     hit = eq.any(axis=1)
     way = jnp.argmax(eq, axis=1).astype(jnp.int32)
     slot = jnp.where(hit, sets * ways + way, -1).astype(jnp.int32)
     return hit, slot
+
+
+def probe_allocate_ref(tags, owner, refcount, dirty, speculative, clock_hand,
+                       keys, valid, alloc_mask=None, protect_slots=None, *,
+                       tenant=0, way_lo=0, way_hi=None, spec_insert=False,
+                       protect_hits=True):
+    """Fused probe + clock-sweep victim select, pure jnp — the oracle for
+    ``probe_allocate_pallas`` and the CPU/XLA hot path.
+
+    One set-local pass per request: hash → tag+owner probe → (for misses)
+    pick the request's victim way in *class-then-clock* order.  The victim
+    class is 0 = invalid, 1 = speculative (prefetched, unpromoted),
+    2 = demand-resident; within a class, ways are taken in clock order
+    starting at the set's hand.  Unlike ``repro.core.cache.allocate`` no
+    ``(m, ways)`` stable argsort is materialized: the selected way is the
+    one whose *eligible-order index* — the count of eligible ways with a
+    strictly smaller ``class*ways + clock_pos`` sort key (keys are distinct
+    per row) — equals the request's same-set rank.  That count is a handful
+    of ``(m, ways)`` comparisons, and it selects exactly the way the stable
+    argsort would.
+
+    Eligibility honours everything the inline path honours: pinned lines
+    (``refcount > 0``), foreign dirty lines (another tenant's write-back),
+    the ``[way_lo, way_hi)`` tenant way window, pending speculative lines
+    when ``spec_insert`` (a prefetch never cannibalizes an unconsumed
+    prediction), this wavefront's own probe hits (``protect_hits``) and the
+    caller's extra ``protect_slots``.
+
+    Returns ``(hit, hit_slot, way, ok, evicted_key, evicted_dirty)``; all
+    allocation outputs are masked (-1 / False) on rows with ``ok=False``.
+    """
+    from repro.utils import mix_hash, segment_rank
+    num_sets, ways = tags.shape
+    way_hi = ways if way_hi is None else way_hi
+    m = keys.shape[0]
+    sets = mix_hash(jnp.where(valid, keys, 0)) % num_sets
+
+    # ---- probe -----------------------------------------------------------
+    rows_tag = tags[sets]                                      # (m, ways)
+    rows_owner = owner[sets]
+    eq = (rows_tag == keys[:, None]) & valid[:, None] \
+        & (rows_owner == jnp.int32(tenant))
+    hit = eq.any(axis=1)
+    hway = jnp.argmax(eq, axis=1).astype(jnp.int32)
+    hslot = jnp.where(hit, sets * ways + hway, -1).astype(jnp.int32)
+
+    # ---- allocation candidates ------------------------------------------
+    miss = valid & ~hit
+    if alloc_mask is not None:
+        miss = miss & alloc_mask
+
+    # ---- per-(row, way) eviction eligibility ----------------------------
+    rows_ref = refcount[sets]
+    rows_dirty = dirty[sets]
+    rows_spec = speculative[sets]
+    elig = rows_ref == 0
+    foreign_dirty = (rows_owner != jnp.int32(tenant)) \
+        & (rows_tag >= 0) & rows_dirty
+    elig = elig & ~foreign_dirty
+    warange = jnp.arange(ways, dtype=jnp.int32)
+    if way_lo != 0 or way_hi != ways:
+        elig = elig & ((warange >= way_lo) & (warange < way_hi))[None, :]
+    if spec_insert:
+        elig = elig & ~(rows_spec & (rows_tag >= 0))
+    overlay = jnp.zeros((num_sets * ways,), bool)
+    if protect_hits:
+        hs = jnp.where(hit, hslot, num_sets * ways)
+        overlay = overlay.at[hs].set(True, mode="drop")
+    if protect_slots is not None:
+        ps = jnp.where(protect_slots >= 0, protect_slots, num_sets * ways)
+        overlay = overlay.at[ps].set(True, mode="drop")
+    elig = elig & ~overlay.reshape(num_sets, ways)[sets]
+
+    # ---- class-then-clock victim select, argsort-free -------------------
+    rank = segment_rank(sets, miss)                            # (m,)
+    hand = clock_hand[sets]                                    # (m,)
+    clock_pos = (warange[None, :] - hand[:, None]) % ways      # (m, ways)
+    vclass = jnp.where(rows_tag < 0, 0,
+                       jnp.where(rows_spec, 1, 2)).astype(jnp.int32)
+    key_w = vclass * ways + clock_pos                          # distinct/row
+    smaller = key_w[:, None, :] < key_w[:, :, None]            # [i, w, w']
+    eidx = jnp.sum(smaller & elig[:, None, :], axis=2)         # (m, ways)
+    n_elig = jnp.sum(elig, axis=1)
+    sel = elig & (eidx == rank[:, None]) & miss[:, None]
+    ok = miss & (n_elig >= rank + 1)
+    way = jnp.argmax(sel, axis=1).astype(jnp.int32)
+    safe_way = jnp.where(ok, way, 0)
+    rows_i = jnp.arange(m)
+    evicted_key = jnp.where(ok, rows_tag[rows_i, safe_way], -1)
+    evicted_dirty = jnp.where(ok, rows_dirty[rows_i, safe_way], False)
+    return (hit, hslot, jnp.where(ok, way, -1), ok,
+            evicted_key.astype(jnp.int32), evicted_dirty)

@@ -81,6 +81,23 @@ def test_gather_blocks_sweep(n, lines, elems, dtype):
     np.testing.assert_array_equal(np.asarray(o_pal), np.asarray(o_ref))
 
 
+@pytest.mark.parametrize("n,lines,elems", [(7, 16, 32), (64, 8, 128)])
+def test_gather_blocks_element_mode(n, lines, elems):
+    """`off=` gathers single elements; pallas(line-DMA + select) == ref."""
+    rng = np.random.default_rng(6)
+    data = _mk(rng, (lines, elems), jnp.float32)
+    slots = jnp.asarray(rng.integers(-1, lines, n), jnp.int32)
+    off = jnp.asarray(rng.integers(0, elems, n), jnp.int32)
+    o_pal = ops.gather_blocks(data, slots, off=off, impl="pallas",
+                              interpret=True)
+    o_ref = ops.gather_blocks(data, slots, off=off, impl="ref")
+    expect = np.where(np.asarray(slots) >= 0,
+                      np.asarray(data)[np.maximum(np.asarray(slots), 0),
+                                       np.asarray(off)], 0)
+    np.testing.assert_array_equal(np.asarray(o_pal), expect)
+    np.testing.assert_array_equal(np.asarray(o_ref), expect)
+
+
 @pytest.mark.parametrize("sets,ways,m", [(16, 4, 33), (64, 8, 256),
                                          (4, 1, 7)])
 def test_cache_probe_sweep(sets, ways, m):

@@ -1,0 +1,89 @@
+"""Retrace-regression tests for the jit-cached op family.
+
+Every jit-cached op carries a trace-count probe: the Python body of the
+cached callable runs only while JAX *traces* it (a jit cache miss), so
+``trace_counts`` counts compilations, not calls.  Steady-state streams at
+fixed shapes — the hot path — must trace each op exactly once; a change
+that sneaks a fresh ``jax.jit`` wrapper (or a shape-dependent Python
+branch) into the loop fails here, not in a benchmark six PRs later.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BamArray, BamRuntime, IORequest, TenantSpec
+
+
+def _build(n_blocks=64, block_elems=8):
+    rng = np.random.default_rng(0)
+    data = rng.standard_normal((n_blocks, block_elems)).astype(np.float32)
+    return BamArray.build(data, block_elems=block_elems, num_sets=8, ways=4)
+
+
+def test_steady_state_read_write_never_retraces():
+    arr, st = _build()
+    read, write = arr.read_jit(), arr.write_jit()
+    idx = jnp.asarray(np.arange(16) * 3 % arr.size, jnp.int32)
+    vals = jnp.arange(16, dtype=jnp.float32)
+    for _ in range(5):
+        _, st = read(st, idx)
+        st = write(st, idx, vals)
+    assert arr.trace_counts == {"read": 1, "write": 1}
+
+
+def test_steady_state_submit_wait_never_retraces():
+    arr, st = _build()
+    submit, wait = arr.submit_jit(), arr.wait_jit()
+    idx = jnp.asarray(np.arange(16) * 5 % arr.size, jnp.int32)
+    for _ in range(4):
+        # a 2-deep submission window, every round
+        st, t1 = submit(st, IORequest.read(idx))
+        st, t2 = submit(st, IORequest.read(idx + 1))
+        st, _ = wait(st, t1)
+        st, _ = wait(st, t2)
+    assert arr.trace_counts["submit"] == 1
+    assert arr.trace_counts["wait"] == 1
+
+
+def test_new_shape_traces_exactly_once_more():
+    arr, st = _build()
+    read = arr.read_jit()
+    a = jnp.asarray(np.arange(16), jnp.int32)
+    b = jnp.asarray(np.arange(32), jnp.int32)
+    _, st = read(st, a)
+    _, st = read(st, a)
+    assert arr.trace_counts["read"] == 1
+    _, st = read(st, b)         # new shape: one more trace, no more
+    _, st = read(st, b)
+    _, st = read(st, a)         # old shape still cached
+    assert arr.trace_counts["read"] == 2
+
+
+def test_jit_family_is_cached_per_instance():
+    arr, _ = _build()
+    assert arr.read_jit() is arr.read_jit()
+    assert arr.submit_jit() is arr.submit_jit()
+    # a config variant gets a fresh cache (the old callables close over
+    # the old instance's static config)
+    from repro.core import PrefetchConfig
+    arr2 = arr.with_prefetch(PrefetchConfig(enabled=True, window=4))
+    assert arr2.read_jit() is not arr.read_jit()
+    assert arr2.trace_counts == {}
+
+
+def test_runtime_ops_never_retrace_steady_state():
+    rng = np.random.default_rng(1)
+    specs = [
+        TenantSpec(name="a",
+                   data=rng.standard_normal((32, 8)).astype(np.float32),
+                   block_elems=8),
+        TenantSpec(name="b",
+                   data=rng.standard_normal((32, 8)).astype(np.float32),
+                   block_elems=8),
+    ]
+    rt, rst = BamRuntime.build(specs, num_sets=8, ways=4)
+    idx = jnp.asarray(np.arange(12), jnp.int32)
+    for _ in range(4):
+        _, rst = rt.read_jit("a")(rst, idx)
+        rst, tok = rt.submit_jit("b")(rst, IORequest.read(idx))
+        rst, _ = rt.wait_jit("b")(rst, tok)
+    assert rt.trace_counts == {"read:a": 1, "submit:b": 1, "wait:b": 1}
