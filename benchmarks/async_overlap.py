@@ -63,7 +63,7 @@ def _wave_idx(w: int) -> jnp.ndarray:
 
 def _run_sync() -> dict:
     arr, st = _build()
-    read = jax.jit(arr.read)
+    read = arr.read_jit()
     checksum = 0.0
     for w in range(WAVES):
         v, st = read(st, _wave_idx(w))
@@ -75,14 +75,14 @@ def _run_sync() -> dict:
 
 def _run_async(window: int) -> dict:
     arr, st = _build()
-    submit = jax.jit(lambda s, i: arr.submit(s, IORequest.read(i)))
-    wait = jax.jit(arr.wait)
+    submit = arr.submit_jit()
+    wait = arr.wait_jit()
     checksum = 0.0
     for base in range(0, WAVES, window):
         chunk = range(base, min(base + window, WAVES))
         toks = []
         for w in chunk:                       # fill the submission window
-            st, tok = submit(st, _wave_idx(w))
+            st, tok = submit(st, IORequest.read(_wave_idx(w)))
             toks.append(tok)
         for tok in toks:                      # drain it FIFO
             st, v = wait(st, tok)

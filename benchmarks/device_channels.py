@@ -67,7 +67,7 @@ def _run_stream(data, n_devices: int, stripe_blocks: int, waves) -> dict:
         num_queues=8 * max(n_devices, 1), queue_depth=1024,
         ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, n_devices,
                         stripe_blocks=stripe_blocks))
-    read = jax.jit(arr.read)
+    read = arr.read_jit()
     for wave in waves:
         _, st = read(st, jnp.asarray(wave * BLOCK_ELEMS, jnp.int32))
     return st.metrics.summary()

@@ -81,14 +81,15 @@ def _warm_cache(m: int):
 
 def _stage_times(m: int) -> dict:
     cache, keys = _warm_cache(m)
-    probe = jax.jit(lambda c, k: C.probe(c, k))
-    fused = jax.jit(lambda c, k: C.probe_allocate(c, k))
+    # the benchmark deliberately times freshly-built wrappers
+    probe = jax.jit(lambda c, k: C.probe(c, k))  # bamlint: ignore[BAM105]
+    fused = jax.jit(lambda c, k: C.probe_allocate(c, k))  # bamlint: ignore[BAM105]
 
     def _two_step(c, k):
         pr = C.probe(c, k)
         return C.allocate(c, k, (k >= 0) & ~pr.hit, protect_slots=pr.slot)
 
-    argsort = jax.jit(_two_step)
+    argsort = jax.jit(_two_step)  # bamlint: ignore[BAM105]
     return {
         "probe_us": time_us(probe, cache, keys),
         "alloc_fused_us": time_us(fused, cache, keys),

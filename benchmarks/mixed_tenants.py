@@ -170,7 +170,7 @@ def _run_config(isolation, *, with_neighbours, seed=0):
         vals, found, st = kv.lookup(st, table, keys)
         return vals, found, rt.absorb(rst, "kv", st)
 
-    kv_round = jax.jit(kv_round)
+    kv_round = jax.jit(kv_round)  # bamlint: ignore[BAM105] -- once per sweep
     batches = _kv_batches(np.random.default_rng(seed + 1000), ROUNDS)
 
     if with_neighbours:

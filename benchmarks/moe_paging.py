@@ -24,7 +24,7 @@ def run():
     arr, st = BamArray.build(weights.reshape(-1, chunk), block_elems=chunk,
                              num_sets=64, ways=4)
 
-    @jax.jit
+    @jax.jit  # bamlint: ignore[BAM105] -- built once per benchmark run
     def fetch_experts(st, expert_ids, valid):
         # all blocks of each selected expert
         base = expert_ids[:, None] * blocks_per_expert \

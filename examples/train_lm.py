@@ -53,7 +53,7 @@ def main():
                     DataConfig(seq_len=args.seq, global_batch=args.batch))
 
     acfg = opt.AdamWConfig(lr=3e-3, warmup=20, total_steps=args.steps)
-    step_fn = jax.jit(make_train_step(cfg, api, adamw=acfg),
+    step_fn = jax.jit(make_train_step(cfg, api, adamw=acfg),  # bamlint: ignore[BAM105]
                       donate_argnums=(0,))
 
     def init_state():

@@ -95,7 +95,7 @@ def run_query(tbl: TaxiTable, query: str) -> Tuple[dict, dict]:
           "amplification": 0.0, "hit_rate": 0.0}
     for name in dep:
         arr, st = tbl.cols[name], tbl.states[name]
-        v, st2 = jax.jit(arr.read)(st, rows, match)
+        v, st2 = arr.read_jit()(st, rows, match)
         tbl.states[name] = st2
         vals[name] = v
         s = st2.metrics.summary()
@@ -141,12 +141,12 @@ def scan_column(tbl: TaxiTable, name: str, *, wavefront: int = 1024,
     arr, st = tbl.cols[name], tbl.states[name]
     total = 0.0
     if window > 0:
-        submit = jax.jit(lambda s, i: arr.submit(s, IORequest.read(i)))
-        wait = jax.jit(arr.wait)
+        submit = arr.submit_jit()
+        wait = arr.wait_jit()
         pending: List = []
         for start in range(0, tbl.n_rows, wavefront):
             idx = jnp.arange(start, start + wavefront, dtype=jnp.int32)
-            st, tok = submit(st, idx)
+            st, tok = submit(st, IORequest.read(idx))
             pending.append(tok)
             if len(pending) >= window:
                 st, v = wait(st, pending.pop(0))
@@ -156,7 +156,7 @@ def scan_column(tbl: TaxiTable, name: str, *, wavefront: int = 1024,
             total += float(v.sum())
         tbl.states[name] = st
         return total, st.metrics.summary()
-    read = jax.jit(arr.read)
+    read = arr.read_jit()
     for start in range(0, tbl.n_rows, wavefront):
         idx = jnp.arange(start, start + wavefront, dtype=jnp.int32)
         v, st = read(st, idx)

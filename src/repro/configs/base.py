@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Any, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

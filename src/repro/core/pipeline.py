@@ -73,12 +73,14 @@ def software_pipeline(
 
         # Legacy adapter: "submit" performs the read eagerly (keeping the
         # old fetch-ahead-of-compute schedule); the token is the wavefront.
-        def submit_fn(rs, idx):
+        def _eager_submit(rs, idx):
             vals, rs = sync_read(rs, idx)
             return rs, vals
 
-        def wait_fn(rs, tok):
+        def _eager_wait(rs, tok):
             return rs, tok
+
+        submit_fn, wait_fn = _eager_submit, _eager_wait
     assert wait_fn is not None
 
     T = idx_seq.shape[0]

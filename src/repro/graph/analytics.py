@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import BamArray, BamState, IORequest
+from repro.core.bam_array import _cached_jit
 from repro.core.ssd import ArrayOfSSDs, INTEL_OPTANE_P5800X
 
 
@@ -53,6 +54,23 @@ class BamGraph:
     edge_src: jax.Array        # (E,) source node per edge (derived metadata)
     edges: BamArray            # edge targets, storage-resident
     state: BamState
+    # Per-graph jit cache for the traversal steps (BamArray's
+    # ``_cached_jit`` pattern): one wrapper per (graph, op) for the
+    # process lifetime, so repeated bfs()/cc() calls never rebuild or
+    # retrace their jitted step functions.
+    _jit_cache: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+    _trace_counts: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+
+    def _jit_op(self, key: str, make):
+        return _cached_jit(self._jit_cache, self._trace_counts, key, make)
+
+    @property
+    def trace_counts(self) -> dict:
+        """Times each traversal op has been traced (not called) — the
+        retrace probe, mirroring :attr:`BamArray.trace_counts`."""
+        return dict(self._trace_counts)
 
     @staticmethod
     def build(indptr: np.ndarray, dst: np.ndarray, *,
@@ -109,6 +127,110 @@ class BamGraph:
             edges=arr, state=rt.tenant_view(rst, name))
 
 
+# ------------------------------------------------- jit-cached step bodies --
+_INF = jnp.int32(2 ** 30)
+
+
+def _edge_ids(g: BamGraph) -> jax.Array:
+    return jnp.arange(g.n_edges, dtype=jnp.int32)
+
+
+def _frontier_req(g: BamGraph, edge_ids, depth, it) -> IORequest:
+    """Read request for exactly the frontier-at-``it``'s edges."""
+    active = (depth == it)[g.edge_src]
+    return IORequest.read(jnp.where(active, edge_ids, -1), active)
+
+
+def _make_bfs_submit0(g: BamGraph):
+    edge_ids = _edge_ids(g)
+
+    def submit0(depth, st):
+        return g.edges.submit(st, _frontier_req(g, edge_ids, depth, 0))
+
+    return submit0
+
+
+def _make_bfs_step_tok(g: BamGraph):
+    edge_ids = _edge_ids(g)
+
+    def step(depth, st, tok, it):
+        st, nbrs = g.edges.wait(st, tok)       # values for frontier @ it
+        active = (depth == it)[g.edge_src]
+        nbrs = jnp.where(active, nbrs.astype(jnp.int32), 0)
+        first_visit = active & (depth[nbrs] >= _INF)
+        depth = depth.at[jnp.where(first_visit, nbrs, 0)].min(
+            jnp.where(first_visit, it + 1, _INF))
+        # frontier-ahead: issue t+1's read before t's caller even looks
+        st, tok = g.edges.submit(
+            st, _frontier_req(g, edge_ids, depth, it + 1))
+        return depth, st, tok, jnp.any(first_visit)
+
+    return step
+
+
+def _make_bfs_step(g: BamGraph, prefetch: bool):
+    edge_ids = _edge_ids(g)
+
+    def step(depth, st, it):
+        frontier = depth == it                 # (N,)
+        active = frontier[g.edge_src]          # (E,) edges to expand
+        req = jnp.where(active, edge_ids, -1)
+        nbrs, st = g.edges.read(st, req, active)   # on-demand fine-grain
+        nbrs = jnp.where(active, nbrs.astype(jnp.int32), 0)
+        first_visit = active & (depth[nbrs] >= _INF)
+        depth = depth.at[jnp.where(first_visit, nbrs, 0)].min(
+            jnp.where(first_visit, it + 1, _INF))
+        if prefetch:                           # frontier-ahead hint
+            nxt = depth == it + 1
+            active_n = nxt[g.edge_src]
+            st = g.edges.prefetch(st, jnp.where(active_n, edge_ids, -1),
+                                  active_n)
+        return depth, st, jnp.any(first_visit)
+
+    return step
+
+
+def _make_cc_submit0(g: BamGraph):
+    edge_ids = _edge_ids(g)
+
+    def submit0(st):
+        return g.edges.submit(st, IORequest.read(edge_ids))
+
+    return submit0
+
+
+def _make_cc_step_tok(g: BamGraph):
+    edge_ids = _edge_ids(g)
+
+    def step(labels, st, tok):
+        st, nbrs = g.edges.wait(st, tok)
+        nbrs = nbrs.astype(jnp.int32)
+        lsrc = labels[g.edge_src]
+        new = labels.at[nbrs].min(lsrc)
+        new = new.at[g.edge_src].min(new[nbrs])
+        st, tok = g.edges.submit(st, IORequest.read(edge_ids))
+        return new, st, tok, jnp.any(new != labels)
+
+    return step
+
+
+def _make_cc_step(g: BamGraph):
+    edge_ids = _edge_ids(g)
+
+    def step(labels, st):
+        # only edges whose source label changed since convergence matters;
+        # paper's CC touches all edges every round (bursty) — match that.
+        nbrs, st = g.edges.read(st, edge_ids)
+        nbrs = nbrs.astype(jnp.int32)
+        lsrc = labels[g.edge_src]
+        # push min label across each edge
+        new = labels.at[nbrs].min(lsrc)
+        new = new.at[g.edge_src].min(new[nbrs])
+        return new, st, jnp.any(new != labels)
+
+    return step
+
+
 # --------------------------------------------------------------------- BFS --
 def bfs(g: BamGraph, source: int, max_iters: Optional[int] = None,
         prefetch: bool = False, async_tokens: bool = False
@@ -135,30 +257,11 @@ def bfs(g: BamGraph, source: int, max_iters: Optional[int] = None,
     max_iters = max_iters or g.n_nodes
     INF = jnp.int32(2 ** 30)
     depth = jnp.full((g.n_nodes,), INF, jnp.int32).at[source].set(0)
-    edge_ids = jnp.arange(g.n_edges, dtype=jnp.int32)
     st = g.state
 
     if async_tokens:
-        def frontier_req(depth, it):
-            active = (depth == it)[g.edge_src]     # (E,) edges to expand
-            return IORequest.read(jnp.where(active, edge_ids, -1), active)
-
-        @jax.jit
-        def submit0(depth, st):
-            return g.edges.submit(st, frontier_req(depth, 0))
-
-        @jax.jit
-        def step(depth, st, tok, it):
-            st, nbrs = g.edges.wait(st, tok)       # values for frontier @ it
-            active = (depth == it)[g.edge_src]
-            nbrs = jnp.where(active, nbrs.astype(jnp.int32), 0)
-            first_visit = active & (depth[nbrs] >= INF)
-            depth = depth.at[jnp.where(first_visit, nbrs, 0)].min(
-                jnp.where(first_visit, it + 1, INF))
-            # frontier-ahead: issue t+1's read before t's caller even looks
-            st, tok = g.edges.submit(st, frontier_req(depth, it + 1))
-            return depth, st, tok, jnp.any(first_visit)
-
+        submit0 = g._jit_op("bfs_submit0", lambda: _make_bfs_submit0(g))
+        step = g._jit_op("bfs_step_tok", lambda: _make_bfs_step_tok(g))
         st, tok = submit0(depth, st)
         for it in range(max_iters):
             depth, st, tok, more = step(depth, st, tok, it)
@@ -168,23 +271,8 @@ def bfs(g: BamGraph, source: int, max_iters: Optional[int] = None,
         depth = jnp.where(depth >= INF, -1, depth)
         return np.asarray(depth), st
 
-    @jax.jit
-    def step(depth, st, it):
-        frontier = depth == it                     # (N,)
-        active = frontier[g.edge_src]              # (E,) edges to expand
-        req = jnp.where(active, edge_ids, -1)
-        nbrs, st = g.edges.read(st, req, active)   # on-demand fine-grain
-        nbrs = jnp.where(active, nbrs.astype(jnp.int32), 0)
-        first_visit = active & (depth[nbrs] >= INF)
-        depth = depth.at[jnp.where(first_visit, nbrs, 0)].min(
-            jnp.where(first_visit, it + 1, INF))
-        if prefetch:                               # frontier-ahead hint
-            nxt = depth == it + 1
-            active_n = nxt[g.edge_src]
-            st = g.edges.prefetch(st, jnp.where(active_n, edge_ids, -1),
-                                  active_n)
-        return depth, st, jnp.any(first_visit)
-
+    step = g._jit_op(f"bfs_step:pf{int(prefetch)}",
+                     lambda: _make_bfs_step(g, prefetch))
     for it in range(max_iters):
         depth, st, more = step(depth, st, it)
         if not bool(more):
@@ -240,20 +328,8 @@ def cc(g: BamGraph, max_iters: Optional[int] = None,
         st = g.edges.prefetch(st, edge_ids)
 
     if async_tokens:
-        @jax.jit
-        def submit0(st):
-            return g.edges.submit(st, IORequest.read(edge_ids))
-
-        @jax.jit
-        def step_tok(labels, st, tok):
-            st, nbrs = g.edges.wait(st, tok)
-            nbrs = nbrs.astype(jnp.int32)
-            lsrc = labels[g.edge_src]
-            new = labels.at[nbrs].min(lsrc)
-            new = new.at[g.edge_src].min(new[nbrs])
-            st, tok = g.edges.submit(st, IORequest.read(edge_ids))
-            return new, st, tok, jnp.any(new != labels)
-
+        submit0 = g._jit_op("cc_submit0", lambda: _make_cc_submit0(g))
+        step_tok = g._jit_op("cc_step_tok", lambda: _make_cc_step_tok(g))
         st, tok = submit0(st)
         for _ in range(max_iters):
             labels, st, tok, more = step_tok(labels, st, tok)
@@ -262,18 +338,7 @@ def cc(g: BamGraph, max_iters: Optional[int] = None,
         st, _ = g.edges.wait(st, tok)              # retire the last token
         return np.asarray(labels), st
 
-    @jax.jit
-    def step(labels, st):
-        # only edges whose source label changed since convergence matters;
-        # paper's CC touches all edges every round (bursty) — match that.
-        nbrs, st = g.edges.read(st, edge_ids)
-        nbrs = nbrs.astype(jnp.int32)
-        lsrc = labels[g.edge_src]
-        # push min label across each edge
-        new = labels.at[nbrs].min(lsrc)
-        new = new.at[g.edge_src].min(new[nbrs])
-        return new, st, jnp.any(new != labels)
-
+    step = g._jit_op("cc_step", lambda: _make_cc_step(g))
     for _ in range(max_iters):
         labels, st, more = step(labels, st)
         if not bool(more):

@@ -146,8 +146,8 @@ def _fa_vjp_bwd(causal, scale, bq, bkv, kv_len, res, dout):
             kv_step, (dq0, dk_all, dv_all), jnp.arange(nkv))
         return (dk_all, dv_all), dqi
 
-    dk0 = jnp.zeros((nkv, B, Hkv, bkv, D))
-    dv0 = jnp.zeros((nkv, B, Hkv, bkv, D))
+    dk0 = jnp.zeros((nkv, B, Hkv, bkv, D), jnp.float32)
+    dv0 = jnp.zeros((nkv, B, Hkv, bkv, D), jnp.float32)
     (dk_all, dv_all), dqs = jax.lax.scan(
         one_q, (dk0, dv0), (qs, dos, ls, ds, jnp.arange(nq)))
     dq = dqs.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hkv, G, Sq, D)

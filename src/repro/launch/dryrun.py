@@ -145,7 +145,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, rules=None,
         fn, args, in_sh, out_sh, donate = build_cell(
             cfg, cell, mesh, rules, pod_compression=pod_compression,
             microbatches=microbatches)
-        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+        # one-shot lowering probe: jitted once per dryrun invocation
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,  # bamlint: ignore[BAM105]
                          donate_argnums=donate)
         lowered = jitted.lower(*args)
         t_lower = time.time() - t0

@@ -12,7 +12,7 @@ the terms divide by per-chip peaks, not by chip count.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
 HBM_BW = 819e9             # bytes/s per chip

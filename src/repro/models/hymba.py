@@ -15,7 +15,6 @@ Uniform layers -> scan-over-layers with a scanned per-layer window array.
 from __future__ import annotations
 
 import math
-from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

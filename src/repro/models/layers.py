@@ -13,7 +13,7 @@ Conventions:
 from __future__ import annotations
 
 import math
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

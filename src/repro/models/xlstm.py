@@ -16,7 +16,6 @@ heterogeneous, so the layer loop is unrolled (params are per-layer tuples).
 from __future__ import annotations
 
 import math
-from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ decides which pages move, the host is just the storage service.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,7 @@ k_or_v)`` flattened.  I/O accounting reuses ``IOMetrics``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,7 @@ re-injected next step instead of lost; unbiased over time).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

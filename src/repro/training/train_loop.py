@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

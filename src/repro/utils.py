@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, TypeVar
+from typing import Any, TypeVar
 
 import jax
 import jax.numpy as jnp

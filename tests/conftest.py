@@ -1,7 +1,19 @@
 # NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
 # single real CPU device; only launch/dryrun.py (its own process) forces 512.
+import os
+
 import numpy as np
 import pytest
+
+# On single-core machines XLA's async CPU dispatch can deadlock (the client
+# thread pool is sized by core count, and a dependent dispatch waits on a
+# worker that never frees up) — observed as a hard futex hang on the second
+# execution of a compiled op.  Synchronous dispatch sidesteps it and costs
+# nothing when there is no parallelism to lose.
+if os.cpu_count() == 1:
+    import jax
+
+    jax.config.update("jax_cpu_enable_async_dispatch", False)
 
 # Reproducible property tests: when hypothesis is installed, register and
 # load a derandomized profile (examples derived from each test's source, no

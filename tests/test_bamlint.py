@@ -1,0 +1,113 @@
+"""Self-tests for the bamlint static-analysis suite.
+
+The fixture corpus under ``tools/bamlint/fixtures`` is the contract:
+every ``bad/`` file declares the single rule it must trigger in a
+``# bamlint-fixture: expect BAMxxx`` header, every ``good/`` file must
+come back clean, and the ``suppressed/`` file must flip between clean
+and dirty with ``respect_suppressions``.  Deleting any single check
+from a pass makes the matching bad-fixture test fail — that is the
+point: the linter's own coverage is enforced by the repo's tier-1
+suite, the same gate bamlint itself runs under in CI.
+"""
+import json
+import pathlib
+import sys
+
+import pytest
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools.bamlint import ALL_RULES  # noqa: E402
+from tools.bamlint.core import (  # noqa: E402
+    check_file,
+    load_baseline,
+    run,
+    write_baseline,
+)
+
+FIXTURES = REPO_ROOT / "tools" / "bamlint" / "fixtures"
+BAD = sorted((FIXTURES / "bad").rglob("bam*.py"))
+GOOD = sorted((FIXTURES / "good").rglob("*.py"))
+SUPPRESSED = FIXTURES / "suppressed" / "suppressed_ok.py"
+
+
+def _expected_rule(path: pathlib.Path) -> str:
+    header = path.read_text().splitlines()[0]
+    assert "bamlint-fixture: expect" in header, f"{path} missing expect header"
+    return header.split("expect")[-1].strip()
+
+
+@pytest.mark.parametrize("path", BAD, ids=lambda p: p.stem)
+def test_bad_fixture_triggers_exactly_its_rule(path):
+    expected = _expected_rule(path)
+    findings = check_file(path, REPO_ROOT)
+    assert findings, f"{path.name} produced no findings (expected {expected})"
+    assert {f.rule for f in findings} == {expected}, [
+        (f.rule, f.line) for f in findings
+    ]
+
+
+@pytest.mark.parametrize("path", GOOD, ids=lambda p: p.stem)
+def test_good_fixture_is_clean(path):
+    findings = check_file(path, REPO_ROOT)
+    assert findings == [], [(f.rule, f.line, f.message) for f in findings]
+
+
+def test_fixture_corpus_covers_every_rule():
+    covered = {_expected_rule(p) for p in BAD}
+    assert covered == set(ALL_RULES), (
+        f"rules without a bad fixture: {sorted(set(ALL_RULES) - covered)}; "
+        f"fixtures for unknown rules: {sorted(covered - set(ALL_RULES))}"
+    )
+
+
+def test_suppression_honored_and_bypassable():
+    assert check_file(SUPPRESSED, REPO_ROOT) == []
+    raw = check_file(SUPPRESSED, REPO_ROOT, respect_suppressions=False)
+    assert {f.rule for f in raw} == {"BAM105"}
+
+
+def test_baseline_round_trip(tmp_path):
+    bad = FIXTURES / "bad" / "bam105.py"
+    findings = check_file(bad, REPO_ROOT)
+    assert findings
+    baseline_path = tmp_path / "baseline.json"
+    write_baseline(baseline_path, findings)
+
+    loaded = load_baseline(baseline_path)
+    assert len(loaded) == len(findings)
+
+    # With the baseline applied the known finding is grandfathered…
+    new, old, errors = run([str(bad)], REPO_ROOT, baseline_path)
+    assert errors == []
+    assert new == []
+    assert len(old) == len(findings)
+    # …and without it the same finding is new again.
+    new2, old2, _ = run([str(bad)], REPO_ROOT, baseline_path=None)
+    assert len(new2) == len(findings)
+    assert old2 == []
+
+
+def test_committed_baseline_is_well_formed():
+    path = REPO_ROOT / "tools" / "bamlint" / "baseline.json"
+    data = json.loads(path.read_text())
+    assert data["version"] == 1
+    assert isinstance(data["findings"], list)
+
+
+def test_repo_is_clean_under_committed_baseline():
+    baseline = REPO_ROOT / "tools" / "bamlint" / "baseline.json"
+    new, _old, errors = run(
+        ["src", "benchmarks", "examples"], REPO_ROOT, baseline)
+    assert errors == []
+    assert new == [], [f.render() for f in new]
+
+
+def test_fixtures_are_excluded_from_normal_collection():
+    # ``run`` over the tools tree must not lint the fixture corpus itself.
+    new, _old, errors = run(["tools"], REPO_ROOT, baseline_path=None)
+    assert errors == []
+    fixture_hits = [f for f in new if "fixtures" in f.path]
+    assert fixture_hits == []

@@ -139,3 +139,22 @@ def test_flash_dynamic_window_traced():
     o2 = ref.flash_attention_ref(q, k, v, causal=True, window=16)
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=3e-5,
                                rtol=3e-5)
+
+
+def test_flash_xla_backward_stays_f32_under_x64():
+    """Regression (bamlint BAM303): the manual backward's dk/dv scan
+    accumulators were built without a dtype — float64 under x64 — which
+    promoted (or broke) the whole custom-vjp backward."""
+    import jax.experimental
+    rng = np.random.default_rng(6)
+    q = _mk(rng, (1, 2, 32, 16), jnp.float32)
+    k = _mk(rng, (1, 2, 32, 16), jnp.float32)
+    v = _mk(rng, (1, 2, 32, 16), jnp.float32)
+    with jax.experimental.enable_x64():
+        dq, dk, dv = jax.grad(
+            lambda q, k, v: ref.flash_attention_xla(
+                q, k, v, causal=True, block_q=16, block_kv=16).sum(),
+            argnums=(0, 1, 2))(q, k, v)
+    assert dq.dtype == jnp.float32
+    assert dk.dtype == jnp.float32
+    assert dv.dtype == jnp.float32

@@ -87,3 +87,30 @@ def test_runtime_ops_never_retrace_steady_state():
         rst, tok = rt.submit_jit("b")(rst, IORequest.read(idx))
         rst, _ = rt.wait_jit("b")(rst, tok)
     assert rt.trace_counts == {"read:a": 1, "submit:b": 1, "wait:b": 1}
+
+
+def test_taxi_queries_never_retrace_steady_state():
+    """Regression (bamlint BAM105): ``run_query`` built a fresh
+    ``jax.jit(arr.read)`` wrapper per dependent column per call, so every
+    query recompiled every gather.  It now rides the instance cache."""
+    from repro.analytics import QUERIES, make_taxi_table, run_query
+    tbl = make_taxi_table(1 << 12)
+    for _ in range(3):
+        run_query(tbl, "Q2")
+    for name in QUERIES["Q2"]:
+        assert tbl.cols[name].trace_counts == {"read": 1}
+
+
+def test_graph_analytics_never_retrace_steady_state():
+    """Regression (bamlint BAM105): ``bfs``/``cc`` nested ``@jax.jit``
+    step functions inside the driver, re-tracing every traversal.  The
+    step bodies now live in the per-graph jit cache."""
+    from repro.graph import BamGraph, bfs, cc, random_graph
+    indptr, dst = random_graph(200, 4.0, seed=0)
+    g = BamGraph.build(indptr, dst, cacheline_bytes=256,
+                       cache_bytes=1 << 14)
+    for _ in range(2):
+        bfs(g, 0, async_tokens=True)
+        cc(g, async_tokens=True)
+    assert g.trace_counts == {"bfs_submit0": 1, "bfs_step_tok": 1,
+                              "cc_submit0": 1, "cc_step_tok": 1}

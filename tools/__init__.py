@@ -1,0 +1,1 @@
+# Repo tooling namespace package (`python -m tools.bamlint`, lint_docs).

@@ -1,0 +1,22 @@
+"""bamlint — repo-native static analysis for the BaM reproduction.
+
+Four AST passes, stdlib-only (no JAX import, no execution of the checked
+code), runnable as ``python -m tools.bamlint src benchmarks examples``:
+
+1. ``hostsync``       host-sync / retrace hazards in jit-reachable code
+2. ``tokens``         IOToken linear-lifecycle + pin pairing
+3. ``kernel_safety``  Pallas grid/BlockSpec geometry, ref aliasing, f64
+4. ``metrics_pass``   IOMetrics additive-vs-watermark conservation
+
+See docs/static_analysis.md for the rule catalogue, suppression syntax
+(``# bamlint: ignore[RULE]``) and the baseline workflow.
+"""
+from __future__ import annotations
+
+from tools.bamlint import hostsync, kernel_safety, metrics_pass, tokens
+
+PASSES = [hostsync, tokens, kernel_safety, metrics_pass]
+
+ALL_RULES = {}
+for _p in PASSES:
+    ALL_RULES.update(_p.RULES)

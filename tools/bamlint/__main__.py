@@ -1,0 +1,76 @@
+"""CLI: ``python -m tools.bamlint [paths...]``.
+
+Exit status is 0 when every finding is suppressed inline or covered by
+the committed baseline, 1 otherwise (and 2 on parse errors).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from tools.bamlint import ALL_RULES
+from tools.bamlint.core import run, write_baseline
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[2]
+DEFAULT_BASELINE = pathlib.Path(__file__).resolve().parent / "baseline.json"
+DEFAULT_PATHS = ["src", "benchmarks", "examples"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.bamlint",
+        description="BaM-repo static analysis (host-sync/retrace, token "
+                    "lifecycle, kernel safety, metrics conservation).")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files or directories (default: "
+                         f"{' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--baseline", type=pathlib.Path,
+                    default=DEFAULT_BASELINE,
+                    help="baseline file (default: tools/bamlint/"
+                         "baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report baselined findings too")
+    ap.add_argument("--no-suppress", action="store_true",
+                    help="ignore inline `# bamlint: ignore[...]` comments")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept current findings into the baseline file")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in sorted(ALL_RULES):
+            print(f"{rule}  {ALL_RULES[rule]}")
+        return 0
+
+    paths = args.paths or DEFAULT_PATHS
+    baseline_path = None if args.no_baseline else args.baseline
+    new, old, errors = run(
+        paths, REPO_ROOT, baseline_path=baseline_path,
+        respect_suppressions=not args.no_suppress)
+
+    for err in errors:
+        print(err, file=sys.stderr)
+    if errors:
+        return 2
+
+    if args.write_baseline:
+        write_baseline(args.baseline, new + old)
+        print(f"baseline: wrote {len(new) + len(old)} finding(s) to "
+              f"{args.baseline}")
+        return 0
+
+    for f in new:
+        print(f.render())
+    if new:
+        print(f"\nbamlint: {len(new)} finding(s)"
+              + (f" ({len(old)} baselined)" if old else ""))
+        return 1
+    tail = f" ({len(old)} baselined)" if old else ""
+    print(f"bamlint: clean{tail}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

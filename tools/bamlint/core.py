@@ -1,0 +1,198 @@
+"""bamlint core: findings, suppressions, baseline, module loading, runner.
+
+The framework is deliberately stdlib-only (``ast`` + ``json``): the linter
+must run in CI jobs that never install JAX, and it must never *import* the
+code it checks — everything is static AST analysis.
+
+A finding is identified for baseline purposes by ``(rule, file,
+stripped-source-line)``, so a committed baseline survives unrelated line
+drift but resurfaces the finding as soon as the offending line changes.
+
+Suppression: a finding on line ``L`` is suppressed when line ``L`` or
+``L-1`` carries ``# bamlint: ignore[RULE]`` (comma-separated rules, or
+``*`` for all).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+SUPPRESS_RE = re.compile(r"#\s*bamlint:\s*ignore\[([A-Za-z0-9_*,\s]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str                  # e.g. "BAM101"
+    path: str                  # repo-relative posix path
+    line: int                  # 1-based
+    col: int                   # 0-based
+    message: str
+    code: str = ""             # stripped source line (baseline identity)
+
+    @property
+    def fingerprint(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path, self.code)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col + 1}: " \
+               f"{self.rule} {self.message}"
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    """One parsed source file handed to every pass."""
+
+    path: pathlib.Path         # absolute
+    rel: str                   # repo-relative posix path
+    source: str
+    lines: List[str]
+    tree: ast.Module
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        return Finding(rule=rule, path=self.rel, line=line, col=col,
+                       message=message, code=self.line_text(line))
+
+
+def load_module(path: pathlib.Path, root: pathlib.Path) -> ModuleInfo:
+    source = path.read_text()
+    try:
+        rel = path.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        rel = path.as_posix()
+    tree = ast.parse(source, filename=str(path))
+    return ModuleInfo(path=path, rel=rel, source=source,
+                      lines=source.splitlines(), tree=tree)
+
+
+# ------------------------------------------------------------ suppressions
+def suppressed_rules_by_line(lines: Sequence[str]) -> Dict[int, Set[str]]:
+    """Map 1-based line number -> set of rule ids suppressed on it."""
+    out: Dict[int, Set[str]] = {}
+    for i, text in enumerate(lines, start=1):
+        m = SUPPRESS_RE.search(text)
+        if m:
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            out[i] = rules
+    return out
+
+
+def is_suppressed(finding: Finding, supp: Dict[int, Set[str]]) -> bool:
+    for line in (finding.line, finding.line - 1):
+        rules = supp.get(line)
+        if rules and (finding.rule in rules or "*" in rules):
+            return True
+    return False
+
+
+# ----------------------------------------------------------------- baseline
+def load_baseline(path: pathlib.Path) -> List[Tuple[str, str, str]]:
+    """The baseline is a *multiset* of fingerprints (list with repeats)."""
+    if not path.is_file():
+        return []
+    data = json.loads(path.read_text())
+    return [(e["rule"], e["file"], e["code"])
+            for e in data.get("findings", [])]
+
+
+def write_baseline(path: pathlib.Path, findings: Iterable[Finding]) -> None:
+    entries = [{"rule": f.rule, "file": f.path, "code": f.code}
+               for f in sorted(findings,
+                               key=lambda f: (f.path, f.line, f.rule))]
+    path.write_text(json.dumps({"version": 1, "findings": entries},
+                               indent=2) + "\n")
+
+
+def apply_baseline(findings: Sequence[Finding],
+                   baseline: Sequence[Tuple[str, str, str]]
+                   ) -> Tuple[List[Finding], List[Finding]]:
+    """Split findings into (new, baselined) — multiset semantics."""
+    budget: Dict[Tuple[str, str, str], int] = {}
+    for fp in baseline:
+        budget[fp] = budget.get(fp, 0) + 1
+    new, old = [], []
+    for f in findings:
+        if budget.get(f.fingerprint, 0) > 0:
+            budget[f.fingerprint] -= 1
+            old.append(f)
+        else:
+            new.append(f)
+    return new, old
+
+
+# ------------------------------------------------------------------- runner
+FIXTURE_DIR_MARKER = ("bamlint", "fixtures")
+
+
+def _is_fixture(path: pathlib.Path) -> bool:
+    parts = path.parts
+    for i in range(len(parts) - 1):
+        if parts[i:i + 2] == FIXTURE_DIR_MARKER:
+            return True
+    return False
+
+
+def collect_files(paths: Sequence[str],
+                  root: pathlib.Path) -> List[pathlib.Path]:
+    files: List[pathlib.Path] = []
+    for p in paths:
+        pp = pathlib.Path(p)
+        if not pp.is_absolute():
+            pp = root / pp
+        if pp.is_file() and pp.suffix == ".py":
+            files.append(pp)
+        elif pp.is_dir():
+            files.extend(sorted(
+                f for f in pp.rglob("*.py")
+                if "__pycache__" not in f.parts and not _is_fixture(f)))
+    return files
+
+
+def check_module(mod: ModuleInfo,
+                 passes: Optional[Sequence] = None) -> List[Finding]:
+    """Run every pass over one module; raw findings (no suppressions)."""
+    from tools.bamlint import PASSES
+    out: List[Finding] = []
+    for p in (passes if passes is not None else PASSES):
+        out.extend(p.check(mod))
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return out
+
+
+def check_file(path: pathlib.Path, root: pathlib.Path,
+               passes: Optional[Sequence] = None,
+               respect_suppressions: bool = True) -> List[Finding]:
+    mod = load_module(path, root)
+    findings = check_module(mod, passes)
+    if respect_suppressions:
+        supp = suppressed_rules_by_line(mod.lines)
+        findings = [f for f in findings if not is_suppressed(f, supp)]
+    return findings
+
+
+def run(paths: Sequence[str], root: pathlib.Path,
+        baseline_path: Optional[pathlib.Path] = None,
+        respect_suppressions: bool = True,
+        ) -> Tuple[List[Finding], List[Finding], List[str]]:
+    """Lint ``paths``; returns ``(new_findings, baselined, parse_errors)``."""
+    findings: List[Finding] = []
+    errors: List[str] = []
+    for f in collect_files(paths, root):
+        try:
+            findings.extend(check_file(
+                f, root, respect_suppressions=respect_suppressions))
+        except SyntaxError as e:
+            errors.append(f"{f}: syntax error: {e}")
+    baseline = load_baseline(baseline_path) if baseline_path else []
+    new, old = apply_baseline(findings, baseline)
+    return new, old, errors

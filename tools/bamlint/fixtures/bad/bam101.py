@@ -1,0 +1,11 @@
+# bamlint-fixture: expect BAM101
+# A host sync on the jit-traced request path: serializes the submission
+# window.  Never imported — parsed by tools.bamlint only.
+import jax
+
+
+@jax.jit
+def hot_read(st, idx):
+    vals = compute(st, idx)
+    vals.block_until_ready()
+    return vals

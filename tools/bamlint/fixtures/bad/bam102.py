@@ -1,0 +1,8 @@
+# bamlint-fixture: expect BAM102
+# Host transfer of a traced value inside jit-reachable code.
+import jax
+
+
+@jax.jit
+def hot_sum(x):
+    return x.sum().item()

@@ -1,0 +1,13 @@
+# bamlint-fixture: expect BAM103
+# Debug print left inside a Pallas kernel body.
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, o_ref):
+    jax.debug.print("x = {}", x_ref[0])
+    o_ref[0] = x_ref[0]
+
+
+def run(x):
+    return pl.pallas_call(_kernel, grid=(1,))(x)

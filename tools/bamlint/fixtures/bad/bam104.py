@@ -1,0 +1,10 @@
+# bamlint-fixture: expect BAM104
+# Python control flow on a traced value: retraces per value (or raises).
+import jax
+
+
+@jax.jit
+def clamp(x):
+    if x > 0:
+        return x + 1
+    return x - 1

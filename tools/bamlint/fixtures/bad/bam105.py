@@ -1,0 +1,9 @@
+# bamlint-fixture: expect BAM105
+# A fresh jax.jit wrapper per call defeats the compilation cache.
+import jax
+
+
+def driver(arr, st, idx):
+    read = jax.jit(arr.read)
+    v, st = read(st, idx)
+    return v, st

@@ -1,0 +1,5 @@
+# bamlint-fixture: expect BAM201
+# The submit's token is dropped: its cache pins are never released.
+def leak(arr, st, req):
+    st, tok = arr.submit(st, req)
+    return st

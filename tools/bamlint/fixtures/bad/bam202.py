@@ -1,0 +1,7 @@
+# bamlint-fixture: expect BAM202
+# The same token is waited twice on one path: pin refcount underflow.
+def double_wait(arr, st, req):
+    st, tok = arr.submit(st, req)
+    st, first = arr.wait(st, tok)
+    st, again = arr.wait(st, tok)
+    return st, first, again

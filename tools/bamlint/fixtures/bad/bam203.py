@@ -1,0 +1,8 @@
+# bamlint-fixture: expect BAM203
+# acquire() takes cache pins but nothing ever releases them.
+from repro.core import cache as C
+
+
+def pin_forever(cache, slots):
+    cache2 = C.acquire(cache, slots)
+    return transform(cache2)

@@ -1,0 +1,20 @@
+# bamlint-fixture: expect BAM302
+# Kernel stores into an input ref with no input_output_aliases entry.
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _k(x_ref, o_ref):
+    x_ref[0] = x_ref[0] * 2
+    o_ref[...] = x_ref[...]
+
+
+def run(x):
+    return pl.pallas_call(
+        _k,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((8,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((8,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+    )(x)

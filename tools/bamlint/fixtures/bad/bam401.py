@@ -1,0 +1,15 @@
+# bamlint-fixture: expect BAM401
+# WATERMARK_FIELDS names a field that the dataclass does not declare.
+class IOMetrics:
+    requests: object
+    max_depth: object
+
+    @staticmethod
+    def zeros():
+        return IOMetrics(requests=0, max_depth=0)
+
+    def summary(self):
+        return {"requests": self.requests, "max_depth": self.max_depth}
+
+
+WATERMARK_FIELDS = ("max_queue_depth",)

@@ -1,0 +1,16 @@
+# bamlint-fixture: expect BAM402
+# A declared counter never surfaces in summary(): collected, unobservable.
+class IOMetrics:
+    requests: object
+    dropped: object
+
+    @staticmethod
+    def zeros():
+        return IOMetrics(requests=0, dropped=0)
+
+    def summary(self):
+        return {"requests": float(self.requests)}
+
+
+WATERMARK_FIELDS = ()
+ADDITIVE_FIELDS = ("requests", "dropped")

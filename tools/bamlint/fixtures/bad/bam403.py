@@ -1,0 +1,15 @@
+# bamlint-fixture: expect BAM403
+# zeros() forgets a field: IOMetrics(...) construction is incomplete.
+class IOMetrics:
+    requests: object
+    dropped: object
+
+    @staticmethod
+    def zeros():
+        return IOMetrics(requests=0)
+
+    def summary(self):
+        return {"requests": self.requests, "dropped": self.dropped}
+
+
+WATERMARK_FIELDS = ()

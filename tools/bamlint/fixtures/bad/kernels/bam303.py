@@ -1,0 +1,7 @@
+# bamlint-fixture: expect BAM303
+# dtype-less constructor in a kernels module: float64 under x64.
+import jax.numpy as jnp
+
+
+def accumulator(n):
+    return jnp.zeros((n, 4))

@@ -1,0 +1,19 @@
+# bamlint-fixture: clean
+# Idiomatic hot path: jit-cached wrappers, lax control flow, host sync
+# only outside jit-reachable code.
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def hot_step(st, x):
+    y = jnp.where(x > 0, x + 1, x - 1)
+    return st, y
+
+
+def driver(arr, st, idx, n_iters: int):
+    read = arr.read_jit()
+    for _ in range(n_iters):
+        vals, st = read(st, idx)
+    vals.block_until_ready()
+    return float(vals.sum()), st

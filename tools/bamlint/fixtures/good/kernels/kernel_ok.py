@@ -1,0 +1,24 @@
+# bamlint-fixture: clean
+# Well-formed Pallas site: index-map arity matches grid rank, stores go
+# to the output ref, constructors carry explicit dtypes.
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _k(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2
+
+
+def run(x):
+    return pl.pallas_call(
+        _k,
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((32, 32), jnp.float32),
+    )(x)
+
+
+def accumulator(n):
+    return jnp.zeros((n, 4), jnp.float32)

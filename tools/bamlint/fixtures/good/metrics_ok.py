@@ -1,0 +1,22 @@
+# bamlint-fixture: clean
+# Conserved metrics: every field classified, surfaced in summary(), and
+# constructed in zeros().
+class IOMetrics:
+    requests: object
+    dropped: object
+    max_depth: object
+
+    @staticmethod
+    def zeros():
+        return IOMetrics(requests=0, dropped=0, max_depth=0)
+
+    def summary(self):
+        return {
+            "requests": self.requests,
+            "dropped": self.dropped,
+            "max_depth": self.max_depth,
+        }
+
+
+WATERMARK_FIELDS = ("max_depth",)
+ADDITIVE_FIELDS = ("requests", "dropped")

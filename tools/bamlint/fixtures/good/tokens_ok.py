@@ -1,0 +1,32 @@
+# bamlint-fixture: clean
+# Well-formed token lifecycles: every submit's token reaches exactly one
+# wait (or escapes by return), pins pair with releases.
+from repro.core import cache as C
+
+
+def submit_wait(arr, st, req):
+    st, tok = arr.submit(st, req)
+    st, vals = arr.wait(st, tok)
+    return st, vals
+
+
+def pipelined(arr, st, reqs):
+    st, tok = arr.submit(st, reqs[0])
+    for r in reqs[1:]:
+        st, nxt = arr.submit(st, r)
+        st, vals = arr.wait(st, tok)
+        tok = nxt
+    st, vals = arr.wait(st, tok)
+    return st, vals
+
+
+def handoff(arr, st, req):
+    st, tok = arr.submit(st, req)
+    return st, tok
+
+
+def pin_paired(cache, slots):
+    cache = C.acquire(cache, slots)
+    out = transform(cache)
+    cache = C.release(cache, slots)
+    return cache, out

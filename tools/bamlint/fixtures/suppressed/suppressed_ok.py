@@ -1,0 +1,10 @@
+# bamlint-fixture: suppressed BAM105
+# The violation below is real but deliberately waived inline; bamlint
+# must honor the suppression (and re-flag it under --no-suppress).
+import jax
+
+
+def driver(arr, st, idx):
+    read = jax.jit(arr.read)  # bamlint: ignore[BAM105]
+    v, st = read(st, idx)
+    return v, st

@@ -1,0 +1,413 @@
+"""Pass 3 — Pallas kernel safety: grid/BlockSpec shape discipline, ref
+aliasing, and accidental float64 promotion.
+
+These bugs do not fail loudly in ``interpret=True`` CI (interpret mode is
+forgiving about tiling, and x64 is off by default) but break or silently
+mis-tile the moment a kernel reaches a real TPU or an x64-enabled host.
+
+Rules
+-----
+BAM301  grid/BlockSpec mismatch: an index-map whose arity disagrees with
+        the grid rank (+ ``num_scalar_prefetch``), a block shape whose
+        rank disagrees with the index-map's returned tuple, a literal
+        block dim that does not divide the corresponding literal array
+        dim, or ``out_specs``/``out_shape`` length disagreement.
+BAM302  store into an *input* ref inside a kernel body without a
+        matching ``input_output_aliases`` entry — in-place mutation of a
+        possibly-donated input buffer.
+BAM303  dtype-less array constructor (``jnp.zeros``/``ones``/``full``
+        with float fill/float ``arange``/float ``array``) in a kernels
+        module — promotes to float64 under ``jax_enable_x64`` and breaks
+        TPU lowering.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from tools.bamlint.core import Finding, ModuleInfo
+from tools.bamlint.reach import dotted, tail
+
+RULES = {
+    "BAM301": "grid/BlockSpec shape or arity mismatch in pallas_call",
+    "BAM302": "store into an input ref without input_output_aliases",
+    "BAM303": "dtype-less array constructor promotes to f64 under x64",
+}
+
+
+def _is_kernels_module(mod: ModuleInfo) -> bool:
+    return "kernels" in mod.path.parts
+
+
+def _has_pallas_call(mod: ModuleInfo) -> bool:
+    return "pallas_call" in mod.source
+
+
+def check(mod: ModuleInfo) -> List[Finding]:
+    out: List[Finding] = []
+    if _has_pallas_call(mod):
+        out.extend(_check_pallas_calls(mod))
+    if _is_kernels_module(mod):
+        out.extend(_check_f64(mod))
+    return out
+
+
+# --------------------------------------------------------------- helpers
+def _int_literal(node: ast.AST) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) and \
+            not isinstance(node.value, bool):
+        return node.value
+    return None
+
+
+def _kwarg(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _as_spec_list(node: Optional[ast.expr]) -> Optional[List[ast.expr]]:
+    """Normalize an in_specs/out_specs expression to a list of BlockSpec
+    expressions when statically resolvable (handles ``[spec] * 6``)."""
+    if node is None:
+        return None
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return list(node.elts)
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mult):
+        for lhs, rhs in ((node.left, node.right), (node.right, node.left)):
+            n = _int_literal(rhs)
+            if n is not None and isinstance(lhs, (ast.List, ast.Tuple)):
+                return list(lhs.elts) * n
+    if isinstance(node, ast.Call) and tail(dotted(node.func)) == "BlockSpec":
+        return [node]
+    return None
+
+
+def _blockspec_parts(spec: ast.expr) -> Tuple[Optional[ast.expr],
+                                              Optional[ast.expr]]:
+    """(block_shape_expr, index_map_expr) of a BlockSpec call, or Nones."""
+    if not (isinstance(spec, ast.Call) and
+            tail(dotted(spec.func)) == "BlockSpec"):
+        return None, None
+    shape = spec.args[0] if len(spec.args) >= 1 else \
+        _kwarg(spec, "block_shape")
+    imap = spec.args[1] if len(spec.args) >= 2 else _kwarg(spec, "index_map")
+    return shape, imap
+
+
+def _lambda_arity(fn: ast.expr) -> Optional[Tuple[int, int, bool]]:
+    """(min-arity, max-arity, has_vararg) for a Lambda index map.
+    Defaulted params (the ``g=group`` closure-capture idiom) widen the
+    accepted range rather than shifting it."""
+    if isinstance(fn, ast.Lambda):
+        a = fn.args
+        total = len(a.args) + len(a.posonlyargs)
+        return total - len(a.defaults), total, a.vararg is not None
+    return None
+
+
+def _lambda_ret_len(fn: ast.expr) -> Optional[int]:
+    if isinstance(fn, ast.Lambda) and \
+            isinstance(fn.body, (ast.Tuple, ast.List)):
+        return len(fn.body.elts)
+    return None
+
+
+def _shape_dims(shape: Optional[ast.expr]) -> Optional[List[ast.expr]]:
+    if isinstance(shape, (ast.Tuple, ast.List)):
+        return list(shape.elts)
+    return None
+
+
+class _PallasSite:
+    """One ``pl.pallas_call(...)`` with its grid/spec geometry resolved."""
+
+    def __init__(self, call: ast.Call):
+        self.call = call
+        self.grid: Optional[ast.expr] = _kwarg(call, "grid")
+        self.in_specs = _kwarg(call, "in_specs")
+        self.out_specs = _kwarg(call, "out_specs")
+        self.out_shape = _kwarg(call, "out_shape")
+        self.scratch = _kwarg(call, "scratch_shapes")
+        self.num_prefetch = 0
+        self.aliases = _kwarg(call, "input_output_aliases")
+        gs = _kwarg(call, "grid_spec")
+        self.grid_spec_node = gs
+
+    def absorb_grid_spec(self, spec_call: ast.Call) -> None:
+        self.grid = _kwarg(spec_call, "grid") or self.grid
+        self.in_specs = _kwarg(spec_call, "in_specs") or self.in_specs
+        self.out_specs = _kwarg(spec_call, "out_specs") or self.out_specs
+        self.scratch = _kwarg(spec_call, "scratch_shapes") or self.scratch
+        np_ = _kwarg(spec_call, "num_scalar_prefetch")
+        n = _int_literal(np_) if np_ is not None else None
+        if n is not None:
+            self.num_prefetch = n
+
+    @property
+    def grid_rank(self) -> Optional[int]:
+        dims = _shape_dims(self.grid)
+        return len(dims) if dims is not None else None
+
+    @property
+    def n_outputs(self) -> Optional[int]:
+        shp = self.out_shape
+        if isinstance(shp, (ast.List, ast.Tuple)):
+            return len(shp.elts)
+        if isinstance(shp, ast.BinOp) and isinstance(shp.op, ast.Mult):
+            for lhs, rhs in ((shp.left, shp.right), (shp.right, shp.left)):
+                n = _int_literal(rhs)
+                if n is not None and isinstance(lhs, (ast.List, ast.Tuple)):
+                    return len(lhs.elts) * n
+        if isinstance(shp, ast.Call):
+            return 1
+        return None
+
+
+def _module_assignments(tree: ast.Module) -> Dict[str, ast.expr]:
+    """name -> last assigned value, across all scopes (simple names)."""
+    out: Dict[str, ast.expr] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name):
+            out[node.targets[0].id] = node.value
+    return out
+
+
+def _resolve_kernel_fn(kernel_arg: ast.expr, tree: ast.Module,
+                       assigns: Dict[str, ast.expr]):
+    """Resolve the pallas_call kernel argument to its def, unwrapping one
+    ``functools.partial(_impl, ...)`` indirection (keyword-only statics)."""
+    name: Optional[str] = None
+    node: Optional[ast.expr] = kernel_arg
+    for _ in range(3):
+        if isinstance(node, ast.Name):
+            if node.id in assigns:
+                node = assigns[node.id]
+                continue
+            name = node.id
+            break
+        if isinstance(node, ast.Call) and \
+                tail(dotted(node.func)) == "partial" and node.args:
+            node = node.args[0]
+            continue
+        break
+    if name is None:
+        return None
+    for n in ast.walk(tree):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                n.name == name:
+            return n
+    return None
+
+
+# ------------------------------------------------------------ BAM301/302
+def _check_pallas_calls(mod: ModuleInfo) -> List[Finding]:
+    out: List[Finding] = []
+    assigns = _module_assignments(mod.tree)
+    for node in ast.walk(mod.tree):
+        if not (isinstance(node, ast.Call) and
+                tail(dotted(node.func)) == "pallas_call"):
+            continue
+        site = _PallasSite(node)
+        gs = site.grid_spec_node
+        if gs is not None:
+            if isinstance(gs, ast.Name) and gs.id in assigns:
+                gs = assigns[gs.id]
+            if isinstance(gs, ast.Call):
+                site.absorb_grid_spec(gs)
+        out.extend(_check_geometry(mod, site))
+        if node.args:
+            kfn = _resolve_kernel_fn(node.args[0], mod.tree, assigns)
+            if kfn is not None:
+                out.extend(_check_input_stores(mod, site, kfn))
+    return out
+
+
+def _check_geometry(mod: ModuleInfo, site: _PallasSite) -> List[Finding]:
+    out: List[Finding] = []
+    rank = site.grid_rank
+    want_arity = None if rank is None else rank + site.num_prefetch
+
+    in_specs = _as_spec_list(site.in_specs) or []
+    out_specs = _as_spec_list(site.out_specs) or []
+
+    n_out = site.n_outputs
+    if n_out is not None and out_specs and len(out_specs) != n_out:
+        out.append(mod.finding(
+            "BAM301", site.out_specs or site.call,
+            f"out_specs has {len(out_specs)} BlockSpec(s) but out_shape "
+            f"declares {n_out} output(s)"))
+
+    out_dims = _out_shape_dims(site)
+    for which, specs in (("in_specs", in_specs), ("out_specs", out_specs)):
+        for idx, spec in enumerate(specs):
+            shape, imap = _blockspec_parts(spec)
+            if imap is not None and want_arity is not None:
+                ar = _lambda_arity(imap)
+                if ar is not None:
+                    lo, hi, vararg = ar
+                    if not vararg and not (lo <= want_arity <= hi):
+                        out.append(mod.finding(
+                            "BAM301", imap,
+                            f"{which}[{idx}] index map takes {lo} arg(s) "
+                            f"but the grid has rank {rank}"
+                            + (f" + {site.num_prefetch} scalar-prefetch "
+                               "operand(s)" if site.num_prefetch else "")
+                            + f" = {want_arity}"))
+            dims = _shape_dims(shape)
+            if imap is not None and dims is not None:
+                ret = _lambda_ret_len(imap)
+                if ret is not None and ret != len(dims):
+                    out.append(mod.finding(
+                        "BAM301", spec,
+                        f"{which}[{idx}] block shape has {len(dims)} "
+                        f"dim(s) but its index map returns {ret} "
+                        "coordinate(s)"))
+            if which == "out_specs" and dims is not None and \
+                    out_dims is not None and idx < len(out_dims) and \
+                    out_dims[idx] is not None:
+                arr = out_dims[idx]
+                if len(arr) == len(dims):
+                    for d, (b, a) in enumerate(zip(dims, arr)):
+                        bi, ai = _int_literal(b), _int_literal(a)
+                        if bi and ai and ai % bi != 0:
+                            out.append(mod.finding(
+                                "BAM301", b,
+                                f"out_specs[{idx}] block dim {d} is {bi} "
+                                f"but the output array dim is {ai} — not "
+                                "divisible, the trailing block reads out "
+                                "of bounds"))
+    return out
+
+
+def _out_shape_dims(site: _PallasSite
+                    ) -> Optional[List[Optional[List[ast.expr]]]]:
+    """Per-output list of dim exprs from ShapeDtypeStruct literals."""
+    shp = site.out_shape
+
+    def one(e: ast.expr) -> Optional[List[ast.expr]]:
+        if isinstance(e, ast.Call) and \
+                tail(dotted(e.func)) == "ShapeDtypeStruct" and e.args:
+            return _shape_dims(e.args[0])
+        return None
+
+    if isinstance(shp, (ast.List, ast.Tuple)):
+        return [one(e) for e in shp.elts]
+    if isinstance(shp, ast.BinOp) and isinstance(shp.op, ast.Mult):
+        for lhs, rhs in ((shp.left, shp.right), (shp.right, shp.left)):
+            n = _int_literal(rhs)
+            if n is not None and isinstance(lhs, (ast.List, ast.Tuple)):
+                return [one(e) for e in lhs.elts] * n
+    if isinstance(shp, ast.Call):
+        return [one(shp)]
+    return None
+
+
+def _aliased_input_indices(site: _PallasSite) -> Optional[set]:
+    """Input indices named in a literal input_output_aliases dict, or
+    ``None`` when the kwarg exists but is not a literal (→ skip checks)."""
+    al = site.aliases
+    if al is None:
+        return set()
+    if isinstance(al, ast.Dict):
+        idxs = set()
+        for k in al.keys:
+            i = _int_literal(k) if k is not None else None
+            if i is None:
+                return None
+            idxs.add(i)
+        return idxs
+    return None
+
+
+def _check_input_stores(mod: ModuleInfo, site: _PallasSite,
+                        kfn) -> List[Finding]:
+    n_in = len(_as_spec_list(site.in_specs) or [])
+    if not n_in:
+        return []
+    aliased = _aliased_input_indices(site)
+    if aliased is None:
+        return []
+    params = [a.arg for a in kfn.args.posonlyargs + kfn.args.args]
+    k = site.num_prefetch
+    input_params = {}
+    for i, p in enumerate(params[k:k + n_in]):
+        if i not in aliased:
+            input_params[p] = i
+    if not input_params:
+        return []
+    out: List[Finding] = []
+    for node in ast.walk(kfn):
+        tgt = None
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            tgts = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in tgts:
+                if isinstance(t, ast.Subscript) and \
+                        isinstance(t.value, ast.Name) and \
+                        t.value.id in input_params:
+                    tgt = t
+        if tgt is not None:
+            out.append(mod.finding(
+                "BAM302", tgt,
+                f"kernel stores into input ref `{tgt.value.id}` "
+                "(input index "
+                f"{input_params[tgt.value.id]}) with no matching "
+                "input_output_aliases entry — mutating a "
+                "possibly-donated input buffer"))
+    return out
+
+
+# ----------------------------------------------------------------- BAM303
+DTYPE_DEFAULT_FLOAT = {"zeros", "ones", "empty"}
+EXEMPT_LIKE = {"zeros_like", "ones_like", "full_like", "empty_like"}
+
+
+def _has_float_literal(node: ast.expr) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Constant) and isinstance(n.value, float):
+            return True
+    return False
+
+
+def _check_f64(mod: ModuleInfo) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = dotted(node.func)
+        t = tail(fname)
+        if not fname.startswith(("jnp.", "jax.numpy.")):
+            continue
+        if t in EXEMPT_LIKE:
+            continue
+        has_dtype = _kwarg(node, "dtype") is not None
+        if t in DTYPE_DEFAULT_FLOAT:
+            if not has_dtype and len(node.args) < 2:
+                out.append(mod.finding(
+                    "BAM303", node,
+                    f"`jnp.{t}` without an explicit dtype defaults to "
+                    "the x64-dependent float dtype — float64 under "
+                    "jax_enable_x64, which breaks TPU lowering and "
+                    "doubles VMEM; pass dtype= explicitly"))
+        elif t == "full":
+            fill = node.args[1] if len(node.args) >= 2 else \
+                _kwarg(node, "fill_value")
+            if not has_dtype and len(node.args) < 3 and \
+                    fill is not None and _has_float_literal(fill):
+                out.append(mod.finding(
+                    "BAM303", node,
+                    "`jnp.full` with a float fill and no dtype "
+                    "promotes to float64 under jax_enable_x64; pass "
+                    "dtype= explicitly"))
+        elif t in ("arange", "linspace", "array"):
+            if not has_dtype and \
+                    any(_has_float_literal(a) for a in node.args):
+                out.append(mod.finding(
+                    "BAM303", node,
+                    f"`jnp.{t}` with float literal(s) and no dtype "
+                    "promotes to float64 under jax_enable_x64; pass "
+                    "dtype= explicitly"))
+    return out

@@ -1,0 +1,199 @@
+"""Pass 4 — IOMetrics conservation: every counter classified and surfaced.
+
+The multi-tenant facade depends on a complete additive-vs-watermark split
+of ``IOMetrics``: per-op deltas subtract additive counters and carry
+watermarks, accumulation sums additive counters and maxes watermarks.  A
+field added to the dataclass but missed in the classification tuples, in
+``zeros()``, or in ``summary()`` silently breaks metrics conservation —
+the differential oracle sums tenant deltas that no longer reconcile with
+the global counters, or a counter exists that no benchmark can observe.
+
+Rules
+-----
+BAM401  classification mismatch: a name in ``WATERMARK_FIELDS`` /
+        ``ADDITIVE_FIELDS`` that is not a declared field, a field in
+        neither (when both are literal), or a field in both.
+BAM402  a declared field that never appears in ``summary()`` — the
+        counter is collected but unobservable.
+BAM403  a declared field not initialized by keyword in the
+        ``IOMetrics(...)`` constructor call inside ``zeros()``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from tools.bamlint.core import Finding, ModuleInfo
+from tools.bamlint.reach import dotted, tail
+
+RULES = {
+    "BAM401": "IOMetrics field classification mismatch "
+              "(additive vs watermark)",
+    "BAM402": "IOMetrics field missing from summary()",
+    "BAM403": "IOMetrics field not initialized in zeros()",
+}
+
+METRICS_CLASS = "IOMetrics"
+
+
+def _find_class(tree: ast.Module) -> Optional[ast.ClassDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == METRICS_CLASS:
+            return node
+    return None
+
+
+def _declared_fields(cls: ast.ClassDef) -> List[ast.AnnAssign]:
+    out = []
+    for stmt in cls.body:
+        if isinstance(stmt, ast.AnnAssign) and \
+                isinstance(stmt.target, ast.Name):
+            out.append(stmt)
+    return out
+
+
+def _literal_names(node: ast.expr) -> Optional[List[str]]:
+    """Element strings of a literal tuple/list of str constants."""
+    if isinstance(node, (ast.Tuple, ast.List)):
+        names = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                names.append(e.value)
+            else:
+                return None
+        return names
+    return None
+
+
+def _method(cls: ast.ClassDef, name: str):
+    for stmt in cls.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                stmt.name == name:
+            return stmt
+    return None
+
+
+def check(mod: ModuleInfo) -> List[Finding]:
+    cls = _find_class(mod.tree)
+    if cls is None:
+        return []
+    out: List[Finding] = []
+    field_nodes = _declared_fields(cls)
+    fields = [f.target.id for f in field_nodes]
+    field_set = set(fields)
+
+    # ------------------------------------------------ BAM401 classification
+    watermark: Optional[List[str]] = None
+    additive: Optional[List[str]] = None
+    wm_node = add_node = None
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name):
+            name = node.targets[0].id
+            if name == "WATERMARK_FIELDS":
+                watermark, wm_node = _literal_names(node.value), node
+            elif name == "ADDITIVE_FIELDS":
+                additive, add_node = _literal_names(node.value), node
+
+    if wm_node is None:
+        out.append(mod.finding(
+            "BAM401", cls,
+            "module defines IOMetrics but no WATERMARK_FIELDS "
+            "classification — delta/accumulate cannot distinguish "
+            "additive counters from high-watermarks"))
+    if watermark is not None:
+        for name in watermark:
+            if name not in field_set:
+                out.append(mod.finding(
+                    "BAM401", wm_node,
+                    f"WATERMARK_FIELDS names `{name}`, which is not a "
+                    "declared IOMetrics field"))
+    if additive is not None:
+        for name in additive:
+            if name not in field_set:
+                out.append(mod.finding(
+                    "BAM401", add_node,
+                    f"ADDITIVE_FIELDS names `{name}`, which is not a "
+                    "declared IOMetrics field"))
+        if watermark is not None:
+            both = set(additive) & set(watermark)
+            for name in sorted(both):
+                out.append(mod.finding(
+                    "BAM401", add_node,
+                    f"field `{name}` is classified both additive and "
+                    "watermark — accumulate would double-count it"))
+            missing = field_set - set(additive) - set(watermark)
+            for name in sorted(missing):
+                out.append(mod.finding(
+                    "BAM401", add_node,
+                    f"field `{name}` is in neither ADDITIVE_FIELDS nor "
+                    "WATERMARK_FIELDS — it is dropped by "
+                    "delta/accumulate and conservation breaks"))
+    # ADDITIVE_FIELDS derived generically (e.g. a comprehension over
+    # __dataclass_fields__ minus WATERMARK_FIELDS) is complete by
+    # construction — nothing to check beyond the watermark names above.
+
+    # ----------------------------------------------------- BAM402 summary
+    summ = _method(cls, "summary")
+    if summ is None:
+        out.append(mod.finding(
+            "BAM402", cls,
+            "IOMetrics has no summary() — counters are collected but "
+            "unobservable"))
+    else:
+        seen = _referenced_fields(summ, field_set)
+        for f in field_nodes:
+            if f.target.id not in seen:
+                out.append(mod.finding(
+                    "BAM402", f,
+                    f"field `{f.target.id}` never appears in summary() "
+                    "— the counter is collected but unobservable"))
+
+    # ------------------------------------------------------- BAM403 zeros
+    zeros = _method(cls, "zeros")
+    if zeros is None:
+        out.append(mod.finding(
+            "BAM403", cls,
+            "IOMetrics has no zeros() constructor — there is no "
+            "canonical all-zero state to delta against"))
+    else:
+        init = _constructor_keywords(zeros)
+        if init is not None:
+            for f in field_nodes:
+                if f.target.id not in init:
+                    out.append(mod.finding(
+                        "BAM403", f,
+                        f"field `{f.target.id}` is not initialized by "
+                        "keyword in the IOMetrics(...) call inside "
+                        "zeros() — construction raises (or worse, a "
+                        "default hides a missing counter)"))
+    return out
+
+
+def _referenced_fields(fn, field_set: Set[str]) -> Set[str]:
+    """Fields mentioned in ``fn`` as string keys or ``self.<field>``."""
+    seen: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Constant) and isinstance(node.value, str) \
+                and node.value in field_set:
+            seen.add(node.value)
+        elif isinstance(node, ast.Attribute) and \
+                isinstance(node.value, ast.Name) and \
+                node.value.id == "self" and node.attr in field_set:
+            seen.add(node.attr)
+    return seen
+
+
+def _constructor_keywords(fn) -> Optional[Set[str]]:
+    """Keyword names of the ``IOMetrics(...)`` call in ``fn``; ``None``
+    when the call uses ``**kwargs`` (not statically checkable)."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and \
+                tail(dotted(node.func)) == METRICS_CLASS:
+            names: Set[str] = set()
+            for kw in node.keywords:
+                if kw.arg is None:        # **kw splat
+                    return None
+                names.add(kw.arg)
+            return names
+    return None

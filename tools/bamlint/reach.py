@@ -1,0 +1,450 @@
+"""Jit-reachability + taint machinery shared by the bamlint passes.
+
+``analyze(module)`` classifies every function/lambda in a module:
+
+* **jit root** — directly traced: decorated with ``jax.jit`` (bare or via
+  ``functools.partial``), passed to ``jax.jit(...)`` / the repo's
+  ``_jit_op``/``_cached_jit`` op-family caches, passed to a traced
+  higher-order primitive (``lax.scan``/``cond``/``while_loop``/...), or a
+  function whose signature takes a traced-typed parameter (``jax.Array``,
+  ``BamState``, ``CacheState``, ... — the repo's functional-core calling
+  convention).
+* **kernel** — the function handed (directly or through
+  ``functools.partial``) to ``pl.pallas_call`` as its kernel body.
+* **reachable** — transitively callable (by simple name, intra-module)
+  from a root or kernel.
+
+Host callbacks stay invisible: functions passed to ``pure_callback`` /
+``io_callback`` are *not* marked reachable through that edge.
+
+Taint is per-function and intentionally conservative-positive: a value is
+*tainted* (tracer-derived) only on positive evidence — a traced-typed or
+root-function parameter, a ``jnp.``/``jax.lax.`` result, or arithmetic /
+indexing / unknown calls over tainted inputs.  Attribute access through a
+known-static attribute (``.shape``, ``.dtype``, ``.kind``, ...) launders
+the taint, as do ``len()``/``range()``-of-untainted and host-transfer
+calls themselves.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+FuncNode = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+# Annotations that mark a parameter as carrying traced values (the repo's
+# pytree state types plus the jax array types).
+TRACED_TYPES = (
+    "jax.Array", "jnp.ndarray", "jax.numpy.ndarray", "ArrayLike",
+    "BamState", "RuntimeState", "CacheState", "QueueState",
+    "IOToken", "IORequest", "IOMetrics", "Completions", "ProbeResult",
+    "AllocResult", "SubmitReceipt", "HBMStorage",
+)
+
+# Attribute reads that yield static (trace-time Python) values even on a
+# traced object: pytree metadata, shape/dtype introspection, the .at
+# updater (its result is traced again via the call chain on the update).
+STATIC_ATTRS = {
+    "shape", "dtype", "ndim", "size", "itemsize", "kind", "at",
+    "n_devices", "stripe_blocks", "num_lines", "block_elems",
+    "ways", "num_sets", "n_tenants", "num_queues", "depth", "group_size",
+}
+
+# Higher-order traced primitives: function-valued arguments become
+# jit-reachable with traced parameters.
+TRACED_HOFS = {"scan", "cond", "while_loop", "fori_loop", "switch",
+               "vmap", "pmap", "grad", "value_and_grad", "checkpoint",
+               "remat", "custom_vjp", "custom_jvp", "associative_scan",
+               "map"}
+# ... while these receive *host* functions.
+HOST_HOFS = {"pure_callback", "io_callback", "debug_callback"}
+
+JIT_CACHE_FNS = {"_jit_op", "_cached_jit"}
+
+
+def dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of an expression ('jax.jit', 'pl.pallas_call')."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    if isinstance(node, ast.Call):
+        return dotted(node.func)
+    return ""
+
+
+def tail(name: str) -> str:
+    return name.rsplit(".", 1)[-1]
+
+
+def _is_jit_name(name: str) -> bool:
+    return tail(name) == "jit"
+
+
+def _is_pallas_call(name: str) -> bool:
+    return tail(name) == "pallas_call"
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    node: ast.AST                       # FunctionDef | AsyncFunctionDef | Lambda
+    name: str                           # "" for lambdas
+    parent: Optional["FuncInfo"]        # enclosing function, if any
+    is_root: bool = False               # directly traced entry point
+    is_kernel: bool = False             # pallas_call kernel body
+    reachable: bool = False
+    kernel_reachable: bool = False
+
+
+class ModuleAnalysis:
+    def __init__(self, tree: ast.Module):
+        self.tree = tree
+        self.funcs: Dict[ast.AST, FuncInfo] = {}
+        self.by_name: Dict[str, List[FuncInfo]] = {}
+        self._index(tree)
+        self._mark_roots()
+        self._propagate()
+
+    # ------------------------------------------------------------ indexing
+    def _index(self, tree: ast.Module) -> None:
+        analysis = self
+
+        class Indexer(ast.NodeVisitor):
+            def __init__(self) -> None:
+                self.stack: List[FuncInfo] = []
+
+            def _add(self, node: ast.AST, name: str) -> None:
+                parent = self.stack[-1] if self.stack else None
+                fi = FuncInfo(node=node, name=name, parent=parent)
+                analysis.funcs[node] = fi
+                if name:
+                    analysis.by_name.setdefault(name, []).append(fi)
+                self.stack.append(fi)
+                for child in ast.iter_child_nodes(node):
+                    self.visit(child)
+                self.stack.pop()
+
+            def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+                self._add(node, node.name)
+
+            def visit_AsyncFunctionDef(self, node) -> None:
+                self._add(node, node.name)
+
+            def visit_Lambda(self, node: ast.Lambda) -> None:
+                self._add(node, "")
+
+        Indexer().visit(tree)
+
+    # --------------------------------------------------------------- roots
+    def _func_args(self, call: ast.Call) -> List[ast.AST]:
+        """Function-valued argument expressions of a call, unwrapping
+        ``functools.partial(f, ...)``."""
+        out: List[ast.AST] = []
+        for a in list(call.args) + [kw.value for kw in call.keywords]:
+            if isinstance(a, FuncNode):
+                out.append(a)
+            elif isinstance(a, ast.Name):
+                out.append(a)
+            elif isinstance(a, ast.Call) and tail(dotted(a.func)) == "partial":
+                out.extend(self._func_args(a))
+        return out
+
+    def _resolve(self, expr: ast.AST) -> List[FuncInfo]:
+        if isinstance(expr, FuncNode):
+            fi = self.funcs.get(expr)
+            return [fi] if fi else []
+        if isinstance(expr, ast.Name):
+            return self.by_name.get(expr.id, [])
+        if isinstance(expr, ast.Attribute):
+            return self.by_name.get(expr.attr, [])
+        return []
+
+    def _mark_roots(self) -> None:
+        # (a) decorators
+        for fi in self.funcs.values():
+            node = fi.node
+            for dec in getattr(node, "decorator_list", []):
+                name = dotted(dec)
+                if _is_jit_name(name):
+                    fi.is_root = True
+                if isinstance(dec, ast.Call):
+                    inner = dotted(dec)
+                    if tail(inner) == "partial" and any(
+                            _is_jit_name(dotted(a)) for a in dec.args):
+                        fi.is_root = True
+
+        # (b) annotation-based traced surface
+        for fi in self.funcs.values():
+            node = fi.node
+            args = getattr(node, "args", None)
+            if args is None:
+                continue
+            for a in (args.posonlyargs + args.args + args.kwonlyargs):
+                ann = getattr(a, "annotation", None)
+                if ann is not None and self._is_traced_ann(ann):
+                    fi.is_root = True
+                    break
+
+        # (c) call-site roots: jax.jit(f), pallas_call(kernel),
+        #     _jit_op(key, make), traced HOFs
+        for call in ast.walk(self.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            fname = dotted(call.func)
+            t = tail(fname)
+            if _is_jit_name(fname) or t in JIT_CACHE_FNS or t in TRACED_HOFS:
+                if t in HOST_HOFS:
+                    continue
+                for arg in self._func_args(call):
+                    for fi in self._resolve(arg):
+                        fi.is_root = True
+            if _is_pallas_call(fname) and call.args:
+                for fi in self._resolve(call.args[0]):
+                    fi.is_kernel = True
+                # kernel may arrive via functools.partial(kernel, ...)
+                a0 = call.args[0]
+                if isinstance(a0, ast.Call) and \
+                        tail(dotted(a0.func)) == "partial":
+                    for arg in self._func_args(a0):
+                        for fi in self._resolve(arg):
+                            fi.is_kernel = True
+                if isinstance(a0, ast.Name):
+                    # kernel = functools.partial(_impl, ...) earlier
+                    for assign in ast.walk(self.tree):
+                        if isinstance(assign, ast.Assign) and \
+                                isinstance(assign.value, ast.Call) and \
+                                tail(dotted(assign.value.func)) == "partial":
+                            for tgt in assign.targets:
+                                if isinstance(tgt, ast.Name) and \
+                                        tgt.id == a0.id:
+                                    for arg in self._func_args(assign.value):
+                                        for fi in self._resolve(arg):
+                                            fi.is_kernel = True
+
+    def _is_traced_ann(self, ann: ast.AST) -> bool:
+        try:
+            text = ast.unparse(ann)
+        except Exception:
+            return False
+        return any(t in text for t in TRACED_TYPES)
+
+    # ---------------------------------------------------------- propagation
+    def _propagate(self) -> None:
+        work: List[FuncInfo] = []
+        for fi in self.funcs.values():
+            if fi.is_root or fi.is_kernel:
+                fi.reachable = True
+                fi.kernel_reachable = fi.is_kernel
+                work.append(fi)
+        while work:
+            fi = work.pop()
+            body = fi.node.body
+            stmts = body if isinstance(body, list) else [body]
+            for stmt in stmts:
+                for node in ast.walk(stmt):
+                    callees: List[FuncInfo] = []
+                    if isinstance(node, ast.Call):
+                        t = tail(dotted(node.func))
+                        if t in HOST_HOFS:
+                            continue
+                        callees = self._resolve(node.func)
+                    elif isinstance(node, FuncNode) and node is not fi.node:
+                        sub = self.funcs.get(node)
+                        if sub is not None and sub.parent is fi:
+                            callees = [sub]
+                    for callee in callees:
+                        changed = False
+                        if not callee.reachable:
+                            callee.reachable = True
+                            changed = True
+                        if fi.kernel_reachable and \
+                                not callee.kernel_reachable:
+                            callee.kernel_reachable = True
+                            changed = True
+                        if changed:
+                            work.append(callee)
+
+    # ------------------------------------------------------------- queries
+    def reachable_functions(self) -> List[FuncInfo]:
+        return [fi for fi in self.funcs.values() if fi.reachable]
+
+    def kernels(self) -> List[FuncInfo]:
+        return [fi for fi in self.funcs.values() if fi.kernel_reachable]
+
+
+# ------------------------------------------------------------------- taint
+def seed_taint(fi: FuncInfo) -> Set[str]:
+    """Parameter names considered tracer-carrying for this function."""
+    tainted: Set[str] = set()
+    args = getattr(fi.node, "args", None)
+    if args is None:
+        return tainted
+    direct = fi.is_root or fi.is_kernel
+    params = args.posonlyargs + args.args + args.kwonlyargs
+    for a in params:
+        if a.arg in ("self", "cls"):
+            continue
+        ann = getattr(a, "annotation", None)
+        if ann is not None:
+            # Positive evidence only: an annotated parameter is traced
+            # iff its annotation names a traced type.  Config dataclasses
+            # (`ArchConfig`), `int | None` knobs, paths etc. are static.
+            text = ""
+            try:
+                text = ast.unparse(ann)
+            except Exception:
+                pass
+            if any(t in text for t in TRACED_TYPES):
+                tainted.add(a.arg)
+        elif direct:
+            tainted.add(a.arg)
+    return tainted
+
+
+class TaintTracker:
+    """Forward may-taint propagation over one function body (two sweeps to
+    pick up loop-carried names)."""
+
+    def __init__(self, fi: FuncInfo):
+        self.fi = fi
+        self.tainted: Set[str] = seed_taint(fi)
+        body = fi.node.body
+        self.stmts = body if isinstance(body, list) else []
+        for _ in range(2):
+            for stmt in self.stmts:
+                self._sweep(stmt)
+
+    # -- expression taint -------------------------------------------------
+    def expr_tainted(self, e: ast.AST) -> bool:
+        if isinstance(e, ast.Name):
+            return e.id in self.tainted
+        if isinstance(e, ast.Attribute):
+            if e.attr in STATIC_ATTRS:
+                return False
+            return self.expr_tainted(e.value)
+        if isinstance(e, ast.Subscript):
+            return self.expr_tainted(e.value) or self.expr_tainted(e.slice)
+        if isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.expr_tainted(x) for x in e.elts)
+        if isinstance(e, ast.BinOp):
+            return self.expr_tainted(e.left) or self.expr_tainted(e.right)
+        if isinstance(e, ast.UnaryOp):
+            return self.expr_tainted(e.operand)
+        if isinstance(e, ast.BoolOp):
+            return any(self.expr_tainted(v) for v in e.values)
+        if isinstance(e, ast.Compare):
+            # `x is None` / `"key" in d` style checks are structural —
+            # identity and container membership, not value comparisons.
+            if all(isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn))
+                   for op in e.ops):
+                return False
+            return self.expr_tainted(e.left) or \
+                any(self.expr_tainted(c) for c in e.comparators)
+        if isinstance(e, ast.IfExp):
+            return any(self.expr_tainted(x)
+                       for x in (e.test, e.body, e.orelse))
+        if isinstance(e, ast.Call):
+            return self.call_tainted(e)
+        if isinstance(e, ast.Starred):
+            return self.expr_tainted(e.value)
+        if isinstance(e, ast.Slice):
+            return any(x is not None and self.expr_tainted(x)
+                       for x in (e.lower, e.upper, e.step))
+        return False
+
+    def call_tainted(self, call: ast.Call) -> bool:
+        fname = dotted(call.func)
+        t = tail(fname)
+        head = fname.split(".", 1)[0]
+        # jnp./lax. producers are traced by construction
+        if head in ("jnp", "lax") or ".lax." in fname or \
+                fname.startswith("jax.lax") or head == "jax.numpy" or \
+                fname.startswith("jnp.") or fname.startswith("jax.numpy"):
+            return True
+        # host transfers & static introspection launder taint
+        if t in ("len", "isinstance", "hash", "id", "repr", "print",
+                 "device_get", "list", "tuple", "sorted", "set", "dict",
+                 "frozenset"):
+            return False
+        if t in ("float", "int", "bool", "str"):
+            return False               # host scalars (flagged separately)
+        if head == "np" or head == "numpy":
+            return False
+        if t == "range":
+            return any(self.expr_tainted(a) for a in call.args)
+        # method call on a traced object stays traced (e.g. x.sum())
+        if isinstance(call.func, ast.Attribute) and \
+                self.expr_tainted(call.func):
+            return True
+        # unknown call: traced if any argument is
+        return any(self.expr_tainted(a) for a in call.args) or \
+            any(self.expr_tainted(kw.value) for kw in call.keywords)
+
+    # -- statement sweep --------------------------------------------------
+    def _bind(self, target: ast.AST, value_tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if value_tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind(elt, value_tainted)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, value_tainted)
+        # subscript/attribute stores don't (re)bind local names
+
+    def _sweep(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.Assign):
+            # element-wise for `a, b = x, y` so laundering attributes
+            # (`kind, v = t.kind, t.value`) don't cross-contaminate
+            if len(stmt.targets) == 1 and \
+                    isinstance(stmt.targets[0], (ast.Tuple, ast.List)) and \
+                    isinstance(stmt.value, (ast.Tuple, ast.List)) and \
+                    len(stmt.targets[0].elts) == len(stmt.value.elts):
+                for tgt, val in zip(stmt.targets[0].elts,
+                                    stmt.value.elts):
+                    self._bind(tgt, self.expr_tainted(val))
+                return
+            vt = self.expr_tainted(stmt.value)
+            for tgt in stmt.targets:
+                self._bind(tgt, vt)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self._bind(stmt.target, self.expr_tainted(stmt.value))
+        elif isinstance(stmt, ast.AugAssign):
+            if self.expr_tainted(stmt.value) or \
+                    self.expr_tainted(stmt.target):
+                self._bind(stmt.target, True)
+        elif isinstance(stmt, ast.For):
+            self._bind(stmt.target, self.expr_tainted(stmt.iter))
+            for s in stmt.body + stmt.orelse:
+                self._sweep(s)
+        elif isinstance(stmt, (ast.While, ast.If)):
+            for s in stmt.body + stmt.orelse:
+                self._sweep(s)
+        elif isinstance(stmt, ast.With):
+            for s in stmt.body:
+                self._sweep(s)
+        elif isinstance(stmt, ast.Try):
+            for s in stmt.body + stmt.orelse + stmt.finalbody:
+                self._sweep(s)
+            for h in stmt.handlers:
+                for s in h.body:
+                    self._sweep(s)
+
+    # -- traversal helper: statements of THIS function only ---------------
+    def walk_own(self):
+        """Yield every AST node belonging to this function, skipping the
+        bodies of nested function definitions/lambdas."""
+        stack: List[ast.AST] = list(self.stmts)
+        while stack:
+            node = stack.pop()
+            yield node
+            if isinstance(node, FuncNode):
+                continue           # nested def/lambda: don't descend
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, FuncNode):
+                    continue
+                stack.append(child)

@@ -11,7 +11,7 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 REQUIRED_DOCS = ["README.md", "docs/architecture.md", "docs/benchmarks.md",
-                 "docs/testing.md"]
+                 "docs/testing.md", "docs/static_analysis.md"]
 
 
 def main() -> int:
@@ -28,11 +28,23 @@ def main() -> int:
                 f"benchmarks/{script.name} is not documented in "
                 "docs/benchmarks.md")
 
+    # every bamlint rule must be documented in docs/static_analysis.md —
+    # the rule table is the user-facing contract for the CI gate
+    sa_doc = ROOT / "docs" / "static_analysis.md"
+    sa_text = sa_doc.read_text() if sa_doc.is_file() else ""
+    sys.path.insert(0, str(ROOT))
+    from tools.bamlint import ALL_RULES
+    for rule in sorted(ALL_RULES):
+        if rule not in sa_text:
+            errors.append(
+                f"bamlint rule {rule} is not documented in "
+                "docs/static_analysis.md")
+
     for err in errors:
         print(f"docs-lint: {err}", file=sys.stderr)
     if not errors:
         print(f"docs-lint: OK ({len(REQUIRED_DOCS)} docs, all benchmarks "
-              "covered)")
+              f"covered, {len(ALL_RULES)} bamlint rules documented)")
     return 1 if errors else 0
 
 
