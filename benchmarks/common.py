@@ -7,6 +7,18 @@ from typing import Callable, List, Tuple
 
 Row = Tuple[str, float, str]     # (name, us_per_call, derived)
 
+# Same guard as tests/conftest.py: on single-core machines XLA's async CPU
+# dispatch can deadlock (the client thread pool is sized by core count, so
+# a dependent dispatch — e.g. a state-threading timing loop — waits on a
+# worker that never frees up).  Synchronous dispatch sidesteps it and, with
+# no parallelism to lose, does not change what the timings measure.
+if os.cpu_count() == 1:
+    try:
+        import jax as _jax
+        _jax.config.update("jax_cpu_enable_async_dispatch", False)
+    except ImportError:
+        pass
+
 # CI smoke mode: BAM_BENCH_SMOKE=1 shrinks every module's problem sizes so
 # the whole suite exercises its code paths in seconds.  The numbers are
 # meaningless in smoke mode — the run only asserts that nothing crashes.
@@ -46,4 +58,25 @@ def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
     t0 = time.perf_counter()
     for _ in range(iters):
         _block(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def time_us_state(step: Callable, state, *, warmup: int = 2,
+                  iters: int = 5) -> float:
+    """Host wall-clock per call for *state-threading* steps, in µs.
+
+    ``step(state) -> state'`` is iterated, feeding each result into the
+    next call.  This is the only timing shape compatible with buffer
+    donation (``*_jit(donate=True)``): re-calling with a previously
+    donated argument — what :func:`time_us` does — would read dead
+    buffers.  Each iteration blocks on its own output, so the clock
+    measures completed rounds, not enqueued dispatch.
+    """
+    for _ in range(warmup):
+        state = step(state)
+    _block(state)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        state = step(state)
+        _block(state)
     return (time.perf_counter() - t0) / iters * 1e6

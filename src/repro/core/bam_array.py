@@ -75,19 +75,26 @@ from repro.core.coalescer import coalesce
 from repro.kernels import ops as K
 from repro.core.metrics import (
     IOMetrics, metrics_accumulate, metrics_delta, metrics_sum,
+    recheck_token_watermark,
 )
 from repro.core.prefetch import PrefetchConfig, readahead_keys
 from repro.core.ssd import ArrayOfSSDs, INTEL_OPTANE_P5800X, device_histogram
 from repro.core.storage import HBMStorage, SimStorage
-from repro.utils import pytree_dataclass, round_up
+from repro.utils import pad_to, pytree_dataclass, round_up
 
 __all__ = ["BamArray", "BamState", "BamKVStore", "PrefetchConfig",
            "TenantCtx", "TenantSpec", "BamRuntime", "RuntimeState",
-           "IORequest", "IOToken"]
+           "IORequest", "IOToken", "DEFAULT_BUCKETS"]
+
+# Wavefront shape buckets for the bucketed submit/wait wrappers: ragged
+# production batch sizes are padded up to the smallest bucket (masked
+# lanes are provably inert), so a sweep of sizes compiles at most
+# ``len(DEFAULT_BUCKETS)`` executables per op instead of one per size.
+DEFAULT_BUCKETS = (64, 256, 1024, 4096)
 
 
 def _cached_jit(cache: Dict[str, Any], counts: Dict[str, int], key: str,
-                make):
+                make, donate_argnums=()):
     """One ``jax.jit`` per op key, cached in ``cache``; jit itself keys
     compiled executables by argument shape/dtype/pytree structure, so
     steady-state ops at fixed shapes never retrace.
@@ -97,6 +104,13 @@ def _cached_jit(cache: Dict[str, Any], counts: Dict[str, int], key: str,
     exact retrace probe (the retrace-regression tests and
     ``benchmarks/hot_path.py`` read it).  Shared by :class:`BamArray` and
     :class:`BamRuntime`.
+
+    ``donate_argnums`` is forwarded to ``jax.jit``: a donating op key
+    (``"submit[donated]"`` …) hands its state argument's buffers to the
+    output, so steady-state rounds update the multi-MB ``CacheState`` /
+    ``QueueState`` in place instead of copying them.  The caller must not
+    touch a donated value afterwards (JAX raises on reuse; bamlint rule
+    BAM106 flags it statically).
     """
     fn = cache.get(key)
     if fn is None:
@@ -107,9 +121,33 @@ def _cached_jit(cache: Dict[str, Any], counts: Dict[str, int], key: str,
             return _raw(*args, **kw)
 
         # this IS the per-instance jit cache the rule points at
-        fn = jax.jit(counted)  # bamlint: ignore[BAM105]
+        fn = jax.jit(counted,  # bamlint: ignore[BAM105]
+                     donate_argnums=tuple(donate_argnums))
         cache[key] = fn
     return fn
+
+
+def _mark_redeemed(token: "IOToken") -> None:
+    """Host-side single-redemption guard for :class:`IOToken`.
+
+    A token's pins are released exactly once, by its wait; redeeming the
+    same token twice would re-run the drain/gather path and over-release
+    the pin refcounts.  The guard lives on the *host* token object (jit
+    bodies only run at trace time), so it is enforced at every eager
+    ``wait`` call and by the ``wait_jit`` wrapper; tokens that are tracers
+    (inside a scan/jit trace) are exempt — their lifecycle is the traced
+    program's own.
+    """
+    if isinstance(token.valid, jax.core.Tracer):
+        return
+    # host-only from here on (tracers returned above); the attribute read
+    # is trace-time Python, not a traced branch.
+    if getattr(token, "_redeemed", False):  # bamlint: ignore[BAM104]
+        raise ValueError(
+            "IOToken has already been redeemed by wait(); a token must be "
+            "waited exactly once (a second wait would over-release its "
+            "cache pins)")
+    object.__setattr__(token, "_redeemed", True)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -217,6 +255,15 @@ class BamArray:
     # hot path: "auto" (Pallas on TPU, jnp-oracle XLA elsewhere),
     # "pallas", or "ref" — threaded to repro.kernels.ops on every op.
     kernel_impl: str = "auto"
+    # Fully traced I/O rounds (default): submit's multi-segment SQ enqueue
+    # runs as one fused pass (queues.enqueue_segments), wait's ring drain
+    # as closed-form accounting (queues.drain_accounting), the cache
+    # bookkeeping as single-pass rebuilds, and a warm-cache wait elides
+    # the host fetch DMA behind lax.cond.  False = the legacy step-by-step
+    # path, kept as the differential oracle (tests pin both bit-identical).
+    fused_rounds: bool = True
+    # Shape buckets for submit_bucketed/wait_bucketed (ascending).
+    buckets: Tuple[int, ...] = DEFAULT_BUCKETS
     # Per-instance jit cache for the op family (read/write/submit/wait/…)
     # plus the trace-count probe the retrace-regression tests read.  Both
     # are identity-bound to this instance's static config — `with_prefetch`
@@ -309,9 +356,10 @@ class BamArray:
                                    _jit_ops={}, _trace_counts={})
 
     # ------------------------------------------------- jit-cached op family
-    def _jit_op(self, name: str, make):
+    def _jit_op(self, name: str, make, donate_argnums=()):
         """See :func:`_cached_jit` (the shared cache + retrace probe)."""
-        return _cached_jit(self._jit_ops, self._trace_counts, name, make)
+        return _cached_jit(self._jit_ops, self._trace_counts, name, make,
+                           donate_argnums=donate_argnums)
 
     @property
     def trace_counts(self) -> Dict[str, int]:
@@ -335,18 +383,126 @@ class BamArray:
             "prefetch", lambda: lambda st, idx, valid=None:
                 self.prefetch(st, idx, valid))
 
-    def submit_jit(self):
+    def submit_jit(self, *, donate: bool = False):
         """Cached ``jax.jit`` of :meth:`submit` ``(st, req) -> (st, tok)``
         — the token API's steady-state entry point.  ``IORequest.kind`` is
         pytree metadata, so read/write/prefetch submissions share the one
-        cached callable and key their compilations by request structure."""
-        return self._jit_op(
-            "submit", lambda: lambda st, req: self.submit(st, req))
+        cached callable and key their compilations by request structure.
 
-    def wait_jit(self):
-        """Cached ``jax.jit`` of :meth:`wait` ``(st, tok) -> (st, vals)``."""
+        ``donate=True`` donates the state argument's buffers to the output
+        (a separate cache key — the non-donating executables are
+        unaffected): steady-state rounds then update ``CacheState`` /
+        ``QueueState`` in place instead of copying.  The caller must not
+        use the passed-in state again (JAX raises ``Array has been
+        deleted``; bamlint BAM106 flags the pattern statically)."""
+        key = "submit[donated]" if donate else "submit"
         return self._jit_op(
-            "wait", lambda: lambda st, tok: self.wait(st, tok))
+            key, lambda: lambda st, req: self.submit(st, req),
+            donate_argnums=(0,) if donate else ())
+
+    def wait_jit(self, *, donate: bool = False, guard: bool = True):
+        """Cached ``jax.jit`` of :meth:`wait` ``(st, tok) -> (st, vals)``.
+
+        ``donate`` as in :meth:`submit_jit`.  ``guard=True`` (default)
+        returns a cached wrapper enforcing the single-redemption contract
+        on the host token before dispatch (see :func:`_mark_redeemed`);
+        ``guard=False`` is for callers that deliberately replay a wait
+        (benchmark timing loops re-time one wait against copies of the
+        same pre-wait state)."""
+        key = "wait[donated]" if donate else "wait"
+        fn = self._jit_op(
+            key, lambda: lambda st, tok: self.wait(st, tok),
+            donate_argnums=(0,) if donate else ())
+        if not guard:
+            return fn
+        wkey = key + "#guard"
+        w = self._jit_ops.get(wkey)
+        if w is None:
+            def guarded(st, tok, _fn=fn):
+                _mark_redeemed(tok)
+                return _fn(st, tok)
+
+            self._jit_ops[wkey] = w = guarded
+        return w
+
+    def submit_wait_jit(self, *, donate: bool = False):
+        """Cached ``jax.jit`` of a whole submit → wait round
+        ``(st, req) -> (st, vals)`` as ONE executable.
+
+        The async pair exists to *overlap* outstanding tokens; a caller
+        that redeems immediately (the synchronous round-trip) would pay a
+        second dispatch plus a full state flatten/unflatten between the
+        two ops for a token that never outlives the call.  Fusing the
+        pair runs the same two passes back to back inside one executable
+        — same values, same metrics, bit-identical to
+        :meth:`submit_jit` + :meth:`wait_jit` (the differential oracle
+        pins it) — and the intermediate token never materialises on the
+        host.  ``donate`` as in :meth:`submit_jit`."""
+        key = "submit_wait[donated]" if donate else "submit_wait"
+
+        def make():
+            def op(st, req):
+                st, tok = self.submit(st, req)
+                return self.wait(st, tok)
+            return op
+
+        return self._jit_op(key, make,
+                            donate_argnums=(0,) if donate else ())
+
+    # --------------------------------------------- bucketed wavefronts
+    def bucket_size(self, n: int) -> int:
+        """Smallest configured bucket >= ``n`` (overflow: next multiple of
+        the largest bucket, so giant wavefronts still reuse executables)."""
+        for b in self.buckets:
+            if n <= b:
+                return int(b)
+        return round_up(n, int(self.buckets[-1]))
+
+    def submit_bucketed(self, st: BamState, req: IORequest, *,
+                        donate: bool = False) -> Tuple[BamState, IOToken]:
+        """Submit through the jit cache with the wavefront padded up to a
+        bucket size, so a ragged sweep of batch sizes compiles at most
+        ``len(self.buckets)`` submit executables instead of one per size.
+
+        Padded lanes are inert by construction (``idx=-1, valid=False``):
+        the coalescer drops them, they probe no tags, pin no slots, take
+        no ring slots and move no metric — the retrace-regression tests
+        pin bucketed execution bit-identical to unbucketed.  Zero-length
+        batches short-circuit *before* padding (no size-0 executable).
+        ``donate`` forwards to :meth:`submit_jit`.
+        """
+        n = int(req.idx.shape[0])
+        if n == 0:
+            return self.submit(st, req)     # eager no-op, nothing traced
+        m = self.bucket_size(n)
+        # Always materialise the lane mask: a request with valid=None has a
+        # different pytree structure than a padded one, and structure keys
+        # the jit cache — one treedef per bucket, not two.
+        valid = req.valid
+        if valid is None:
+            valid = (req.idx >= 0) & (req.idx < self.size)
+        values = None
+        if req.values is not None:
+            values = pad_to(req.values, m, 0)
+        req = IORequest(kind=req.kind, idx=pad_to(req.idx, m, -1),
+                        values=values, valid=pad_to(valid, m, False))
+        st2, tok = self.submit_jit(donate=donate)(st, req)
+        # host-side bookkeeping (not a pytree leaf): wait_bucketed slices
+        # the values back to the caller's length
+        object.__setattr__(tok, "_orig_len", n)
+        return st2, tok
+
+    def wait_bucketed(self, st: BamState, token: IOToken, *,
+                      donate: bool = False) -> Tuple[BamState, jax.Array]:
+        """Redeem a :meth:`submit_bucketed` token, slicing the values back
+        to the original (pre-padding) wavefront length."""
+        if token.ukeys.shape[0] == 0:
+            return self.wait(st, token)     # eager no-op + redeem guard
+        st2, vals = self.wait_jit(donate=donate)(st, token)
+        n = getattr(token, "_orig_len", None)
+        if n is not None:
+            vals = vals[:n]
+        return st2, vals
 
     def _store(self, st: BamState):
         return self.storage if self.storage is not None else st.storage
@@ -399,6 +555,8 @@ class BamArray:
             raise ValueError(f"unknown IORequest kind {kind!r}")
         if kind == "write" and req.values is None:
             raise ValueError("IORequest(kind='write') needs values")
+        if req.idx.shape[0] == 0:
+            return self._submit_empty(st, req)
         idx = req.idx
         valid = req.valid
         if valid is None:
@@ -435,25 +593,40 @@ class BamArray:
         n_hit = jnp.sum(pr.hit.astype(jnp.int32))
         n_pref_hit = jnp.sum(pr.speculative.astype(jnp.int32))
         n_cross = jnp.sum(pr.inflight.astype(jnp.int32))
-        cache2 = C.count_hits(cache2, n_hit)
-        cache2 = C.promote(cache2, jnp.where(pr.speculative, pr.slot, -1))
         miss = uvalid & ~pr.hit
 
         # 3b) pin everything this token touched until its wait, and mark
-        #     granted (not-yet-filled) lines in flight.
+        #     granted (not-yet-filled) lines in flight.  The four
+        #     bookkeeping steps (hit count, promote, pin, in-flight) touch
+        #     disjoint cache fields, so the fused path folds them into one
+        #     CacheState rebuild — bit-identical to the sequential helpers.
         pin_slots = jnp.where(pr.hit, pr.slot,
                               jnp.where(alloc.ok, alloc.slot, -1))
-        cache2 = C.acquire(cache2, pin_slots)
-        cache2 = C.mark_inflight(cache2,
-                                 jnp.where(alloc.ok, alloc.slot, -1))
+        grant_slots = jnp.where(alloc.ok, alloc.slot, -1)
+        promote_slots = jnp.where(pr.speculative, pr.slot, -1)
+        if self.fused_rounds:
+            cache2 = C.grant_bookkeeping(cache2, n_hit, promote_slots,
+                                         pin_slots, grant_slots)
+        else:
+            cache2 = C.count_hits(cache2, n_hit)
+            cache2 = C.promote(cache2, promote_slots)
+            cache2 = C.acquire(cache2, pin_slots)
+            cache2 = C.mark_inflight(cache2, grant_slots)
 
         # 4) evicted dirty lines -> write-back commands + immediate DMA
         #    (the line leaves the cache now, so its bytes must be persisted
         #    now; only the *fetch* side of the op is deferred to wait()).
-        ev_rows = jnp.where(alloc.ok, alloc.slot, 0)
-        ev_lines = cache2.data[ev_rows]
         wb = alloc.ok & alloc.evicted_dirty & (alloc.evicted_key >= 0)
         wb_keys = jnp.where(wb, alloc.evicted_key, -1)
+        # Only the dirty-evicted lanes' bytes ever reach storage (the DMA
+        # drops key -1 lanes), so the line gather is masked by ``wb`` and
+        # skipped outright when the wavefront evicted nothing dirty — the
+        # warm-cache steady state never touches the line store here.
+        ev_lines = jax.lax.cond(
+            jnp.any(wb),
+            lambda: cache2.data[jnp.where(wb, alloc.slot, 0)],
+            lambda: jnp.zeros((ukeys.shape[0], cache2.line_elems),
+                              cache2.data.dtype))
 
         # 4b) readahead (read ops): extrapolate the wavefront's stride and
         #     speculatively claim the predicted lines — enqueued in the
@@ -500,24 +673,45 @@ class BamArray:
         #    The rings are NOT drained here — that is wait()'s job, so
         #    commands from several outstanding tokens genuinely coexist and
         #    the queues fill toward the Little's-law depth.
-        qs2, rec_r = Q.enqueue(st.queues, jnp.where(miss, ukeys, -1),
-                               dst=alloc.slot, tenant=ctx.tenant)
-        qs2, rec_w = Q.enqueue(qs2, wb_keys,
-                               is_write=jnp.ones_like(wb), tenant=ctx.tenant)
-        n_doorbells = rec_r.n_doorbells + rec_w.n_doorbells
-        n_dropped = rec_r.n_dropped + rec_w.n_dropped
-        dev_reads_tok = device_histogram(ukeys, nd, miss, sb)
-        dev_writes_tok = device_histogram(wb_keys, nd, stripe_blocks=sb)
-        drop_reads = device_histogram(jnp.where(miss, ukeys, -1), nd,
-                                      ~rec_r.accepted, sb)
-        drop_writes = device_histogram(wb_keys, nd, ~rec_w.accepted, sb)
+        read_keys = jnp.where(miss, ukeys, -1)
+        segs = [(read_keys, alloc.slot, None, None, Q.PRIO_DEMAND),
+                (wb_keys, None, jnp.ones_like(wb), None, Q.PRIO_DEMAND)]
         if kind == "write":
             # Bypassed lines (no slot granted) are written through at wait;
             # their commands ride the rings like every other write.
             byp = miss & ~alloc.ok
             bt_keys = jnp.where(byp, ukeys, -1)
-            qs2, rec_bt = Q.enqueue(qs2, bt_keys, is_write=jnp.ones_like(byp),
-                                    tenant=ctx.tenant)
+            segs.append((bt_keys, None, jnp.ones_like(byp), None,
+                         Q.PRIO_DEMAND))
+        if ra_on:
+            segs.append((ra_wb_keys, None, jnp.ones_like(ra_wb), None,
+                         Q.PRIO_DEMAND))
+            segs.append((ra_keys, ra_alloc.slot, None, None,
+                         Q.PRIO_READAHEAD))
+        if self.fused_rounds:
+            # one fused pass: one combined scatter per SQ ring field, one
+            # QueueState rebuild (bit-identical to the sequential enqueues
+            # — the differential oracle pins it)
+            qs2, recs = Q.enqueue_segments(st.queues, segs,
+                                           tenant=ctx.tenant,
+                                           impl=self.kernel_impl)
+        else:
+            qs2, recs = st.queues, []
+            # static unroll: segs has trace-time-constant length (2-4)
+            for keys_s, dst_s, w_s, v_s, p_s in segs:  # bamlint: ignore[BAM104]
+                qs2, rec = Q.enqueue(qs2, keys_s, dst=dst_s, is_write=w_s,
+                                     valid=v_s, prio=p_s, tenant=ctx.tenant)
+                recs.append(rec)
+        it = iter(recs)
+        rec_r, rec_w = next(it), next(it)
+        n_doorbells = rec_r.n_doorbells + rec_w.n_doorbells
+        n_dropped = rec_r.n_dropped + rec_w.n_dropped
+        dev_reads_tok = device_histogram(ukeys, nd, miss, sb)
+        dev_writes_tok = device_histogram(wb_keys, nd, stripe_blocks=sb)
+        drop_reads = device_histogram(read_keys, nd, ~rec_r.accepted, sb)
+        drop_writes = device_histogram(wb_keys, nd, ~rec_w.accepted, sb)
+        if kind == "write":
+            rec_bt = next(it)
             n_doorbells = n_doorbells + rec_bt.n_doorbells
             n_dropped = n_dropped + rec_bt.n_dropped
             dev_writes_tok = dev_writes_tok + device_histogram(
@@ -525,11 +719,7 @@ class BamArray:
             drop_writes = drop_writes + device_histogram(
                 bt_keys, nd, ~rec_bt.accepted, sb)
         if ra_on:
-            qs2, rec_rw = Q.enqueue(qs2, ra_wb_keys,
-                                    is_write=jnp.ones_like(ra_wb),
-                                    tenant=ctx.tenant)
-            qs2, rec_ra = Q.enqueue(qs2, ra_keys, dst=ra_alloc.slot,
-                                    prio=Q.PRIO_READAHEAD, tenant=ctx.tenant)
+            rec_rw, rec_ra = next(it), next(it)
             n_doorbells = n_doorbells + rec_rw.n_doorbells + rec_ra.n_doorbells
             n_dropped = n_dropped + rec_rw.n_dropped + rec_ra.n_dropped
             dev_reads_tok = dev_reads_tok + device_histogram(
@@ -604,6 +794,26 @@ class BamArray:
         return BamState(cache=cache2, queues=qs2, metrics=metrics,
                         storage=new_storage), token
 
+    def _submit_empty(self, st: BamState, req: IORequest
+                      ) -> Tuple[BamState, IOToken]:
+        """Zero-length wavefront (an exhausted BFS frontier, a drained
+        producer): no commands, no cache traffic, no metrics — the state
+        passes through untouched and a zero-shaped token keeps the
+        submit/wait pairing uniform.  Guarded *before* any tracing or
+        bucket padding so no degenerate size-0 executable is ever built.
+        """
+        nd = self.ssd.n_devices
+        z = jnp.zeros((0,), jnp.int32)
+        zh = jnp.zeros((nd,), jnp.int32)
+        token = IOToken(
+            kind=req.kind, valid=jnp.zeros((0,), bool), off=z, inverse=z,
+            ukeys=jnp.full((0,), -1, jnp.int32),
+            pin_slots=jnp.full((0,), -1, jnp.int32),
+            values=req.values if req.kind == "write" else None,
+            ra_keys=None, dev_reads=zh, dev_writes=zh,
+            drop_dev_reads=zh, drop_dev_writes=zh)
+        return st, token
+
     def _submit_prefetch(self, st: BamState, co, off, valid
                          ) -> Tuple[BamState, IOToken]:
         """Prefetch submission: speculative insert-without-pin through the
@@ -633,10 +843,17 @@ class BamArray:
         cache1 = C.mark_inflight(cache1,
                                  jnp.where(alloc.ok, alloc.slot, -1))
 
-        qs2, rec_w = Q.enqueue(st.queues, wb_keys, is_write=jnp.ones_like(wb),
-                               tenant=ctx.tenant)
-        qs2, rec_r = Q.enqueue(qs2, keys, dst=alloc.slot,
-                               prio=Q.PRIO_READAHEAD, tenant=ctx.tenant)
+        segs = [(wb_keys, None, jnp.ones_like(wb), None, Q.PRIO_DEMAND),
+                (keys, alloc.slot, None, None, Q.PRIO_READAHEAD)]
+        if self.fused_rounds:
+            qs2, (rec_w, rec_r) = Q.enqueue_segments(
+                st.queues, segs, tenant=ctx.tenant, impl=self.kernel_impl)
+        else:
+            qs2, rec_w = Q.enqueue(st.queues, wb_keys,
+                                   is_write=jnp.ones_like(wb),
+                                   tenant=ctx.tenant)
+            qs2, rec_r = Q.enqueue(qs2, keys, dst=alloc.slot,
+                                   prio=Q.PRIO_READAHEAD, tenant=ctx.tenant)
         depth_now = Q.in_flight(qs2)
         depth_dev = Q.in_flight_per_device(qs2)
 
@@ -681,6 +898,26 @@ class BamArray:
         return BamState(cache=cache1, queues=qs2, metrics=metrics,
                         storage=new_storage), token
 
+    def _fetch_gated(self, store, keys: jax.Array,
+                     need: jax.Array) -> jax.Array:
+        """Fetch ``keys`` (``-1`` lanes skipped), eliding the host DMA
+        round-trip entirely when *no* lane needs one.
+
+        ``SimStorage.fetch_blocks`` of an all-``-1`` wavefront returns
+        zeros, so the skip branch is lane-wise value-identical to the
+        fetch — and ``lax.cond`` executes exactly one branch at runtime,
+        so a warm-cache wait never pays the ``pure_callback`` host
+        round-trip.  Only the sim backend's *fetch* may be gated: its
+        dirty write-back uses an **ordered** ``io_callback`` (not legal
+        under ``cond``), and the HBM backend's fetch is an in-graph gather
+        with nothing to elide.
+        """
+        if not (self.fused_rounds and isinstance(store, SimStorage)):
+            return store.fetch_blocks(keys)
+        zeros = lambda k: jnp.zeros((k.shape[0], self.block_elems),
+                                    store.dtype)
+        return jax.lax.cond(jnp.any(need), store.fetch_blocks, zeros, keys)
+
     def wait(self, st: BamState, token: IOToken
              ) -> Tuple[BamState, jax.Array]:
         """Complete a pending token: drain, fetch, fill, gather, unpin.
@@ -700,9 +937,16 @@ class BamArray:
 
         Returns ``(state', values)``: the gathered elements for a read
         token, the (masked) written values for a write token, zeros for a
-        prefetch token.
+        prefetch token.  A token must be redeemed exactly once: a second
+        ``wait`` of the same (host) token raises ``ValueError`` instead of
+        silently over-releasing its cache pins.  A zero-shaped token (from
+        an empty submit) completes as a no-op.
         """
+        _mark_redeemed(token)
         self._check_channels(st)
+        if token.ukeys.shape[0] == 0:
+            # empty token: nothing was enqueued, pinned or fetched
+            return st, jnp.zeros((0,), self.dtype)
         ctx = self.tenant_ctx
         nd = self.ssd.n_devices
         sb = self.ssd.stripe_blocks
@@ -714,11 +958,20 @@ class BamArray:
         # 1) drain the rings and pick the device-time charge basis: the
         #    drained batch (plus this token's ring-rejected commands, which
         #    are still served read/write-through) — or, under deferred
-        #    drain, this token's own commands.
+        #    drain, this token's own commands.  The fused path drains with
+        #    closed-form accounting (queues.drain_accounting): wait only
+        #    consumes order-free reductions of the completion stream, so
+        #    the WFQ arbitration sort and the per-command materialisation
+        #    are skipped (BamRuntime.drain keeps service_all — it *is* the
+        #    observable arbitration order).
         if self.defer_drain:
             qs2 = st.queues
             reads_charge = token.dev_reads
             writes_charge = token.dev_writes
+        elif self.fused_rounds:
+            qs2, dr = Q.drain_accounting(st.queues, impl=self.kernel_impl)
+            reads_charge = dr.reads_dev + token.drop_dev_reads
+            writes_charge = dr.writes_dev + token.drop_dev_writes
         else:
             qs2, comps = Q.service_all(st.queues)
             cvalid = comps.valid
@@ -748,9 +1001,13 @@ class BamArray:
         #    tokens: whoever waits first fills; later waiters see a filled
         #    resident line and never clobber newer data with a re-fetch.
         store = self._store(st)
-        lines = store.fetch_blocks(jnp.where(need, ukeys, -1))
-        cache1 = C.fill(st.cache, pr2.slot, pend, lines)
-        cache1 = C.clear_inflight(cache1, jnp.where(pend, pr2.slot, -1))
+        lines = self._fetch_gated(store, jnp.where(need, ukeys, -1), need)
+        if self.fused_rounds:
+            cache1 = C.fill_complete(st.cache, pr2.slot, pend, lines)
+        else:
+            cache1 = C.fill(st.cache, pr2.slot, pend, lines)
+            cache1 = C.clear_inflight(cache1,
+                                      jnp.where(pend, pr2.slot, -1))
         n_fetch = jnp.sum(need.astype(jnp.int32))
         new_storage = st.storage
 
@@ -760,10 +1017,15 @@ class BamArray:
             ra_pr = C.probe(cache1, ra, ra >= 0, tenant=ctx.tenant,
                             impl=self.kernel_impl)
             ra_pend = ra_pr.hit & ra_pr.inflight
-            lines_ra = store.fetch_blocks(jnp.where(ra_pend, ra, -1))
-            cache1 = C.fill(cache1, ra_pr.slot, ra_pend, lines_ra)
-            cache1 = C.clear_inflight(cache1,
-                                      jnp.where(ra_pend, ra_pr.slot, -1))
+            lines_ra = self._fetch_gated(store, jnp.where(ra_pend, ra, -1),
+                                         ra_pend)
+            if self.fused_rounds:
+                cache1 = C.fill_complete(cache1, ra_pr.slot, ra_pend,
+                                         lines_ra)
+            else:
+                cache1 = C.fill(cache1, ra_pr.slot, ra_pend, lines_ra)
+                cache1 = C.clear_inflight(
+                    cache1, jnp.where(ra_pend, ra_pr.slot, -1))
             n_fetch = n_fetch + jnp.sum(ra_pend.astype(jnp.int32))
 
         # 4) op-specific completion.
@@ -931,6 +1193,11 @@ class BamArray:
             qs2 = qs1
             reads_charge = jnp.zeros((nd,), jnp.int32)
             writes_charge = device_histogram(keys, nd, stripe_blocks=sb)
+        elif self.fused_rounds:
+            qs2, dr = Q.drain_accounting(qs1, impl=self.kernel_impl)
+            reads_charge = dr.reads_dev
+            writes_charge = dr.writes_dev \
+                + device_histogram(keys, nd, ~rec_w.accepted, sb)
         else:
             qs2, comps = Q.service_all(qs1)
             cvalid = comps.valid
@@ -961,6 +1228,10 @@ class BamArray:
                                       depth_dev.astype(jnp.int32)),
             **self._charge_wait(mt, st.queues, reads_charge, writes_charge),
         )
+        # A flush can retire pending tokens' commands mid-window; re-check
+        # the in-flight-token watermark so interleaved flush+wait sequences
+        # never under-report it.
+        metrics = recheck_token_watermark(metrics)
         return BamState(cache=cache, queues=qs2, metrics=metrics,
                         storage=new_storage)
 
@@ -1317,9 +1588,14 @@ class BamRuntime:
         tm[tid] = st.metrics
         stores = list(rst.storages)
         stores[tid] = st.storage
+        # The global in-flight window is the SUM of the tenants' windows,
+        # but accumulate only maxes the per-tenant watermarks — two tenants
+        # each holding one token would report a global watermark of 1.
+        # Re-check against the summed window after every fold.
+        metrics = recheck_token_watermark(
+            metrics_accumulate(rst.metrics, delta))
         return RuntimeState(
-            cache=st.cache, queues=st.queues,
-            metrics=metrics_accumulate(rst.metrics, delta),
+            cache=st.cache, queues=st.queues, metrics=metrics,
             tenant_metrics=tuple(tm), storages=tuple(stores))
 
     # ------------------------------------------------------------------ ops
@@ -1330,9 +1606,10 @@ class BamRuntime:
                                            idx, valid)
         return vals, self.absorb(rst, name, st)
 
-    def _jit_op(self, key: str, make):
+    def _jit_op(self, key: str, make, donate_argnums=()):
         """Per-(op, tenant) jit cache — see :func:`_cached_jit`."""
-        return _cached_jit(self._jit_ops, self._trace_counts, key, make)
+        return _cached_jit(self._jit_ops, self._trace_counts, key, make,
+                           donate_argnums=donate_argnums)
 
     @property
     def trace_counts(self) -> Dict[str, int]:
@@ -1352,19 +1629,36 @@ class BamRuntime:
             lambda: lambda rst, idx, values: self.write(rst, name, idx,
                                                         values))
 
-    def submit_jit(self, name: str):
+    def submit_jit(self, name: str, *, donate: bool = False):
         """Cached jit of :meth:`submit` for one tenant ``(rst, req) ->
-        (rst, token)``."""
+        (rst, token)``.  ``donate=True`` donates the shared state's
+        buffers to the output (separate cache key; see
+        :meth:`BamArray.submit_jit` for the reuse contract)."""
+        key = f"submit:{name}" + ("[donated]" if donate else "")
         return self._jit_op(
-            f"submit:{name}",
-            lambda: lambda rst, req: self.submit(rst, name, req))
+            key, lambda: lambda rst, req: self.submit(rst, name, req),
+            donate_argnums=(0,) if donate else ())
 
-    def wait_jit(self, name: str):
+    def wait_jit(self, name: str, *, donate: bool = False,
+                 guard: bool = True):
         """Cached jit of :meth:`wait` for one tenant ``(rst, token) ->
-        (rst, values)``."""
-        return self._jit_op(
-            f"wait:{name}",
-            lambda: lambda rst, tok: self.wait(rst, name, tok))
+        (rst, values)``.  ``donate``/``guard`` as in
+        :meth:`BamArray.wait_jit`."""
+        key = f"wait:{name}" + ("[donated]" if donate else "")
+        fn = self._jit_op(
+            key, lambda: lambda rst, tok: self.wait(rst, name, tok),
+            donate_argnums=(0,) if donate else ())
+        if not guard:
+            return fn
+        wkey = key + "#guard"
+        w = self._jit_ops.get(wkey)
+        if w is None:
+            def guarded(rst, tok, _fn=fn):
+                _mark_redeemed(tok)
+                return _fn(rst, tok)
+
+            self._jit_ops[wkey] = w = guarded
+        return w
 
     def write(self, rst: RuntimeState, name: str, idx: jax.Array,
               values: jax.Array, valid: jax.Array | None = None

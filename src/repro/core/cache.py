@@ -68,7 +68,8 @@ from repro.utils import mix_hash, pytree_dataclass, segment_rank
 __all__ = [
     "CacheState", "make_cache", "probe", "allocate", "probe_allocate",
     "fill", "acquire", "release", "pin_keys", "mark_dirty", "promote",
-    "mark_inflight", "clear_inflight",
+    "mark_inflight", "clear_inflight", "grant_bookkeeping",
+    "fill_complete",
 ]
 
 
@@ -167,24 +168,38 @@ def _apply_grants(cache: CacheState, keys: jax.Array, sets: jax.Array,
     disambiguation, so scatter order cannot matter.
     """
     ways = cache.ways
-    s_i = jnp.where(ok, sets, cache.num_sets)
-    w_i = jnp.where(ok, way, 0)
-    tags = cache.tags.at[s_i, w_i].set(keys, mode="drop")
-    owner = cache.owner.at[s_i, w_i].set(jnp.int32(tenant), mode="drop")
-    dirty = cache.dirty.at[s_i, w_i].set(False, mode="drop")
-    spec = cache.speculative.at[s_i, w_i].set(speculative, mode="drop")
-    # A granted line starts life *filled from the grantor's perspective*:
-    # the async submit path re-marks it in flight right after allocation.
-    infl = cache.inflight.at[s_i, w_i].set(False, mode="drop")
 
-    # Advance each touched set's hand past the granted way's clock
-    # position (the victim select may run in class-sorted order, so the
-    # position is recovered from the way index, not the sweep position).
-    hand = cache.clock_hand[sets]
-    clock_pos = (way - hand) % ways
-    adv = jnp.zeros((cache.num_sets,), jnp.int32).at[s_i].max(
-        clock_pos + 1, mode="drop")
-    clock_hand = (cache.clock_hand + adv) % ways
+    def _commit():
+        s_i = jnp.where(ok, sets, cache.num_sets)
+        w_i = jnp.where(ok, way, 0)
+        tags = cache.tags.at[s_i, w_i].set(keys, mode="drop")
+        owner = cache.owner.at[s_i, w_i].set(jnp.int32(tenant), mode="drop")
+        dirty = cache.dirty.at[s_i, w_i].set(False, mode="drop")
+        spec = cache.speculative.at[s_i, w_i].set(speculative, mode="drop")
+        # A granted line starts life *filled from the grantor's
+        # perspective*: the async submit path re-marks it in flight right
+        # after allocation.
+        infl = cache.inflight.at[s_i, w_i].set(False, mode="drop")
+
+        # Advance each touched set's hand past the granted way's clock
+        # position (the victim select may run in class-sorted order, so the
+        # position is recovered from the way index, not the sweep
+        # position).
+        hand = cache.clock_hand[sets]
+        clock_pos = (way - hand) % ways
+        adv = jnp.zeros((cache.num_sets,), jnp.int32).at[s_i].max(
+            clock_pos + 1, mode="drop")
+        return (tags, owner, dirty, spec, infl,
+                (cache.clock_hand + adv) % ways)
+
+    def _no_grants():
+        return (cache.tags, cache.owner, cache.dirty, cache.speculative,
+                cache.inflight, cache.clock_hand)
+
+    # Hit fast path: a wavefront with no grants drops every update, so the
+    # directory passes through bit-identical — skip the commit scatters.
+    tags, owner, dirty, spec, infl, clock_hand = jax.lax.cond(
+        jnp.any(ok), _commit, _no_grants)
 
     n_ok = jnp.sum(ok.astype(jnp.int32))
     # Speculative fills are not demand traffic: keep the miss/bypass
@@ -370,10 +385,17 @@ def probe_allocate(cache: CacheState, keys: jax.Array,
 
 def fill(cache: CacheState, slots: jax.Array, ok: jax.Array,
          lines: jax.Array) -> CacheState:
-    """DMA-completion analogue: scatter fetched lines into granted slots."""
-    idx = jnp.where(ok, slots, cache.num_lines)          # OOB -> dropped
-    data = cache.data.at[idx].set(lines.astype(cache.data.dtype),
-                                  mode="drop")
+    """DMA-completion analogue: scatter fetched lines into granted slots.
+
+    A completion wave with nothing pending (every lane already resident —
+    the warm-cache steady state) drops every update, so the line store
+    passes through bit-identical and the full-width data scatter is
+    skipped."""
+    def _commit():
+        idx = jnp.where(ok, slots, cache.num_lines)      # OOB -> dropped
+        return cache.data.at[idx].set(lines.astype(cache.data.dtype),
+                                      mode="drop")
+    data = jax.lax.cond(jnp.any(ok), _commit, lambda: cache.data)
     return _replace_data(cache, data=data)
 
 
@@ -444,6 +466,56 @@ def clear_inflight(cache: CacheState, slots: jax.Array) -> CacheState:
     s = s.at[idx].set(False, mode="drop")
     return _replace_data(cache,
                          inflight=s.reshape(cache.num_sets, cache.ways))
+
+
+def grant_bookkeeping(cache: CacheState, n_hits: jax.Array,
+                      promote_slots: jax.Array, pin_slots: jax.Array,
+                      inflight_slots: jax.Array) -> CacheState:
+    """Fused submission-side bookkeeping: :func:`count_hits` +
+    :func:`promote` + :func:`acquire` + :func:`mark_inflight` in ONE
+    :class:`CacheState` construction.
+
+    The four steps touch disjoint fields (``hits``, ``speculative``,
+    ``refcount``, ``inflight``), so the fusion is bit-identical to the
+    sequential helpers in any order — this is the traced-submit hot path
+    trimming three full pytree rebuilds per wavefront.
+    """
+    ok_p = promote_slots >= 0
+    spec = cache.speculative.reshape(-1).at[
+        jnp.where(ok_p, promote_slots, cache.num_lines)].set(
+        False, mode="drop")
+    ok_a = pin_slots >= 0
+    rc = cache.refcount.reshape(-1).at[
+        jnp.where(ok_a, pin_slots, 0)].add(ok_a.astype(jnp.int32))
+    ok_i = inflight_slots >= 0
+    infl = cache.inflight.reshape(-1).at[
+        jnp.where(ok_i, inflight_slots, cache.num_lines)].set(
+        True, mode="drop")
+    shape2 = (cache.num_sets, cache.ways)
+    return _replace_data(
+        cache, hits=cache.hits + n_hits,
+        speculative=spec.reshape(shape2), refcount=rc.reshape(shape2),
+        inflight=infl.reshape(shape2))
+
+
+def fill_complete(cache: CacheState, slots: jax.Array, ok: jax.Array,
+                  lines: jax.Array) -> CacheState:
+    """Fused completion: :func:`fill` + :func:`clear_inflight` on the same
+    slots in ONE :class:`CacheState` construction (``data`` and
+    ``inflight`` are disjoint fields — bit-identical to the pair).
+
+    Gated like :func:`fill`: a wait with nothing pending (warm-cache
+    steady state) skips the full-width data scatter entirely."""
+    def _commit():
+        idx = jnp.where(ok, slots, cache.num_lines)      # OOB -> dropped
+        data = cache.data.at[idx].set(lines.astype(cache.data.dtype),
+                                      mode="drop")
+        infl = cache.inflight.reshape(-1).at[idx].set(False, mode="drop")
+        return data, infl.reshape(cache.num_sets, cache.ways)
+
+    data, infl = jax.lax.cond(
+        jnp.any(ok), _commit, lambda: (cache.data, cache.inflight))
+    return _replace_data(cache, data=data, inflight=infl)
 
 
 def mark_dirty(cache: CacheState, slots: jax.Array) -> CacheState:

@@ -45,6 +45,16 @@ def coalesce(keys: jax.Array, valid: jax.Array | None = None) -> CoalesceResult:
         request).  Defaults to ``keys >= 0``.
     """
     n = keys.shape[0]
+    if n == 0:
+        # Empty wavefront (e.g. an exhausted BFS frontier): every concat /
+        # trailing-index trick below assumes n >= 1, so short-circuit with
+        # the fixed-shape empty result.
+        return CoalesceResult(
+            unique_keys=jnp.full((0,), -1, jnp.int32),
+            num_unique=jnp.zeros((), jnp.int32),
+            inverse_idx=jnp.zeros((0,), jnp.int32),
+            leader_mask=jnp.zeros((0,), bool),
+        )
     if valid is None:
         valid = keys >= 0
     else:

@@ -16,6 +16,8 @@ active.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -188,3 +190,18 @@ def metrics_sum(parts) -> IOMetrics:
     for p in parts[1:]:
         acc = metrics_accumulate(acc, p)
     return acc
+
+
+def recheck_token_watermark(mt: IOMetrics) -> IOMetrics:
+    """Re-arm ``max_tokens_in_flight`` against the *current* window.
+
+    Every path that changes ``tokens_in_flight`` must re-check the
+    watermark, not just ``submit``: a ``flush()`` that retires tokens
+    mid-window, or a shared-runtime ``absorb`` that sums several tenants'
+    windows, can otherwise leave the high-water mark below a level the
+    window actually reached.
+    """
+    return dataclasses.replace(
+        mt, max_tokens_in_flight=jnp.maximum(
+            mt.max_tokens_in_flight,
+            mt.tokens_in_flight.astype(jnp.int32)))

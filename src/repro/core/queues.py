@@ -69,10 +69,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.ssd import device_of_block
+from repro.kernels import ops as _ops
 from repro.utils import pytree_dataclass
 
-__all__ = ["QueueState", "make_queues", "enqueue", "service_all",
-           "SubmitReceipt", "PRIO_DEMAND", "PRIO_READAHEAD",
+__all__ = ["QueueState", "make_queues", "enqueue", "enqueue_segments",
+           "service_all", "drain_accounting", "SubmitReceipt",
+           "DrainReceipt", "PRIO_DEMAND", "PRIO_READAHEAD",
            "in_flight", "in_flight_per_device", "in_flight_per_tenant"]
 
 PRIO_DEMAND = 0      # demand reads and write-backs
@@ -310,6 +312,102 @@ def enqueue(
     return qs2, receipt
 
 
+def enqueue_segments(
+    qs: QueueState,
+    segments,
+    tenant: int = 0,
+    impl: str = "auto",
+) -> Tuple[QueueState, list]:
+    """Submit several command segments of one tenant in a single fused pass.
+
+    ``segments`` is a sequence of ``(keys, dst, is_write, valid, prio)``
+    tuples in issue order (``None`` entries default exactly as in
+    :func:`enqueue`); the result is bit-identical to calling
+    :func:`enqueue` once per segment — same routing, same per-segment
+    doorbells, same round-robin pointer advancement, same receipts — but
+    the five SQ ring fields are each written by ONE combined scatter and
+    the counter updates are folded into one :class:`QueueState`
+    construction (the kernel-dispatch-layer submission hot path; see
+    :func:`repro.kernels.ref.sq_enqueue_ref`).
+
+    Returns ``(qs', receipts)`` with one :class:`SubmitReceipt` per
+    segment.
+    """
+    nq, depth, nd = qs.num_queues, qs.depth, qs.n_devices
+    gsize = qs.group_size
+    if not 0 <= tenant < qs.n_tenants:
+        raise ValueError(
+            f"tenant {tenant} out of range for n_tenants={qs.n_tenants}")
+    keys_l, dst_l, w_l, valid_l, prio_l = [], [], [], [], []
+    bounds = []
+    off = 0
+    # static unroll: the segment list has trace-time-constant length
+    for seg in segments:  # bamlint: ignore[BAM104]
+        keys, dst, is_write, valid, prio = seg
+        n = keys.shape[0]
+        if valid is None:
+            valid = keys >= 0
+        else:
+            valid = valid & (keys >= 0)
+        if dst is None:
+            dst = jnp.full((n,), -1, jnp.int32)
+        if is_write is None:
+            is_write = jnp.zeros((n,), bool)
+        prio = jnp.broadcast_to(jnp.asarray(prio, jnp.int32), (n,))
+        keys_l.append(keys)
+        dst_l.append(dst)
+        w_l.append(is_write)
+        valid_l.append(valid)
+        prio_l.append(prio)
+        bounds.append((off, off + n))
+        off += n
+    (sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant, sq_tail, rr_ptr,
+     queue, vslot, accepted, per_seg) = _ops.sq_enqueue(
+        qs.sq_key, qs.sq_dst, qs.sq_is_write, qs.sq_prio, qs.sq_tenant,
+        qs.sq_tail, qs.sq_head, qs.rr_ptr,
+        jnp.concatenate(keys_l), jnp.concatenate(dst_l),
+        jnp.concatenate(w_l), jnp.concatenate(prio_l),
+        jnp.concatenate(valid_l),
+        seg_bounds=tuple(bounds), n_devices=nd,
+        stripe_blocks=qs.stripe_blocks, tenant=tenant, impl=impl)
+
+    receipts = []
+    for i, (s, e) in enumerate(bounds):
+        acc = accepted[s:e]
+        receipts.append(SubmitReceipt(
+            queue=jnp.where(acc, queue[s:e], -1).astype(jnp.int32),
+            vslot=jnp.where(acc, vslot[s:e], -1).astype(jnp.int32),
+            accepted=acc,
+            n_accepted=per_seg["n_accepted"][i],
+            n_dropped=per_seg["n_dropped"][i],
+            n_doorbells=per_seg["n_doorbells"][i],
+        ))
+    t_i = jnp.int32(tenant)
+    qs2 = QueueState(
+        num_queues=nq, depth=depth, n_devices=nd,
+        stripe_blocks=qs.stripe_blocks,
+        n_tenants=qs.n_tenants, tenant_weights=qs.tenant_weights,
+        sq_key=sq_key, sq_dst=sq_dst, sq_is_write=sq_is_write,
+        sq_prio=sq_prio, sq_tenant=sq_tenant,
+        sq_tail=sq_tail, sq_head=qs.sq_head,
+        rr_ptr=rr_ptr,
+        ticket_total=qs.ticket_total + jnp.sum(per_seg["n_tickets"]),
+        doorbells=qs.doorbells + jnp.sum(per_seg["n_doorbells"]),
+        completions=qs.completions,
+        dropped=qs.dropped + jnp.sum(per_seg["n_dropped"]),
+        dev_dropped=qs.dev_dropped + jnp.sum(per_seg["dev_dropped"], axis=0),
+        dev_enqueued=qs.dev_enqueued + jnp.sum(per_seg["dev_accepted"],
+                                               axis=0),
+        dev_completed=qs.dev_completed,
+        tenant_enqueued=qs.tenant_enqueued.at[t_i].add(
+            jnp.sum(per_seg["n_accepted"])),
+        tenant_dropped=qs.tenant_dropped.at[t_i].add(
+            jnp.sum(per_seg["n_dropped"])),
+        tenant_completed=qs.tenant_completed,
+    )
+    return qs2, receipts
+
+
 @pytree_dataclass
 class Completions:
     """Drained commands; filter with ``valid``, order by position.
@@ -445,6 +543,75 @@ def service_all(qs: QueueState) -> Tuple[QueueState, Completions]:
         tenant_completed=qs.tenant_completed + count_tenant,
     )
     return qs2, comps
+
+
+@pytree_dataclass
+class DrainReceipt:
+    """Order-free accounting of one full ring drain.
+
+    What :meth:`BamArray.wait` actually consumes from a drain: per-device
+    read/write completion counts (the device-time charge basis) and the
+    global/per-device/per-tenant completion totals.  Unlike
+    :class:`Completions` no per-command stream is materialised and no
+    arbitration sort runs — every field is a reduction whose value is
+    independent of the WFQ/priority completion *order*.
+    """
+
+    count: jax.Array         # () int32 — commands drained
+    count_dev: jax.Array     # (n_devices,) int32
+    count_tenant: jax.Array  # (n_tenants,) int32
+    reads_dev: jax.Array     # (n_devices,) int32 — read commands per device
+    writes_dev: jax.Array    # (n_devices,) int32 — write commands per device
+
+
+def drain_accounting(qs: QueueState, impl: str = "auto"
+                     ) -> Tuple[QueueState, DrainReceipt]:
+    """Drain every pending SQ entry, returning accounting only.
+
+    The fused-wait counterpart of :func:`service_all`: the post-drain
+    :class:`QueueState` is bit-identical (cleared rings, heads advanced to
+    tails, CQ doorbell, completion counters), but the completion *stream*
+    is never materialised — callers that only charge device time and
+    counters (``BamArray.wait``/``flush``) don't pay the WFQ lexsort or
+    the 2×(num_queues·depth)-lane histograms.  Callers that need the
+    arbitration order itself (:meth:`BamRuntime.drain`) keep
+    :func:`service_all`.
+
+    Per-device read/write counts rely on the enqueue routing invariant:
+    every command in device *d*'s ring group has
+    ``device_of_block(key) == d``, so group-reshaped sums equal the
+    key-striped histograms over the drained stream.
+    """
+    count, count_dev, count_tenant, reads_dev, writes_dev = _ops.wfq_drain(
+        qs.sq_key, qs.sq_is_write, qs.sq_tenant,
+        n_devices=qs.n_devices, n_tenants=qs.n_tenants, impl=impl)
+    qs2 = QueueState(
+        num_queues=qs.num_queues, depth=qs.depth, n_devices=qs.n_devices,
+        stripe_blocks=qs.stripe_blocks,
+        n_tenants=qs.n_tenants, tenant_weights=qs.tenant_weights,
+        sq_key=jnp.full_like(qs.sq_key, -1),
+        sq_dst=jnp.full_like(qs.sq_dst, -1),
+        sq_is_write=jnp.zeros_like(qs.sq_is_write),
+        sq_prio=jnp.zeros_like(qs.sq_prio),
+        sq_tenant=jnp.zeros_like(qs.sq_tenant),
+        sq_tail=qs.sq_tail,
+        sq_head=qs.sq_tail,           # all consumed
+        rr_ptr=qs.rr_ptr,
+        ticket_total=qs.ticket_total,
+        doorbells=qs.doorbells + jnp.where(count > 0, jnp.int32(1),
+                                           jnp.int32(0)),  # CQ doorbell
+        completions=qs.completions + count,
+        dropped=qs.dropped,
+        dev_dropped=qs.dev_dropped,
+        dev_enqueued=qs.dev_enqueued,
+        dev_completed=qs.dev_completed + count_dev,
+        tenant_enqueued=qs.tenant_enqueued,
+        tenant_dropped=qs.tenant_dropped,
+        tenant_completed=qs.tenant_completed + count_tenant,
+    )
+    return qs2, DrainReceipt(count=count, count_dev=count_dev,
+                             count_tenant=count_tenant,
+                             reads_dev=reads_dev, writes_dev=writes_dev)
 
 
 def in_flight(qs: QueueState) -> jax.Array:

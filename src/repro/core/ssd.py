@@ -123,8 +123,13 @@ def device_histogram(keys, n_devices: int, mask=None,
     if mask is not None:
         valid = valid & mask
     dev = device_of_block(k, n_devices, stripe_blocks)
-    return jnp.zeros((n_devices,), jnp.int32).at[dev].add(
-        valid.astype(jnp.int32))
+    # one-hot reduction, not a scatter-add: integer sums are order-free
+    # (bit-identical) and XLA:CPU vectorizes the (m, n_devices) sum where
+    # it would serialize m scattered updates
+    onehot = (dev[..., None] == jnp.arange(n_devices, dtype=jnp.int32)) \
+        & valid[..., None]
+    return jnp.sum(onehot, axis=tuple(range(onehot.ndim - 1)),
+                   dtype=jnp.int32)
 
 
 # --- Little's law ------------------------------------------------------------

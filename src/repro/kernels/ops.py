@@ -95,6 +95,38 @@ def cache_probe(tags, keys, *, owner=None, tenant=0, block_m=512,
                               block_m=block_m, interpret=itp)
 
 
+def sq_enqueue(sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant,
+               sq_tail, sq_head, rr_ptr,
+               keys, dst, is_write, prio, valid, *,
+               seg_bounds, n_devices, stripe_blocks, tenant,
+               impl: Impl = "auto", interpret: bool | None = None):
+    """Fused multi-segment SQ enqueue (one scatter round per ring field)
+    — see :func:`repro.kernels.ref.sq_enqueue_ref` for exact semantics.
+
+    The op is scatter-bound with no matmul/reduction structure for a TPU
+    kernel to exploit, so every backend (including ``impl="pallas"``) runs
+    the jnp oracle as an XLA graph; the ``impl`` knob is accepted for
+    dispatch-layer symmetry with the probe/gather ops.
+    """
+    del impl, interpret
+    return _ref.sq_enqueue_ref(
+        sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant,
+        sq_tail, sq_head, rr_ptr, keys, dst, is_write, prio, valid,
+        seg_bounds=seg_bounds, n_devices=n_devices,
+        stripe_blocks=stripe_blocks, tenant=tenant)
+
+
+def wfq_drain(sq_key, sq_is_write, sq_tenant, *, n_devices, n_tenants,
+              impl: Impl = "auto", interpret: bool | None = None):
+    """Closed-form drain accounting (no completion-stream sort) — see
+    :func:`repro.kernels.ref.wfq_drain_ref`.  Reduction-only; all backends
+    share the jnp oracle (same rationale as :func:`sq_enqueue`).
+    """
+    del impl, interpret
+    return _ref.wfq_drain_ref(sq_key, sq_is_write, sq_tenant,
+                              n_devices=n_devices, n_tenants=n_tenants)
+
+
 def probe_allocate(tags, owner, refcount, dirty, speculative, clock_hand,
                    keys, *, valid=None, alloc_mask=None, protect_slots=None,
                    tenant=0, way_lo=0, way_hi=None, spec_insert=False,

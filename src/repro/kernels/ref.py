@@ -301,44 +301,198 @@ def probe_allocate_ref(tags, owner, refcount, dirty, speculative, clock_hand,
     if alloc_mask is not None:
         miss = miss & alloc_mask
 
-    # ---- per-(row, way) eviction eligibility ----------------------------
-    rows_ref = refcount[sets]
-    rows_dirty = dirty[sets]
-    rows_spec = speculative[sets]
-    elig = rows_ref == 0
-    foreign_dirty = (rows_owner != jnp.int32(tenant)) \
-        & (rows_tag >= 0) & rows_dirty
-    elig = elig & ~foreign_dirty
-    warange = jnp.arange(ways, dtype=jnp.int32)
-    if way_lo != 0 or way_hi != ways:
-        elig = elig & ((warange >= way_lo) & (warange < way_hi))[None, :]
-    if spec_insert:
-        elig = elig & ~(rows_spec & (rows_tag >= 0))
-    overlay = jnp.zeros((num_sets * ways,), bool)
-    if protect_hits:
-        hs = jnp.where(hit, hslot, num_sets * ways)
-        overlay = overlay.at[hs].set(True, mode="drop")
-    if protect_slots is not None:
-        ps = jnp.where(protect_slots >= 0, protect_slots, num_sets * ways)
-        overlay = overlay.at[ps].set(True, mode="drop")
-    elig = elig & ~overlay.reshape(num_sets, ways)[sets]
+    def _select_victims():
+        # ---- per-(row, way) eviction eligibility ------------------------
+        rows_ref = refcount[sets]
+        rows_dirty = dirty[sets]
+        rows_spec = speculative[sets]
+        elig = rows_ref == 0
+        foreign_dirty = (rows_owner != jnp.int32(tenant)) \
+            & (rows_tag >= 0) & rows_dirty
+        elig = elig & ~foreign_dirty
+        warange = jnp.arange(ways, dtype=jnp.int32)
+        if way_lo != 0 or way_hi != ways:
+            elig = elig & ((warange >= way_lo) & (warange < way_hi))[None, :]
+        if spec_insert:
+            elig = elig & ~(rows_spec & (rows_tag >= 0))
+        overlay = jnp.zeros((num_sets * ways,), bool)
+        if protect_hits:
+            hs = jnp.where(hit, hslot, num_sets * ways)
+            overlay = overlay.at[hs].set(True, mode="drop")
+        if protect_slots is not None:
+            ps = jnp.where(protect_slots >= 0, protect_slots,
+                           num_sets * ways)
+            overlay = overlay.at[ps].set(True, mode="drop")
+        elig = elig & ~overlay.reshape(num_sets, ways)[sets]
 
-    # ---- class-then-clock victim select, argsort-free -------------------
-    rank = segment_rank(sets, miss)                            # (m,)
-    hand = clock_hand[sets]                                    # (m,)
-    clock_pos = (warange[None, :] - hand[:, None]) % ways      # (m, ways)
-    vclass = jnp.where(rows_tag < 0, 0,
-                       jnp.where(rows_spec, 1, 2)).astype(jnp.int32)
-    key_w = vclass * ways + clock_pos                          # distinct/row
-    smaller = key_w[:, None, :] < key_w[:, :, None]            # [i, w, w']
-    eidx = jnp.sum(smaller & elig[:, None, :], axis=2)         # (m, ways)
-    n_elig = jnp.sum(elig, axis=1)
-    sel = elig & (eidx == rank[:, None]) & miss[:, None]
-    ok = miss & (n_elig >= rank + 1)
-    way = jnp.argmax(sel, axis=1).astype(jnp.int32)
-    safe_way = jnp.where(ok, way, 0)
-    rows_i = jnp.arange(m)
-    evicted_key = jnp.where(ok, rows_tag[rows_i, safe_way], -1)
-    evicted_dirty = jnp.where(ok, rows_dirty[rows_i, safe_way], False)
-    return (hit, hslot, jnp.where(ok, way, -1), ok,
-            evicted_key.astype(jnp.int32), evicted_dirty)
+        # ---- class-then-clock victim select, argsort-free ---------------
+        rank = segment_rank(sets, miss)                        # (m,)
+        hand = clock_hand[sets]                                # (m,)
+        clock_pos = (warange[None, :] - hand[:, None]) % ways  # (m, ways)
+        vclass = jnp.where(rows_tag < 0, 0,
+                           jnp.where(rows_spec, 1, 2)).astype(jnp.int32)
+        key_w = vclass * ways + clock_pos                      # distinct/row
+        smaller = key_w[:, None, :] < key_w[:, :, None]        # [i, w, w']
+        eidx = jnp.sum(smaller & elig[:, None, :], axis=2)     # (m, ways)
+        n_elig = jnp.sum(elig, axis=1)
+        sel = elig & (eidx == rank[:, None]) & miss[:, None]
+        ok = miss & (n_elig >= rank + 1)
+        way = jnp.argmax(sel, axis=1).astype(jnp.int32)
+        safe_way = jnp.where(ok, way, 0)
+        rows_i = jnp.arange(m)
+        evicted_key = jnp.where(ok, rows_tag[rows_i, safe_way], -1)
+        evicted_dirty = jnp.where(ok, rows_dirty[rows_i, safe_way], False)
+        return (jnp.where(ok, way, -1), ok,
+                evicted_key.astype(jnp.int32), evicted_dirty)
+
+    def _no_miss():
+        return (jnp.full((m,), -1, jnp.int32), jnp.zeros((m,), bool),
+                jnp.full((m,), -1, jnp.int32), jnp.zeros((m,), bool))
+
+    # Hit fast path (paper: cache hits never touch the I/O machinery):
+    # with no miss in the wavefront every victim-select output is masked
+    # anyway, so skipping the sweep is bit-identical and an all-hit
+    # steady-state round pays only the probe.
+    way, ok, evicted_key, evicted_dirty = jax.lax.cond(
+        jnp.any(miss), _select_victims, _no_miss)
+    return hit, hslot, way, ok, evicted_key, evicted_dirty
+
+
+def sq_enqueue_ref(sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant,
+                   sq_tail, sq_head, rr_ptr,
+                   keys, dst, is_write, prio, valid, *,
+                   seg_bounds, n_devices, stripe_blocks, tenant):
+    """Fused multi-segment SQ enqueue — one scatter round for a whole
+    submission (demand reads + write-backs + bypass writes + readahead).
+
+    ``keys``/``dst``/``is_write``/``prio``/``valid`` are the *concatenated*
+    command segments of one tenant's submission; ``seg_bounds`` is the
+    static tuple of ``(start, end)`` offsets delimiting them in issue
+    order.  Routing (device striping, per-device ticket, round-robin queue
+    pick, virtual-slot assignment, ring-full back-pressure) is computed
+    per segment with running tails and round-robin pointers — exactly the
+    sequence of :func:`repro.core.queues.enqueue` calls it replaces — but
+    the five SQ ring fields are each written by a *single* combined
+    scatter over all segments.  That is bit-identical to the sequential
+    scatters: every accepted command's virtual slot lies in
+    ``[head, head + depth)`` of its queue, so accepted ``(queue, slot)``
+    pairs are distinct across segments and scatter order cannot matter;
+    rejected commands scatter out of bounds and drop.
+
+    Returns ``(sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant, sq_tail,
+    rr_ptr, queue, vslot, accepted, per_seg)`` where ``queue``/``vslot``/
+    ``accepted`` are concatenated per-command routing results (unmasked —
+    the caller builds receipts) and ``per_seg`` is a dict of stacked
+    per-segment statistics: ``n_accepted``, ``n_dropped``, ``n_doorbells``,
+    ``n_tickets`` (each ``(S,)``) and ``dev_dropped``, ``dev_accepted``
+    (each ``(S, n_devices)``).
+    """
+    from repro.core.ssd import device_of_block
+    nq, depth = sq_key.shape
+    gsize = nq // n_devices
+    nd = n_devices
+    tail = sq_tail
+    rr = rr_ptr
+    q_parts, v_parts, a_parts = [], [], []
+    n_acc, n_drop, n_db, n_tick = [], [], [], []
+    dev_drop, dev_acc = [], []
+    for (s, e) in seg_bounds:
+        k_s, v_s = keys[s:e], valid[s:e]
+        dev = device_of_block(k_s, nd, stripe_blocks)
+        onehot = ((dev[:, None] == jnp.arange(nd, dtype=jnp.int32)[None, :])
+                  & v_s[:, None]).astype(jnp.int32)
+        ticket = jnp.take_along_axis(
+            jnp.cumsum(onehot, axis=0) - onehot, dev[:, None], axis=1)[:, 0]
+        k_dev = jnp.sum(onehot, axis=0)
+        queue = dev * gsize + (rr[dev] + ticket) % gsize
+        pos_in_q = ticket // gsize
+        vslot = tail[queue] + pos_in_q
+        fits = (vslot - sq_head[queue]) < depth
+        accepted = v_s & fits
+        acc_i = accepted.astype(jnp.int32)
+        # one-hot reductions, not scatter-adds: integer sums are order-free
+        # (bit-identical to ``.at[].add``) and vectorize where XLA:CPU
+        # would serialize the scattered updates
+        per_q = jnp.sum(
+            (queue[:, None] == jnp.arange(nq, dtype=jnp.int32)[None, :])
+            & accepted[:, None], axis=0, dtype=jnp.int32)
+        tail = tail + per_q
+        rr = (rr + k_dev) % gsize
+        drops = v_s & ~fits
+        q_parts.append(queue)
+        v_parts.append(vslot)
+        a_parts.append(accepted)
+        n_acc.append(jnp.sum(acc_i))
+        n_drop.append(jnp.sum(drops.astype(jnp.int32)))
+        n_db.append(jnp.sum((per_q > 0).astype(jnp.int32)))
+        n_tick.append(jnp.sum(k_dev))
+        dev_drop.append(jnp.sum(onehot * drops.astype(jnp.int32)[:, None],
+                                axis=0))
+        dev_acc.append(jnp.sum(onehot * acc_i[:, None], axis=0))
+
+    queue = jnp.concatenate(q_parts)
+    vslot = jnp.concatenate(v_parts)
+    accepted = jnp.concatenate(a_parts)
+    qidx = jnp.where(accepted, queue, nq)
+    sidx = jnp.where(accepted, (vslot % depth).astype(jnp.int32), 0)
+
+    def _commit(rings):
+        rk, rd, rw, rp, rt = rings
+        # ONE packed scatter, not five: the ring fields share the same
+        # (queue, slot) indices, so stacking them into a (nq, depth, 5)
+        # view turns five n-update scatters into one whose updates are
+        # contiguous 5-lane windows — XLA:CPU processes scattered updates
+        # serially, so update *count* is the cost.  The int32 round-trip
+        # of the bool field and the unpack slices are bit-exact.
+        packed = jnp.stack(
+            [rk, rd, rw.astype(jnp.int32), rp, rt], axis=-1)
+        upd = jnp.stack(
+            [keys, dst, is_write.astype(jnp.int32), prio,
+             jnp.broadcast_to(jnp.int32(tenant), keys.shape)], axis=-1)
+        packed = packed.at[qidx, sidx].set(upd, mode="drop")
+        return (packed[..., 0], packed[..., 1], packed[..., 2] != 0,
+                packed[..., 3], packed[..., 4])
+
+    # Hit fast path: a wavefront that enqueues nothing (every demand lane
+    # was a cache hit) drops every update, so the rings pass through
+    # bit-identical — skip the five full-ring scatters entirely.
+    sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant = jax.lax.cond(
+        jnp.any(accepted), _commit, lambda rings: rings,
+        (sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant))
+    per_seg = dict(
+        n_accepted=jnp.stack(n_acc), n_dropped=jnp.stack(n_drop),
+        n_doorbells=jnp.stack(n_db), n_tickets=jnp.stack(n_tick),
+        dev_dropped=jnp.stack(dev_drop), dev_accepted=jnp.stack(dev_acc))
+    return (sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant, tail, rr,
+            queue, vslot, accepted, per_seg)
+
+
+def wfq_drain_ref(sq_key, sq_is_write, sq_tenant, *, n_devices, n_tenants):
+    """Closed-form drain accounting — the reduction half of
+    :func:`repro.core.queues.service_all` without materialising (or
+    sorting) the completion stream.
+
+    Because enqueue routes every command to its block key's device group,
+    per-device completion counts are plain group-reshaped sums over the
+    pending SQ entries, and the read/write split per device falls out of
+    the ``sq_is_write`` ring field — no 32k-lane histogram over a sorted
+    ``Completions`` vector.  Returns ``(count, count_dev, count_tenant,
+    reads_dev, writes_dev)``, bit-identical to counting ``service_all``'s
+    completions (the WFQ/priority *ordering* permutes the stream but every
+    reduction here is order-free).
+    """
+    nq, depth = sq_key.shape
+    gsize = nq // n_devices
+    pending = sq_key >= 0
+    pend_i = pending.astype(jnp.int32)
+    count = jnp.sum(pend_i)
+    count_dev = jnp.sum(pend_i.reshape(n_devices, gsize * depth), axis=1)
+    writes_dev = jnp.sum((pending & sq_is_write).astype(jnp.int32)
+                         .reshape(n_devices, gsize * depth), axis=1)
+    reads_dev = count_dev - writes_dev
+    flat_t = sq_tenant.reshape(-1)
+    flat_p = pending.reshape(-1)
+    count_tenant = jnp.sum(
+        (flat_t[:, None] == jnp.arange(n_tenants, dtype=jnp.int32)[None, :])
+        & flat_p[:, None], axis=0).astype(jnp.int32)
+    return count, count_dev, count_tenant, reads_dev, writes_dev

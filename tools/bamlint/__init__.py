@@ -1,21 +1,24 @@
 """bamlint — repo-native static analysis for the BaM reproduction.
 
-Four AST passes, stdlib-only (no JAX import, no execution of the checked
+Five AST passes, stdlib-only (no JAX import, no execution of the checked
 code), runnable as ``python -m tools.bamlint src benchmarks examples``:
 
 1. ``hostsync``       host-sync / retrace hazards in jit-reachable code
 2. ``tokens``         IOToken linear-lifecycle + pin pairing
 3. ``kernel_safety``  Pallas grid/BlockSpec geometry, ref aliasing, f64
 4. ``metrics_pass``   IOMetrics additive-vs-watermark conservation
+5. ``donation``       state used after a donating ``*_jit(donate=True)``
 
 See docs/static_analysis.md for the rule catalogue, suppression syntax
 (``# bamlint: ignore[RULE]``) and the baseline workflow.
 """
 from __future__ import annotations
 
-from tools.bamlint import hostsync, kernel_safety, metrics_pass, tokens
+from tools.bamlint import (
+    donation, hostsync, kernel_safety, metrics_pass, tokens,
+)
 
-PASSES = [hostsync, tokens, kernel_safety, metrics_pass]
+PASSES = [hostsync, tokens, kernel_safety, metrics_pass, donation]
 
 ALL_RULES = {}
 for _p in PASSES:

@@ -1,0 +1,206 @@
+"""Pass 5 — buffer-donation lifetime: state used after a donating call.
+
+The jit-cached op families (``submit_jit``/``wait_jit``/``read_jit`` on
+``BamArray`` and ``BamRuntime``) accept ``donate=True`` to donate the
+state argument's buffers to the output (``jax.jit(...,
+donate_argnums=(0,))``).  Donation is an ownership transfer: after the
+call, the caller's ``BamState``/``CacheState``/``QueueState`` value
+aliases *dead* buffers — touching it raises ``RuntimeError: Array has
+been deleted`` on CPU/TPU, or silently reads clobbered memory where the
+runtime reuses the allocation eagerly.  The only valid pattern is to
+rebind the state from the call's own result::
+
+    step = arr.submit_jit(donate=True)
+    st, tok = step(st, req)      # OK — `st` rebound by the same statement
+    ...
+    vals = step(st, req)         # BAM106 if a later line still reads the
+                                 # pre-call `st`
+
+Rules
+-----
+BAM106  a ``CacheState``/``QueueState``-carrying value is read after
+        being passed to a donating ``*_jit(donate=True)`` call without
+        being rebound from that call's result.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from tools.bamlint.core import Finding, ModuleInfo
+from tools.bamlint.reach import FuncNode, dotted, tail
+
+RULES = {
+    "BAM106": "state value used after donation to a *_jit(donate=True) "
+              "call",
+}
+
+
+def _is_donating_jit_factory(call: ast.Call) -> bool:
+    """True for ``<expr>.*_jit(..., donate=True, ...)``."""
+    if not tail(dotted(call.func)).endswith("_jit"):
+        return False
+    for kw in call.keywords:
+        if kw.arg == "donate" and isinstance(kw.value, ast.Constant) \
+                and kw.value.value is True:
+            return True
+    return False
+
+
+def _stores(stmt: ast.stmt) -> Set[str]:
+    """Names (re)bound by this statement's own targets."""
+    out: Set[str] = set()
+    targets: List[ast.expr] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        targets = [stmt.target]
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        targets = [stmt.target]
+    elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+        targets = [i.optional_vars for i in stmt.items if i.optional_vars]
+    for t in targets:
+        for n in ast.walk(t):
+            if isinstance(n, ast.Name):
+                out.add(n.id)
+    return out
+
+
+def _own_exprs(stmt: ast.stmt) -> List[ast.AST]:
+    """Expressions evaluated by the statement *itself*, excluding nested
+    blocks — those are scanned in order by the block recursion."""
+    if isinstance(stmt, (ast.If, ast.While)):
+        return [stmt.test]
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        return [stmt.iter]
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        return [i.context_expr for i in stmt.items]
+    if isinstance(stmt, ast.Try):
+        return []
+    return [stmt]
+
+
+class _FnChecker:
+    """Linear statement-order scan of one function body.
+
+    ``donating``: local names bound to a donating callable
+    (``step = arr.submit_jit(donate=True)``).
+    ``consumed``: names whose buffers were donated and not yet rebound;
+    maps name -> line of the consuming call (for the message).
+    """
+
+    def __init__(self, mod: ModuleInfo, fn: ast.AST):
+        self.mod = mod
+        self.fn = fn
+        self.donating: Set[str] = set()
+        self.consumed: Dict[str, int] = {}
+        self.out: List[Finding] = []
+
+    def run(self) -> List[Finding]:
+        body = getattr(self.fn, "body", [])
+        if isinstance(body, ast.expr):  # lambda
+            body = []
+        self._scan_block(body)
+        return self.out
+
+    # -- block / statement traversal (source order) ----------------------
+
+    def _scan_block(self, stmts: List[ast.stmt]) -> None:
+        for stmt in stmts:
+            self._scan_stmt(stmt)
+
+    def _scan_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, FuncNode + (ast.ClassDef,)):
+            return  # nested scopes get their own checker
+        for expr in _own_exprs(stmt):
+            # 1. loads of names consumed by an *earlier* statement
+            self._flag_loads(expr)
+            # 2. consumptions performed by this statement's calls
+            self._record_consumption(expr, stmt)
+        # 3. donating-callable bindings and rebinds
+        self._record_bindings(stmt)
+        # recurse into compound statements; exclusive branches each see a
+        # copy of the state and the results are unioned (conservative).
+        if isinstance(stmt, (ast.If, ast.Try)):
+            blocks = []
+            if isinstance(stmt, ast.If):
+                blocks = [stmt.body, stmt.orelse]
+            else:
+                blocks = [stmt.body, stmt.orelse, stmt.finalbody] + [
+                    h.body for h in stmt.handlers]
+            merged: Dict[str, int] = {}
+            base = dict(self.consumed)
+            for blk in blocks:
+                self.consumed = dict(base)
+                self._scan_block(blk)
+                merged.update(self.consumed)
+            self.consumed = merged
+        elif isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            self._scan_block(stmt.body)
+            self._scan_block(stmt.orelse)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            self._scan_block(stmt.body)
+
+    # -- per-statement pieces --------------------------------------------
+
+    def _flag_loads(self, expr: ast.AST) -> None:
+        if not self.consumed:
+            return
+        for node in ast.walk(expr):
+            if isinstance(node, FuncNode):
+                continue
+            if isinstance(node, ast.Name) and \
+                    isinstance(node.ctx, ast.Load) and \
+                    node.id in self.consumed:
+                self.out.append(self.mod.finding(
+                    "BAM106", node,
+                    f"`{node.id}` was donated to a *_jit(donate=True) "
+                    f"call on line {self.consumed[node.id]}; its buffers "
+                    "are dead — rebind the state from that call's result "
+                    "(`st, tok = step(st, ...)`) before using it again"))
+                # one report per consumption: further loads of the same
+                # dead name add noise, not information.
+                del self.consumed[node.id]
+                if not self.consumed:
+                    return
+
+    def _record_consumption(self, expr: ast.AST, stmt: ast.stmt) -> None:
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call) or not node.args:
+                continue
+            donating = False
+            f = node.func
+            if isinstance(f, ast.Name) and f.id in self.donating:
+                donating = True                       # step(st, req)
+            elif isinstance(f, ast.Call) and _is_donating_jit_factory(f):
+                donating = True    # arr.submit_jit(donate=True)(st, req)
+            if donating and isinstance(node.args[0], ast.Name):
+                name = node.args[0].id
+                # a same-statement rebind (`st, tok = step(st, req)`)
+                # hands ownership straight back — not a hazard.
+                if name not in _stores(stmt):
+                    self.consumed[name] = node.lineno
+
+    def _record_bindings(self, stmt: ast.stmt) -> None:
+        stored = _stores(stmt)
+        # any rebind revives the name (fresh value, live buffers)
+        for name in stored:
+            self.consumed.pop(name, None)
+        if isinstance(stmt, ast.Assign) and \
+                isinstance(stmt.value, ast.Call) and \
+                _is_donating_jit_factory(stmt.value):
+            for tgt in stmt.targets:
+                if isinstance(tgt, ast.Name):
+                    self.donating.add(tgt.id)
+        elif stored:
+            # a name rebound to something else is no longer a donating
+            # callable.
+            self.donating -= stored
+
+
+def check(mod: ModuleInfo) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.extend(_FnChecker(mod, node).run())
+    return out

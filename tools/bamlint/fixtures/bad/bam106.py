@@ -1,0 +1,15 @@
+# bamlint-fixture: expect BAM106
+# State read after its buffers were donated to a *_jit(donate=True) call.
+# Never imported — parsed by tools.bamlint only.
+
+
+def donated_state_reused(arr, st, req, req2):
+    step = arr.submit_jit(donate=True)
+    st2, tok = step(st, req)          # donates st's buffers
+    vals = arr.wait(st, tok)          # BAM106: st is dead here
+    return st2, vals
+
+
+def inline_donating_call(arr, st, req):
+    tok = arr.submit_jit(donate=True)(st, req)[1]   # donates st
+    return st.cache, tok              # BAM106: st is dead here

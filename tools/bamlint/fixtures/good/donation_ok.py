@@ -1,0 +1,27 @@
+# Donation-correct usage: every donating call rebinds the state from its
+# own result before the next use.  Never imported — parsed by bamlint only.
+
+
+def threaded_round(arr, st, reqs):
+    submit = arr.submit_jit(donate=True)
+    wait = arr.wait_jit(donate=True)
+    out = []
+    for req in reqs:
+        st, tok = submit(st, req)     # same-statement rebind: OK
+        st, vals = wait(st, tok)
+        out.append(vals)
+    return st, out
+
+
+def plain_jit_is_not_donating(arr, st, req):
+    step = arr.submit_jit()           # no donate=True: st stays live
+    st2, tok = step(st, req)
+    vals = arr.wait(st, tok)          # fine — old state still valid
+    return st2, vals
+
+
+def rebind_revives(arr, st, req):
+    step = arr.submit_jit(donate=True)
+    st2, tok = step(st, req)
+    st = st2                          # explicit rebind before reuse
+    return arr.wait(st, tok)
