@@ -84,7 +84,7 @@ from repro.utils import pad_to, pytree_dataclass, round_up
 
 __all__ = ["BamArray", "BamState", "BamKVStore", "PrefetchConfig",
            "TenantCtx", "TenantSpec", "BamRuntime", "RuntimeState",
-           "IORequest", "IOToken", "DEFAULT_BUCKETS"]
+           "IORequest", "IOToken", "DEFAULT_BUCKETS", "OpFamilyEntry"]
 
 # Wavefront shape buckets for the bucketed submit/wait wrappers: ragged
 # production batch sizes are padded up to the smallest bucket (masked
@@ -148,6 +148,38 @@ def _mark_redeemed(token: "IOToken") -> None:
             "waited exactly once (a second wait would over-release its "
             "cache pins)")
     object.__setattr__(token, "_redeemed", True)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpFamilyEntry:
+    """One member of the jit-cached op family, as enumerated by
+    :meth:`BamArray.iter_op_family` / :meth:`BamRuntime.iter_op_family`.
+
+    This is the registry hook the lowered-artifact verifier
+    (``tools/bamverify``) walks so it never hand-maintains the op list:
+    adding a new ``*_jit`` op here automatically puts it under the BAM5xx
+    rules and into the compiled-graph manifest.
+
+    ``kind`` is ``"jit"`` for directly lowerable jit-cached callables
+    (``get(donate=...)`` returns the cached ``jax.jit`` object,
+    ``example_args(state, n)`` builds a canonical batch-``n`` argument
+    tuple for ``.lower()``) or ``"bucketed"`` for the host-side
+    shape-bucketing wrappers (``get()`` returns a ``(state, n) -> state``
+    round driver; ``trace_keys`` names the jit-cache keys it compiles
+    into, whose trace counts the BAM505 executable-count rule audits).
+
+    ``pure_all_hit`` marks executables whose all-hit fast path must stay
+    free of *unconditional* host callbacks (the ``lax.cond``-gated fetch
+    contract) — the BAM503 rule only audits entries that claim it.
+    """
+
+    name: str
+    kind: str = "jit"              # "jit" | "bucketed"
+    donatable: bool = False        # accepts donate=True (separate cache key)
+    pure_all_hit: bool = False     # callbacks must be cond-gated (BAM503)
+    get: Any = None                # (donate=False) -> callable
+    example_args: Any = None       # (state, n) -> positional arg tuple
+    trace_keys: Tuple[str, ...] = ()   # jit-cache keys audited by BAM505
 
 
 @dataclasses.dataclass(frozen=True)
@@ -503,6 +535,85 @@ class BamArray:
         if n is not None:
             vals = vals[:n]
         return st2, vals
+
+    # ------------------------------------------------- op-family registry
+    def _example_wavefront(self, n: int):
+        """Canonical batch-``n`` index wavefront for artifact lowering:
+        strided so it spans multiple cache sets, with the lane mask always
+        materialised (the same pytree structure the bucketed wrappers
+        produce, so lowered artifacts and bucketed traffic share
+        executables)."""
+        idx = (jnp.arange(n, dtype=jnp.int32) * 7) % self.size
+        return idx, idx < self.size
+
+    def _bucketed_round(self, st: BamState, n: int,
+                        donate: bool = False) -> BamState:
+        """One bucketed submit+wait round at raw batch ``n`` (the BAM505
+        sweep driver: ragged ``n`` must reuse at most one executable per
+        configured bucket)."""
+        idx, valid = self._example_wavefront(n)
+        st, tok = self.submit_bucketed(st, IORequest.read(idx, valid),
+                                       donate=donate)
+        st, _ = self.wait_bucketed(st, tok, donate=donate)
+        return st
+
+    def iter_op_family(self):
+        """Enumerate the jit-cached op family (see :class:`OpFamilyEntry`).
+
+        This is the registry ``tools/bamverify`` lowers and lints: every
+        steady-state executable this array can produce is listed here —
+        the synchronous shims, the token ops with their donated variants,
+        the fused whole-round op, and the shape-bucketed drivers.  Keep it
+        in sync with the ``*_jit`` surface; the verifier's tests assert
+        the family covers the jit cache keys actually used.
+        """
+        def args_read(st, n):
+            idx, valid = self._example_wavefront(n)
+            return (st, idx, valid)
+
+        def args_write(st, n):
+            idx, valid = self._example_wavefront(n)
+            return (st, idx, jnp.ones((n,), self.dtype), valid)
+
+        def args_req(st, n):
+            idx, valid = self._example_wavefront(n)
+            return (st, IORequest.read(idx, valid))
+
+        def args_token(st, n):
+            idx, valid = self._example_wavefront(n)
+            st1, tok = self.submit(st, IORequest.read(idx, valid))
+            return (st1, tok)
+
+        yield OpFamilyEntry(
+            name="read", get=lambda donate=False: self.read_jit(),
+            example_args=args_read, trace_keys=("read",))
+        yield OpFamilyEntry(
+            name="write", get=lambda donate=False: self.write_jit(),
+            example_args=args_write, trace_keys=("write",))
+        yield OpFamilyEntry(
+            name="prefetch", get=lambda donate=False: self.prefetch_jit(),
+            example_args=args_read, trace_keys=("prefetch",))
+        yield OpFamilyEntry(
+            name="submit", donatable=True,
+            get=lambda donate=False: self.submit_jit(donate=donate),
+            example_args=args_req, trace_keys=("submit",))
+        # wait's fetch DMA is lax.cond-gated (PR 8): an all-hit round must
+        # never pay the host callback, so its executables claim
+        # pure_all_hit and BAM503 audits callback placement in them.
+        yield OpFamilyEntry(
+            name="wait", donatable=True, pure_all_hit=True,
+            get=lambda donate=False: self.wait_jit(donate=donate,
+                                                   guard=False),
+            example_args=args_token, trace_keys=("wait",))
+        yield OpFamilyEntry(
+            name="submit_wait", donatable=True,
+            get=lambda donate=False: self.submit_wait_jit(donate=donate),
+            example_args=args_req, trace_keys=("submit_wait",))
+        yield OpFamilyEntry(
+            name="bucketed_round", kind="bucketed",
+            get=lambda donate=False:
+                lambda st, n: self._bucketed_round(st, n, donate),
+            trace_keys=("submit", "wait"))
 
     def _store(self, st: BamState):
         return self.storage if self.storage is not None else st.storage
@@ -1659,6 +1770,44 @@ class BamRuntime:
 
             self._jit_ops[wkey] = w = guarded
         return w
+
+    def iter_op_family(self):
+        """Enumerate the runtime's per-tenant jit-cached op family (see
+        :class:`OpFamilyEntry` and :meth:`BamArray.iter_op_family`) —
+        the registry hook ``tools/bamverify`` lowers for multi-tenant
+        artifacts.  One entry per (op, tenant); ``example_args`` take the
+        shared :class:`RuntimeState`."""
+        for name in self.tenants:
+            arr = self.tenants[name]
+
+            def args_read(rst, n, _arr=arr):
+                idx, valid = _arr._example_wavefront(n)
+                return (rst, idx)
+
+            def args_req(rst, n, _arr=arr):
+                idx, valid = _arr._example_wavefront(n)
+                return (rst, IORequest.read(idx, valid))
+
+            def args_token(rst, n, _name=name, _arr=arr):
+                idx, valid = _arr._example_wavefront(n)
+                rst1, tok = self.submit(rst, _name,
+                                        IORequest.read(idx, valid))
+                return (rst1, tok)
+
+            yield OpFamilyEntry(
+                name=f"read:{name}",
+                get=lambda donate=False, _n=name: self.read_jit(_n),
+                example_args=args_read, trace_keys=(f"read:{name}",))
+            yield OpFamilyEntry(
+                name=f"submit:{name}", donatable=True,
+                get=lambda donate=False, _n=name:
+                    self.submit_jit(_n, donate=donate),
+                example_args=args_req, trace_keys=(f"submit:{name}",))
+            yield OpFamilyEntry(
+                name=f"wait:{name}", donatable=True, pure_all_hit=True,
+                get=lambda donate=False, _n=name:
+                    self.wait_jit(_n, donate=donate, guard=False),
+                example_args=args_token, trace_keys=(f"wait:{name}",))
 
     def write(self, rst: RuntimeState, name: str, idx: jax.Array,
               values: jax.Array, valid: jax.Array | None = None

@@ -38,8 +38,16 @@ _COLL_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
 _ZERO_COST_OPS = {
     "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
     "after-all", "add-dependency", "partition-id", "replica-id",
-    "opt-barrier", "custom-call",
+    "opt-barrier",
 }
+
+# ``custom-call`` is zero-cost for the roofline (an opaque target whose
+# bytes/FLOPs XLA cannot see either) but must NOT be invisible: host
+# callbacks (``jax.pure_callback`` / ``io_callback``) lower to custom-calls,
+# and tools/bamverify's BAM503 rule audits where they sit in the compiled
+# graph.  ``parse_computations`` therefore surfaces every custom-call's
+# target on the parsed :class:`Instr`.
+_CUSTOM_CALL_TARGET_RE = re.compile(r'custom_call_target="([^"]*)"')
 
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _INSTR_RE = re.compile(
@@ -79,6 +87,7 @@ class Instr:
     op: str
     args: str
     line: str
+    custom_call_target: str = ""   # set when op == "custom-call"
 
 
 @dataclasses.dataclass
@@ -128,21 +137,85 @@ def parse_computations(text: str) -> Tuple[Dict[str, List[Instr]], str]:
             continue
         m = _INSTR_RE.match(line)
         if m:
+            op = m.group(3)
+            target = ""
+            if op == "custom-call":
+                tm = _CUSTOM_CALL_TARGET_RE.search(line)
+                target = tm.group(1) if tm else ""
             comps[cur].append(Instr(
                 name=m.group(1), type_str=m.group(2).strip(),
-                op=m.group(3), args=m.group(4), line=line))
+                op=op, args=m.group(4), line=line,
+                custom_call_target=target))
     if entry is None and comps:
         entry = list(comps)[-1]
     return comps, entry
 
 
-def _called_comps(instr: Instr) -> List[str]:
+def branch_computations(instr: Instr) -> List[str]:
+    """All branch computations of a ``conditional`` instruction.
+
+    ``branch_computations={%a, %b, ...}`` is a brace-delimited *list*; a
+    prefix-only regex would see just ``%a`` and silently drop every other
+    branch (true-branch-only cost analysis, invisible false branches).
+    """
+    m = re.search(r"branch_computations=\{([^}]*)\}", instr.line)
+    if not m:
+        return []
+    return re.findall(r"%?([\w\.\-]+)", m.group(1))
+
+
+def called_computations(instr: Instr,
+                        include_branches: bool = True) -> List[str]:
+    """Computations an instruction calls into: fusion/call bodies
+    (``calls=``/``to_apply=``), while ``body=``/``condition=``, and — when
+    ``include_branches`` — a conditional's branch computations.  The
+    ``include_branches=False`` form is the edge set for gating analyses
+    (tools/bamverify BAM503): following only these edges from the entry
+    yields the computations that execute *unconditionally*."""
     out = []
-    for key in ("calls=", "body=", "condition=", "branch_computations={",
-                "to_apply="):
+    for key in ("calls=", "body=", "condition=", "to_apply="):
         for m in re.finditer(re.escape(key) + r"%?([\w\.\-]+)", instr.line):
             out.append(m.group(1))
+    if include_branches:
+        out.extend(branch_computations(instr))
     return out
+
+
+# Back-compat alias (pre-PR-9 internal name).
+_called_comps = called_computations
+
+
+def iter_custom_calls(comps: Dict[str, List[Instr]]
+                      ) -> List[Tuple[str, Instr]]:
+    """Every ``custom-call`` instruction as ``(computation_name, Instr)``
+    — the shared surfacing hook for callback audits (``Instr
+    .custom_call_target`` carries the target string)."""
+    out = []
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            if ins.op == "custom-call":
+                out.append((cname, ins))
+    return out
+
+
+def ungated_computations(comps: Dict[str, List[Instr]],
+                         entry: Optional[str]) -> set:
+    """Computations reachable from ``entry`` without crossing a
+    ``conditional`` branch edge — i.e. the code that runs on *every*
+    execution of the module.  A host-callback custom-call inside this set
+    executes unconditionally; one outside it only runs when some
+    ``lax.cond`` takes its branch (the BaM all-hit fast path contract)."""
+    seen: set = set()
+    stack = [entry] if entry else []
+    while stack:
+        c = stack.pop()
+        if c is None or c in seen or c not in comps:
+            continue
+        seen.add(c)
+        for ins in comps[c]:
+            for cc in called_computations(ins, include_branches=False):
+                stack.append(cc)
+    return seen
 
 
 def _trip_count(comps, cond_name: str) -> int:
@@ -268,6 +341,11 @@ def analyze_text(text: str) -> Cost:
                 b = _shape_bytes(ins.type_str)
                 cost += Cost(mem_bytes=b if count_mem else 0.0,
                              coll_bytes={kind: b})
+            elif ins.op == "custom-call":
+                # opaque target: zero roofline cost (XLA cannot cost it
+                # either), but surfaced via iter_custom_calls for the
+                # callback-placement audits — never silently dropped.
+                pass
             elif ins.op in _ZERO_COST_OPS:
                 pass
             else:

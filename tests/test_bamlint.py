@@ -69,6 +69,30 @@ def test_suppression_honored_and_bypassable():
     assert {f.rule for f in raw} == {"BAM105"}
 
 
+def test_bam107_not_suppressible(tmp_path):
+    """An ``ignore[BAM107]`` comment is itself an unused suppression: the
+    rule polices dead armor and must not be armor-able."""
+    f = tmp_path / "self_shield.py"
+    f.write_text("x = 1  # bamlint: ignore[BAM107]\n")
+    findings = check_file(f, REPO_ROOT)
+    assert [fi.rule for fi in findings] == ["BAM107"]
+
+
+def test_bam107_only_fires_when_suppressions_respected():
+    """Under --no-suppress nothing is consumed, so nothing is 'unused' —
+    the fixture's dead comments must yield zero findings there."""
+    bad = FIXTURES / "bad" / "bam107.py"
+    raw = check_file(bad, REPO_ROOT, respect_suppressions=False)
+    assert raw == [], [(f.rule, f.line) for f in raw]
+
+
+def test_used_suppression_does_not_trip_bam107():
+    """The suppressed/ corpus file consumes its ignore comments, so the
+    BAM107 pass must stay silent on it (same call as the clean check)."""
+    findings = check_file(SUPPRESSED, REPO_ROOT)
+    assert findings == [], [(f.rule, f.line) for f in findings]
+
+
 def test_baseline_round_trip(tmp_path):
     bad = FIXTURES / "bad" / "bam105.py"
     findings = check_file(bad, REPO_ROOT)

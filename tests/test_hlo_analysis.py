@@ -1,10 +1,20 @@
 """The trip-count-aware HLO analyzer vs XLA's own cost_analysis."""
+import pathlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.launch import hlo_analysis as H
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+VERIFY_FIXTURES = REPO_ROOT / "tools" / "bamverify" / "fixtures"
+
+
+def _fixture_hlo(rel: str) -> str:
+    """Body of a committed bamverify fixture (header comment stripped)."""
+    return (VERIFY_FIXTURES / rel).read_text().partition("\n")[2]
 
 
 def _compiled(f, *specs):
@@ -88,6 +98,51 @@ def test_collective_bytes_parsed():
                        text=True, cwd=os.path.dirname(os.path.dirname(
                            os.path.abspath(__file__))))
     assert "OK" in r.stdout, r.stderr[-2000:]
+
+
+def test_custom_call_target_surfaced_in_instr_stream():
+    """Host callbacks lower to custom-calls; the parser must expose the
+    target string (bamverify's BAM503 keys off it) instead of treating
+    custom-call as an anonymous zero-cost op."""
+    comps, _entry = H.parse_computations(_fixture_hlo("bad/bam503.hlo"))
+    calls = H.iter_custom_calls(comps)
+    assert calls, "fixture lost its custom-call"
+    assert any("callback" in ins.custom_call_target for _, ins in calls), [
+        ins.custom_call_target for _, ins in calls
+    ]
+    # non-custom-call instructions keep the default empty target
+    plain = [ins for instrs in comps.values() for ins in instrs
+             if ins.op != "custom-call"]
+    assert all(ins.custom_call_target == "" for ins in plain)
+
+
+def test_branch_computations_lists_every_branch():
+    line = ("%c = (f32[8]) conditional(%p, %a, %a), "
+            "branch_computations={%region_0.8, %region_2.16}")
+    ins = H.Instr(name="c", type_str="(f32[8])", op="conditional",
+                  args="%p, %a, %a", line=line)
+    assert H.branch_computations(ins) == ["region_0.8", "region_2.16"]
+    assert H.called_computations(ins) == ["region_0.8", "region_2.16"]
+    assert H.called_computations(ins, include_branches=False) == []
+
+
+def test_ungated_computations_gated_vs_ungated_callback():
+    """A cond-gated callback's computation must NOT be reachable in the
+    ungated closure; an unconditional one must be."""
+    comps_g, entry_g = H.parse_computations(
+        _fixture_hlo("good/gated_callback.hlo"))
+    gated_cbs = [cname for cname, ins in H.iter_custom_calls(comps_g)
+                 if "callback" in ins.custom_call_target]
+    assert gated_cbs
+    ungated = H.ungated_computations(comps_g, entry_g)
+    assert not any(c in ungated for c in gated_cbs)
+
+    comps_u, entry_u = H.parse_computations(_fixture_hlo("bad/bam503.hlo"))
+    open_cbs = [cname for cname, ins in H.iter_custom_calls(comps_u)
+                if "callback" in ins.custom_call_target]
+    assert open_cbs
+    assert all(c in H.ungated_computations(comps_u, entry_u)
+               for c in open_cbs)
 
 
 def test_memory_bytes_reasonable_for_big_matmul():

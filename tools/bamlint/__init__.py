@@ -15,11 +15,11 @@ See docs/static_analysis.md for the rule catalogue, suppression syntax
 from __future__ import annotations
 
 from tools.bamlint import (
-    donation, hostsync, kernel_safety, metrics_pass, tokens,
+    core, donation, hostsync, kernel_safety, metrics_pass, tokens,
 )
 
 PASSES = [hostsync, tokens, kernel_safety, metrics_pass, donation]
 
-ALL_RULES = {}
+ALL_RULES = dict(core.RULES)   # framework rules (unused suppressions)
 for _p in PASSES:
     ALL_RULES.update(_p.RULES)

@@ -1,7 +1,10 @@
 """CLI: ``python -m tools.bamlint [paths...]``.
 
-Exit status is 0 when every finding is suppressed inline or covered by
-the committed baseline, 1 otherwise (and 2 on parse errors).
+Exit codes (shared convention with ``tools.bamverify``): ``0`` when every
+finding is suppressed inline or covered by the committed baseline (also
+``--list-rules`` / ``--write-baseline``), ``1`` on findings, ``2`` on
+usage errors (nonexistent paths) or parse errors.  A typo'd path must
+not read as "clean".
 """
 from __future__ import annotations
 
@@ -45,6 +48,13 @@ def main(argv=None) -> int:
         return 0
 
     paths = args.paths or DEFAULT_PATHS
+    missing = [p for p in paths
+               if not (pathlib.Path(p) if pathlib.Path(p).is_absolute()
+                       else REPO_ROOT / p).exists()]
+    if missing:
+        print(f"bamlint: no such path(s): {', '.join(missing)}",
+              file=sys.stderr)
+        return 2
     baseline_path = None if args.no_baseline else args.baseline
     new, old, errors = run(
         paths, REPO_ROOT, baseline_path=baseline_path,

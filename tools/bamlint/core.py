@@ -23,6 +23,17 @@ from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 SUPPRESS_RE = re.compile(r"#\s*bamlint:\s*ignore\[([A-Za-z0-9_*,\s]+)\]")
 
+# Framework-level rules (the passes own BAM1xx-BAM4xx; the suppression
+# machinery itself owns this one).  BAM107 is deliberately *not*
+# suppressible: an ignore-comment that matches nothing is dead armor —
+# it reads as "this hazard is known" while hiding nothing today and a
+# real regression tomorrow.
+RULES = {
+    "BAM107": "unused suppression: `# bamlint: ignore[...]` matches no "
+              "finding on its own or the following line — delete it "
+              "(stale armor silently swallows the next real finding)",
+}
+
 
 @dataclasses.dataclass(frozen=True)
 class Finding:
@@ -87,12 +98,19 @@ def suppressed_rules_by_line(lines: Sequence[str]) -> Dict[int, Set[str]]:
     return out
 
 
-def is_suppressed(finding: Finding, supp: Dict[int, Set[str]]) -> bool:
+def suppressing_line(finding: Finding,
+                     supp: Dict[int, Set[str]]) -> Optional[int]:
+    """The 1-based line of the ignore-comment covering ``finding``, or
+    ``None``.  Same-line comments win over line-above ones."""
     for line in (finding.line, finding.line - 1):
         rules = supp.get(line)
         if rules and (finding.rule in rules or "*" in rules):
-            return True
-    return False
+            return line
+    return None
+
+
+def is_suppressed(finding: Finding, supp: Dict[int, Set[str]]) -> bool:
+    return suppressing_line(finding, supp) is not None
 
 
 # ----------------------------------------------------------------- baseline
@@ -176,7 +194,27 @@ def check_file(path: pathlib.Path, root: pathlib.Path,
     findings = check_module(mod, passes)
     if respect_suppressions:
         supp = suppressed_rules_by_line(mod.lines)
-        findings = [f for f in findings if not is_suppressed(f, supp)]
+        used: Set[int] = set()
+        kept: List[Finding] = []
+        for f in findings:
+            line = suppressing_line(f, supp)
+            if line is None:
+                kept.append(f)
+            else:
+                used.add(line)
+        findings = kept
+        # BAM107: every ignore-comment must earn its keep.  Only
+        # meaningful when suppressions are respected (under
+        # --no-suppress nothing is "used", so nothing is "unused").
+        for line in sorted(set(supp) - used):
+            text = mod.lines[line - 1]
+            m = SUPPRESS_RE.search(text)
+            findings.append(Finding(
+                rule="BAM107", path=mod.rel, line=line,
+                col=m.start() if m else 0,
+                message=RULES["BAM107"],
+                code=mod.line_text(line)))
+        findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
     return findings
 
 

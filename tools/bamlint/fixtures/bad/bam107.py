@@ -1,0 +1,16 @@
+# bamlint-fixture: expect BAM107
+"""An ignore-comment that matches no finding on its own or the next line.
+
+The function below is lint-clean, so both suppressions are dead armor:
+the rule they name can never fire here, and BAM107 flags each one.
+BAM107 itself is not suppressible — an ``ignore[BAM107]`` comment that
+matches nothing is just another unused suppression.
+"""
+
+
+def tidy(values):
+    # bamlint: ignore[BAM101]
+    total = 0
+    for v in values:  # bamlint: ignore[*]
+        total += v
+    return total

@@ -28,23 +28,28 @@ def main() -> int:
                 f"benchmarks/{script.name} is not documented in "
                 "docs/benchmarks.md")
 
-    # every bamlint rule must be documented in docs/static_analysis.md —
-    # the rule table is the user-facing contract for the CI gate
+    # every bamlint AND bamverify rule must be documented in
+    # docs/static_analysis.md — the rule tables are the user-facing
+    # contract for the CI gates (both ALL_RULES imports are JAX-free)
     sa_doc = ROOT / "docs" / "static_analysis.md"
     sa_text = sa_doc.read_text() if sa_doc.is_file() else ""
     sys.path.insert(0, str(ROOT))
-    from tools.bamlint import ALL_RULES
-    for rule in sorted(ALL_RULES):
-        if rule not in sa_text:
-            errors.append(
-                f"bamlint rule {rule} is not documented in "
-                "docs/static_analysis.md")
+    from tools.bamlint import ALL_RULES as LINT_RULES
+    from tools.bamverify import ALL_RULES as VERIFY_RULES
+    for tool, rules in (("bamlint", LINT_RULES),
+                        ("bamverify", VERIFY_RULES)):
+        for rule in sorted(rules):
+            if rule not in sa_text:
+                errors.append(
+                    f"{tool} rule {rule} is not documented in "
+                    "docs/static_analysis.md")
 
     for err in errors:
         print(f"docs-lint: {err}", file=sys.stderr)
     if not errors:
         print(f"docs-lint: OK ({len(REQUIRED_DOCS)} docs, all benchmarks "
-              f"covered, {len(ALL_RULES)} bamlint rules documented)")
+              f"covered, {len(LINT_RULES)} bamlint + {len(VERIFY_RULES)} "
+              "bamverify rules documented)")
     return 1 if errors else 0
 
 
