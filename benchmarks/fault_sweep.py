@@ -1,0 +1,240 @@
+"""Fault sweep: throughput + correctness under injected storage errors.
+
+Sweeps the :class:`~repro.core.ssd.FaultModel` transient error rate
+(0 .. 1%) x retry budget over a streaming read workload, plus a
+hard-failed-device dropout point, and self-checks the robustness PR's
+acceptance gates:
+
+* **zero-fault identity** — a *disabled* model (rate 0, no failed
+  devices, whatever the other knobs) is bit-identical in values and
+  metrics to the default build;
+* **smooth degradation** — with a modest retry budget, effective
+  throughput at a 1% transient rate stays within a few percent of clean
+  (retries recover transients; the backoff surcharge is bounded by
+  ``rate x tail_latency_mult``), and no cliff appears at any swept rate;
+* **exact conservation** — per device, accepted commands equal drained
+  commands and ``failed_commands == sum(dev_errors)``; per tenant, the
+  shared-runtime error counters sum exactly to the global ones;
+* **no garbage fills** — every lane the wait reports OK is
+  element-exact against the host array, every errored lane reads 0, and
+  at ``rate=1.0, budget=0`` not a single cache line is ever filled.
+
+Standalone (``python benchmarks/fault_sweep.py``) prints a JSON report
+and exits nonzero if any gate fails.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from benchmarks.common import SMOKE, scaled
+except ImportError:        # standalone: python benchmarks/<module>.py
+    from common import SMOKE, scaled
+from repro.core import BamArray, BamRuntime, IORequest, TenantSpec
+from repro.core.ssd import ArrayOfSSDs, FaultModel, INTEL_OPTANE_P5800X
+
+N_BLOCKS = scaled(1 << 14, 1 << 9)
+BLOCK_ELEMS = 128                  # 512B lines of float32
+WAVEFRONT = scaled(2048, 128)
+WAVES = scaled(6, 2)
+N_DEVICES = 4
+RATES = (0.0, 1e-4, 1e-3, 1e-2)
+BUDGETS = (0, 2)
+
+
+def _tree_bits(tree):
+    return [np.asarray(jax.device_get(x)).tobytes()
+            for x in jax.tree_util.tree_leaves(tree)]
+
+
+def _run_stream(data, fault, waves) -> dict:
+    """Replay the wavefronts; verify the value contract on every wave."""
+    arr, st = BamArray.build(
+        data, block_elems=BLOCK_ELEMS,
+        num_sets=16, ways=4,
+        num_queues=2 * N_DEVICES, queue_depth=1024,
+        ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, N_DEVICES, fault=fault))
+    flat = data.reshape(-1)
+    vals_bits, degraded, lanes = [], 0, 0
+    for wave in waves:
+        idx = jnp.asarray(wave, jnp.int32)
+        st, tok = arr.submit(st, IORequest.read(idx))
+        st, vals, err = arr.wait_ex(st, tok)
+        v, e = np.asarray(vals), np.asarray(err)
+        ok = ~e
+        if not np.array_equal(v[ok], flat[wave][ok]):
+            raise AssertionError("OK lane returned a wrong value")
+        if e.any() and v[e].any():
+            raise AssertionError("errored lane returned non-zero data")
+        vals_bits.append(v.tobytes())
+        degraded += int(e.sum())
+        lanes += len(wave)
+    m = st.metrics
+    qs = st.queues
+    conserved = (
+        np.array_equal(np.asarray(qs.dev_enqueued),
+                       np.asarray(qs.dev_completed))
+        and int(m.failed_commands) == int(np.asarray(m.dev_errors).sum())
+        and int(m.degraded_reads) == degraded)
+    return {
+        "sim_time_s": float(m.sim_time_s),
+        "read_iops": m.summary()["read_iops"],
+        "retries": int(m.retries),
+        "transient_errors": int(m.transient_errors),
+        "failed_commands": int(m.failed_commands),
+        "degraded_frac": degraded / max(lanes, 1),
+        "dev_reads": [int(x) for x in np.asarray(m.dev_reads)],
+        "conserved": bool(conserved),
+        "_vals_bits": vals_bits,
+        "_metrics_bits": _tree_bits(m),
+    }
+
+
+def _tenant_conservation(data, fault) -> bool:
+    """Two shared-runtime tenants under faults: counters must sum exactly."""
+    rt, rst = BamRuntime.build(
+        [TenantSpec("a", data[:N_BLOCKS // 2], block_elems=BLOCK_ELEMS),
+         TenantSpec("b", data[N_BLOCKS // 2:], block_elems=BLOCK_ELEMS,
+                    weight=2.0)],
+        num_sets=8, ways=4, num_queues=2 * N_DEVICES, queue_depth=256,
+        ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, N_DEVICES, fault=fault))
+    rng = np.random.default_rng(3)
+    n = data[:N_BLOCKS // 2].size
+    for _ in range(scaled(3, 1)):
+        for name in ("a", "b"):
+            idx = jnp.asarray(rng.integers(0, n, WAVEFRONT // 2), jnp.int32)
+            rst, tok = rt.submit(rst, name, IORequest.read(idx))
+            rst, _, _ = rt.wait_ex(rst, name, tok)
+    try:
+        rt.assert_metrics_consistent(rst)
+    except AssertionError:
+        return False
+    return True
+
+
+def sweep() -> dict:
+    rng = np.random.default_rng(0)
+    data = np.random.default_rng(1).standard_normal(
+        (N_BLOCKS, BLOCK_ELEMS)).astype(np.float32)
+    waves = [rng.integers(0, N_BLOCKS, WAVEFRONT) * BLOCK_ELEMS
+             + rng.integers(0, BLOCK_ELEMS, WAVEFRONT)
+             for _ in range(WAVES)]
+
+    report = {"workload": {"n_blocks": N_BLOCKS,
+                           "block_bytes": BLOCK_ELEMS * 4,
+                           "wavefront": WAVEFRONT, "waves": WAVES,
+                           "n_devices": N_DEVICES},
+              "points": []}
+
+    clean = _run_stream(data, FaultModel(), waves)
+    # gate 1: a disabled model with non-default knobs is bit-identical
+    shadow = _run_stream(data, FaultModel(transient_error_rate=0.0,
+                                          tail_latency_mult=8.0,
+                                          retry_budget=7, seed=99), waves)
+    report["zero_fault_identical"] = (
+        clean["_vals_bits"] == shadow["_vals_bits"]
+        and clean["_metrics_bits"] == shadow["_metrics_bits"])
+
+    conserved_all, cliff_free = True, True
+    for budget in BUDGETS:
+        for rate in RATES:
+            fault = FaultModel(transient_error_rate=rate,
+                               retry_budget=budget,
+                               tail_latency_mult=2.0, seed=7)
+            p = _run_stream(data, fault, waves)
+            conserved_all &= p["conserved"]
+            point = {k: v for k, v in p.items()
+                     if not k.startswith("_")}
+            point.update(rate=rate, retry_budget=budget,
+                         throughput_vs_clean=(
+                             clean["sim_time_s"] / max(p["sim_time_s"],
+                                                       1e-30)))
+            report["points"].append(point)
+
+    # gate 2: smooth degradation with retries — at 1% rate and budget=2
+    # the failure probability per command is rate^3 (~1e-6): effectively
+    # zero degraded lanes and a bounded backoff surcharge.
+    recovered = [p for p in report["points"]
+                 if p["retry_budget"] == 2 and p["rate"] == 1e-2][0]
+    report["degraded_frac_at_1pct"] = recovered["degraded_frac"]
+    report["throughput_vs_clean_at_1pct"] = \
+        recovered["throughput_vs_clean"]
+    cliff_free = (recovered["degraded_frac"] <= 1e-3
+                  and recovered["throughput_vs_clean"] >= 0.9)
+    # and no swept point may lose more than its backoff bound explains:
+    for p in report["points"]:
+        if p["retry_budget"] == 2 and p["throughput_vs_clean"] < 0.8:
+            cliff_free = False
+
+    # gate 3: total failure never fills a line (tiny probe workload)
+    probe = data[:4]
+    arr, st = BamArray.build(
+        probe, block_elems=BLOCK_ELEMS, num_sets=4, ways=2,
+        num_queues=2 * N_DEVICES, queue_depth=64,
+        ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, N_DEVICES,
+                        fault=FaultModel(transient_error_rate=1.0,
+                                         retry_budget=0)))
+    idx = jnp.arange(4, dtype=jnp.int32) * BLOCK_ELEMS
+    st, tok = arr.submit(st, IORequest.read(idx))
+    st, vals, err = arr.wait_ex(st, tok)
+    report["no_fill_on_total_failure"] = (
+        bool(np.asarray(err).all())
+        and not np.asarray(vals).any()
+        and bool((np.asarray(st.cache.tags) == -1).all())
+        and not np.asarray(st.cache.refcount).any())
+
+    # gate 4: device dropout — survivors absorb the dead device's blocks
+    drop = _run_stream(
+        data, FaultModel(failed_devices=(2,)), waves)
+    report["dropout"] = {k: v for k, v in drop.items()
+                        if not k.startswith("_")}
+    report["dropout"]["values_exact"] = \
+        drop["_vals_bits"] == clean["_vals_bits"]
+    report["dropout_ok"] = (
+        drop["dev_reads"][2] == 0
+        and drop["failed_commands"] == 0
+        and report["dropout"]["values_exact"]
+        and drop["conserved"])
+
+    report["tenant_counters_exact"] = _tenant_conservation(
+        data, FaultModel(transient_error_rate=5e-3, retry_budget=1,
+                         seed=11))
+
+    report["conserved_all"] = conserved_all
+    report["cliff_free"] = cliff_free
+    report["clean_sim_time_s"] = clean["sim_time_s"]
+    return report
+
+
+def run():
+    rep = sweep()
+    rows = []
+    for p in rep["points"]:
+        rows.append((
+            f"fault_sweep/rate{p['rate']:g}_budget{p['retry_budget']}",
+            p["sim_time_s"] * 1e6 / WAVES,
+            f"tput={p['throughput_vs_clean']:.3f}x "
+            f"degraded={p['degraded_frac']:.2e} "
+            f"retries={p['retries']}"))
+    d = rep["dropout"]
+    rows.append((
+        "fault_sweep/device_dropout_1of4",
+        d["sim_time_s"] * 1e6 / WAVES,
+        f"tput={rep['clean_sim_time_s'] / max(d['sim_time_s'], 1e-30):.3f}x "
+        f"exact={d['values_exact']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    rep = sweep()
+    print(json.dumps(rep, indent=2))
+    # Exactness gates hold at any size; the smooth-degradation thresholds
+    # are calibrated for full sizes, so smoke mode only asserts them
+    # loosely via the exact gates.
+    exact_ok = (rep["zero_fault_identical"] and rep["conserved_all"]
+                and rep["no_fill_on_total_failure"] and rep["dropout_ok"]
+                and rep["tenant_counters_exact"])
+    ok = exact_ok and (SMOKE or rep["cliff_free"])
+    raise SystemExit(0 if ok else 1)

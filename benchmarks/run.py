@@ -19,6 +19,7 @@ Prints ``name,us_per_call,derived`` CSV.  Each module's ``run()`` returns
   mixed_tenants            (§I sharing claim) multi-tenant isolation
   async_overlap            (§II-C) submit/wait token window depth sweep
   hot_path                 (§III-D/E) wall-clock µs/op: fused kernels + jit
+  fault_sweep              (robustness) error-rate x retry-budget sweep
 
 Alongside the CSV, every module that runs writes a machine-readable
 ``BENCH_<module>.json`` artifact (one object per row: name / value /
@@ -43,6 +44,7 @@ MODULES = [
     "iops_scaling", "graph_analytics", "cacheline_sweep", "ssd_scaling",
     "device_channels", "taxi_queries", "paged_kv", "moe_paging",
     "prefetch_sweep", "mixed_tenants", "async_overlap", "hot_path",
+    "fault_sweep",
 ]
 
 _REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent

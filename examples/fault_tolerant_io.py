@@ -1,0 +1,135 @@
+"""Fault-tolerant training over a fault-injectable storage tier.
+
+Wires the two fault layers of this repo together:
+
+* the **storage** fault layer — a :class:`~repro.core.ssd.FaultModel` on
+  the ``ArrayOfSSDs`` behind a :class:`~repro.core.BamArray` injects
+  deterministic per-command transient errors; ``wait_ex`` surfaces the
+  lanes that degraded as an ``error_mask`` instead of silently zeroing
+  data into the model;
+* the **training** fault layer — ``run_training``'s checkpoint / restore
+  / replay loop (``training/fault_tolerance.py``), whose
+  :class:`FailureInjector` decides when a step "crashes".
+
+The bridge is :class:`StorageFailureInjector`: instead of a hard-coded
+``fail_at`` schedule, ``maybe_fail(step)`` fetches the step's wavefront
+through the faulty array and raises exactly when the I/O round reports
+degraded lanes — an uncorrected storage error *is* the failure schedule.
+The driver restores the model from the latest checkpoint and replays;
+the replayed fetch issues fresh commands (new tickets → new hash draws),
+so a transient storage error heals on retry, exactly like the in-round
+retry budget but at checkpoint granularity.  Raising the in-round
+``--retry-budget`` makes the same error rate complete with zero
+restarts — the two recovery layers trade off visibly.
+
+    PYTHONPATH=src python examples/fault_tolerant_io.py
+"""
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ArrayOfSSDs, BamArray, INTEL_OPTANE_P5800X, IORequest
+from repro.core.ssd import FaultModel
+from repro.training.fault_tolerance import FailureInjector, run_training
+
+
+class StorageFailureInjector(FailureInjector):
+    """A FailureInjector whose schedule IS the storage fault layer.
+
+    ``maybe_fail(step)`` performs the step's read through the faulty
+    ``BamArray`` and raises when any lane degrades; clean fetches are
+    cached for ``batch_for_step`` to hand to the train step.
+    """
+
+    def __init__(self, arr, st, wavefront_for_step):
+        super().__init__()
+        self.arr = arr
+        self.st = st
+        self.wavefront_for_step = wavefront_for_step
+        self.batches = {}
+        self.degraded_steps = []
+
+    def maybe_fail(self, step: int):
+        if step in self.batches:          # replay after restore: re-fetch
+            del self.batches[step]
+        idx = self.wavefront_for_step(step)
+        self.st, tok = self.arr.submit(self.st, IORequest.read(idx))
+        self.st, vals, err = self.arr.wait_ex(self.st, tok)
+        n_err = int(np.asarray(err).sum())
+        if n_err:
+            self.degraded_steps.append(step)
+            raise self.exc(
+                f"storage degraded {n_err} lane(s) at step {step}")
+        self.batches[step] = vals
+
+
+# A toy model: learn the mean of the storage tier from sampled batches.
+@jax.jit
+def train_step(state, batch):
+    mean = jnp.mean(batch)
+    w = state["w"] + 0.1 * (mean - state["w"])
+    return {"w": w}, {"loss": (mean - w) ** 2}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--elems", type=int, default=1 << 20)
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--wavefront", type=int, default=512)
+    ap.add_argument("--error-rate", type=float, default=2e-3,
+                    help="per-command transient error probability")
+    ap.add_argument("--retry-budget", type=int, default=0,
+                    help="in-round retries before a command errors")
+    ap.add_argument("--workdir", default=None)
+    args = ap.parse_args()
+    workdir = args.workdir or tempfile.mkdtemp(prefix="bam_ft_")
+
+    rng = np.random.default_rng(0)
+    data = rng.standard_normal(args.elems).astype(np.float32)
+
+    fault = FaultModel(transient_error_rate=args.error_rate,
+                       retry_budget=args.retry_budget,
+                       tail_latency_mult=2.0, seed=1)
+    arr, st = BamArray.build(
+        data, block_elems=256, num_sets=32, ways=4,
+        num_queues=8, queue_depth=1024,
+        ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, 2, fault=fault))
+
+    def wavefront_for_step(step):     # pure in step => replay-deterministic
+        r = np.random.default_rng(step)
+        return jnp.asarray(r.integers(0, args.elems, args.wavefront),
+                           jnp.int32)
+
+    injector = StorageFailureInjector(arr, st, wavefront_for_step)
+
+    result = run_training(
+        train_step,
+        init_state=lambda: {"w": jnp.zeros((), jnp.float32)},
+        batch_for_step=lambda step: injector.batches[step],
+        n_steps=args.steps,
+        ckpt_dir=workdir, ckpt_every=5,
+        max_restarts=args.steps,
+        failure_injector=injector,
+    )
+
+    m = injector.st.metrics
+    print("== fault-tolerant I/O demo ==")
+    print(f"steps completed        : {result.step}/{args.steps}")
+    print(f"storage-triggered      : {len(injector.degraded_steps)} "
+          f"restart(s) at steps {injector.degraded_steps}")
+    print(f"transient errors       : {int(m.transient_errors)} "
+          f"(retries {int(m.retries)}, failed commands "
+          f"{int(m.failed_commands)})")
+    print(f"degraded read lanes    : {int(m.degraded_reads)}")
+    print(f"learned mean           : {float(result.state['w']):+.5f} "
+          f"(true {float(data.mean()):+.5f})")
+    assert result.step == args.steps
+    # every failure the storage layer injected was healed by replay
+    assert result.restarts == len(injector.degraded_steps)
+
+
+if __name__ == "__main__":
+    main()

@@ -78,7 +78,8 @@ from repro.core.metrics import (
     recheck_token_watermark,
 )
 from repro.core.prefetch import PrefetchConfig, readahead_keys
-from repro.core.ssd import ArrayOfSSDs, INTEL_OPTANE_P5800X, device_histogram
+from repro.core.ssd import (ArrayOfSSDs, INTEL_OPTANE_P5800X,
+                            device_histogram, device_of_block)
 from repro.core.storage import HBMStorage, SimStorage
 from repro.utils import pad_to, pytree_dataclass, round_up
 
@@ -263,6 +264,20 @@ class IOToken:
     dev_writes: jax.Array           # (nd,) write commands issued (incl. dropped)
     drop_dev_reads: jax.Array       # (nd,) read commands the rings rejected
     drop_dev_writes: jax.Array      # (nd,) write commands the rings rejected
+    # Per-unique-row fault-hash ordinal of the row's own fetch command
+    # (SubmitReceipt.ticket): -1 for rows that enqueued none — hits,
+    # cross-op riders, ring-dropped and invalid rows.  wait() recomputes
+    # the command's retry/error fate from (device, ticket) with the same
+    # pure FaultModel.command_status the drain uses, so the two agree by
+    # construction.
+    ticket: jax.Array               # (n,) int32
+    ra_ticket: jax.Array | None     # (window,) readahead command tickets
+    # Back-pressure visibility (satellite: drops must not be silent): True
+    # on every request lane whose unique line's command the rings rejected
+    # this submit.  Dropped commands are still served read/write-through,
+    # so the lane's *value* is unaffected — the mask is how callers see
+    # that their configured queue depth is saturating.
+    dropped_mask: jax.Array         # (n,) bool, per request lane
 
 
 @dataclasses.dataclass
@@ -356,7 +371,8 @@ class BamArray:
             cache=C.make_cache(num_sets, ways, block_elems, dtype),
             queues=Q.make_queues(num_queues, queue_depth,
                                  n_devices=ssd.n_devices,
-                                 stripe_blocks=ssd.stripe_blocks),
+                                 stripe_blocks=ssd.stripe_blocks,
+                                 failed_devices=ssd.fault.failed_devices),
             metrics=IOMetrics.zeros(ssd.n_devices),
             storage=state_store,
         )
@@ -635,6 +651,14 @@ class BamArray:
                 f"array (n_devices={self.ssd.n_devices}, "
                 f"stripe_blocks={self.ssd.stripe_blocks}); build the state "
                 "with BamArray.build or make_queues with the same config")
+        # bamlint: ignore[BAM104] -- both sides are static host tuples
+        if qs.failed_devices != self.ssd.fault.failed_devices:
+            raise ValueError(
+                f"queue failed_devices {qs.failed_devices} do not match "
+                f"the SSD fault model's {self.ssd.fault.failed_devices}: "
+                "SQ routing and the device-time charge would remap dead "
+                "stripes differently; build the state with BamArray.build "
+                "or pass the same failed_devices to make_queues")
 
     def _split(self, idx: jax.Array):
         return (idx // self.block_elems).astype(jnp.int32), \
@@ -682,6 +706,7 @@ class BamArray:
         ctx = self.tenant_ctx
         nd = self.ssd.n_devices
         sb = self.ssd.stripe_blocks
+        fd = self.ssd.fault.failed_devices
         mt = st.metrics
         if kind == "prefetch":
             return self._submit_prefetch(st, co, off, valid)
@@ -817,30 +842,40 @@ class BamArray:
         rec_r, rec_w = next(it), next(it)
         n_doorbells = rec_r.n_doorbells + rec_w.n_doorbells
         n_dropped = rec_r.n_dropped + rec_w.n_dropped
-        dev_reads_tok = device_histogram(ukeys, nd, miss, sb)
-        dev_writes_tok = device_histogram(wb_keys, nd, stripe_blocks=sb)
-        drop_reads = device_histogram(read_keys, nd, ~rec_r.accepted, sb)
-        drop_writes = device_histogram(wb_keys, nd, ~rec_w.accepted, sb)
+        dev_reads_tok = device_histogram(ukeys, nd, miss, sb, fd)
+        dev_writes_tok = device_histogram(wb_keys, nd, stripe_blocks=sb,
+                                          failed_devices=fd)
+        drop_reads = device_histogram(read_keys, nd, ~rec_r.accepted, sb, fd)
+        drop_writes = device_histogram(wb_keys, nd, ~rec_w.accepted, sb, fd)
+        # Per-unique-row command tickets (the fault-hash counter) and the
+        # rows whose demand command the rings rejected: both feed the token
+        # so wait() can resolve completion status and callers can see
+        # back-pressure drops per lane instead of only as a global count.
+        ticket_tok = rec_r.ticket
+        drop_u = miss & ~rec_r.accepted
         if kind == "write":
             rec_bt = next(it)
             n_doorbells = n_doorbells + rec_bt.n_doorbells
             n_dropped = n_dropped + rec_bt.n_dropped
             dev_writes_tok = dev_writes_tok + device_histogram(
-                bt_keys, nd, stripe_blocks=sb)
+                bt_keys, nd, stripe_blocks=sb, failed_devices=fd)
             drop_writes = drop_writes + device_histogram(
-                bt_keys, nd, ~rec_bt.accepted, sb)
+                bt_keys, nd, ~rec_bt.accepted, sb, fd)
+            drop_u = drop_u | (byp & ~rec_bt.accepted)
+        ra_ticket_tok = None
         if ra_on:
             rec_rw, rec_ra = next(it), next(it)
             n_doorbells = n_doorbells + rec_rw.n_doorbells + rec_ra.n_doorbells
             n_dropped = n_dropped + rec_rw.n_dropped + rec_ra.n_dropped
             dev_reads_tok = dev_reads_tok + device_histogram(
-                ra_keys, nd, stripe_blocks=sb)
+                ra_keys, nd, stripe_blocks=sb, failed_devices=fd)
             dev_writes_tok = dev_writes_tok + device_histogram(
-                ra_wb_keys, nd, stripe_blocks=sb)
+                ra_wb_keys, nd, stripe_blocks=sb, failed_devices=fd)
             drop_reads = drop_reads + device_histogram(
-                ra_keys, nd, ~rec_ra.accepted, sb)
+                ra_keys, nd, ~rec_ra.accepted, sb, fd)
             drop_writes = drop_writes + device_histogram(
-                ra_wb_keys, nd, ~rec_rw.accepted, sb)
+                ra_wb_keys, nd, ~rec_rw.accepted, sb, fd)
+            ra_ticket_tok = rec_ra.ticket
         depth_now = Q.in_flight(qs2)
         depth_dev = Q.in_flight_per_device(qs2)
 
@@ -901,7 +936,9 @@ class BamArray:
             values=req.values if kind == "write" else None,
             ra_keys=ra_keys_tok,
             dev_reads=dev_reads_tok, dev_writes=dev_writes_tok,
-            drop_dev_reads=drop_reads, drop_dev_writes=drop_writes)
+            drop_dev_reads=drop_reads, drop_dev_writes=drop_writes,
+            ticket=ticket_tok, ra_ticket=ra_ticket_tok,
+            dropped_mask=valid & drop_u[co.inverse_idx])
         return BamState(cache=cache2, queues=qs2, metrics=metrics,
                         storage=new_storage), token
 
@@ -922,7 +959,9 @@ class BamArray:
             pin_slots=jnp.full((0,), -1, jnp.int32),
             values=req.values if req.kind == "write" else None,
             ra_keys=None, dev_reads=zh, dev_writes=zh,
-            drop_dev_reads=zh, drop_dev_writes=zh)
+            drop_dev_reads=zh, drop_dev_writes=zh,
+            ticket=jnp.full((0,), -1, jnp.int32), ra_ticket=None,
+            dropped_mask=jnp.zeros((0,), bool))
         return st, token
 
     def _submit_prefetch(self, st: BamState, co, off, valid
@@ -935,6 +974,7 @@ class BamArray:
         ctx = self.tenant_ctx
         nd = self.ssd.n_devices
         sb = self.ssd.stripe_blocks
+        fd = self.ssd.fault.failed_devices
         mt = st.metrics
         ukeys = co.unique_keys
         uvalid = ukeys >= 0
@@ -977,10 +1017,12 @@ class BamArray:
 
         n_ra = jnp.sum(alloc.ok.astype(jnp.int32))
         n_wb = jnp.sum(wb.astype(jnp.int32))
-        dev_reads_tok = device_histogram(keys, nd, stripe_blocks=sb)
-        dev_writes_tok = device_histogram(wb_keys, nd, stripe_blocks=sb)
-        drop_reads = device_histogram(keys, nd, ~rec_r.accepted, sb)
-        drop_writes = device_histogram(wb_keys, nd, ~rec_w.accepted, sb)
+        dev_reads_tok = device_histogram(keys, nd, stripe_blocks=sb,
+                                         failed_devices=fd)
+        dev_writes_tok = device_histogram(wb_keys, nd, stripe_blocks=sb,
+                                          failed_devices=fd)
+        drop_reads = device_histogram(keys, nd, ~rec_r.accepted, sb, fd)
+        drop_writes = device_histogram(wb_keys, nd, ~rec_w.accepted, sb, fd)
         tok_new = jnp.any(valid).astype(mt.requests.dtype)
         window_now = (mt.tokens_in_flight + tok_new).astype(jnp.int32)
         metrics = dataclasses.replace(
@@ -1005,7 +1047,10 @@ class BamArray:
             ukeys=ukeys, pin_slots=jnp.full_like(ukeys, -1),
             values=None, ra_keys=None,
             dev_reads=dev_reads_tok, dev_writes=dev_writes_tok,
-            drop_dev_reads=drop_reads, drop_dev_writes=drop_writes)
+            drop_dev_reads=drop_reads, drop_dev_writes=drop_writes,
+            ticket=rec_r.ticket, ra_ticket=None,
+            dropped_mask=valid & (alloc.ok
+                                  & ~rec_r.accepted)[co.inverse_idx])
         return BamState(cache=cache1, queues=qs2, metrics=metrics,
                         storage=new_storage), token
 
@@ -1052,15 +1097,41 @@ class BamArray:
         ``wait`` of the same (host) token raises ``ValueError`` instead of
         silently over-releasing its cache pins.  A zero-shaped token (from
         an empty submit) completes as a no-op.
+
+        Thin shim over :meth:`wait_ex`, discarding the per-lane error
+        mask — with the :class:`~repro.core.ssd.FaultModel` disabled (the
+        default) the mask is identically False and nothing is lost.
+        """
+        st, vals, _ = self.wait_ex(st, token)
+        return st, vals
+
+    def wait_ex(self, st: BamState, token: IOToken
+                ) -> Tuple[BamState, jax.Array, jax.Array]:
+        """:meth:`wait` returning ``(state', values, error_mask)``.
+
+        ``error_mask`` is per request lane: True where the lane's unique
+        line's own fetch command retired with an error after exhausting
+        the fault model's retry budget (or was routed to a hard-failed
+        device).  Errored lanes read as 0 and their write payloads are
+        **not** applied; the degradation contract is that a cache line is
+        never filled from a failed fetch — the line is invalidated
+        (un-inflighted, tag freed, never garbage-filled) and the next
+        demand for that key re-fetches it.  Lanes that rode another
+        token's command (cross-op coalescing) or whose command the rings
+        dropped are served by this wait's own DMA and complete OK.  With
+        the fault model disabled the mask is constant False and the op is
+        bit-identical to the fault-free wait.
         """
         _mark_redeemed(token)
         self._check_channels(st)
         if token.ukeys.shape[0] == 0:
             # empty token: nothing was enqueued, pinned or fetched
-            return st, jnp.zeros((0,), self.dtype)
+            return st, jnp.zeros((0,), self.dtype), jnp.zeros((0,), bool)
         ctx = self.tenant_ctx
         nd = self.ssd.n_devices
         sb = self.ssd.stripe_blocks
+        fault = self.ssd.fault
+        fd = fault.failed_devices
         ukeys = token.ukeys
         uvalid = ukeys >= 0
         valid = token.valid
@@ -1075,23 +1146,45 @@ class BamArray:
         #    the WFQ arbitration sort and the per-command materialisation
         #    are skipped (BamRuntime.drain keeps service_all — it *is* the
         #    observable arbitration order).
+        fstats = None                       # fault accounting for this drain
         if self.defer_drain:
             qs2 = st.queues
             reads_charge = token.dev_reads
             writes_charge = token.dev_writes
+            if fault.enabled:
+                # Deferred mode never drains here; account this token's
+                # OWN commands from its ticket stamps (write-backs carry
+                # no token ticket — their errors surface at the round
+                # drain, not in per-token metrics).
+                fstats = self._token_fault_stats(token)
         elif self.fused_rounds:
-            qs2, dr = Q.drain_accounting(st.queues, impl=self.kernel_impl)
+            qs2, dr = Q.drain_accounting(
+                st.queues, impl=self.kernel_impl,
+                fault=fault if fault.enabled else None)
             reads_charge = dr.reads_dev + token.drop_dev_reads
             writes_charge = dr.writes_dev + token.drop_dev_writes
+            if fault.enabled:
+                fstats = dict(err_reads=dr.err_reads_dev,
+                              err_writes=dr.err_writes_dev,
+                              retry_reads=dr.retry_reads_dev,
+                              retry_writes=dr.retry_writes_dev,
+                              transient=dr.transient_errors)
         else:
-            qs2, comps = Q.service_all(st.queues)
+            qs2, comps = Q.service_all(
+                st.queues, fault=fault if fault.enabled else None)
             cvalid = comps.valid
             reads_charge = device_histogram(
-                comps.keys, nd, cvalid & ~comps.is_write, sb) \
+                comps.keys, nd, cvalid & ~comps.is_write, sb, fd) \
                 + token.drop_dev_reads
             writes_charge = device_histogram(
-                comps.keys, nd, cvalid & comps.is_write, sb) \
+                comps.keys, nd, cvalid & comps.is_write, sb, fd) \
                 + token.drop_dev_writes
+            if fault.enabled:
+                fstats = dict(err_reads=comps.err_reads_dev,
+                              err_writes=comps.err_writes_dev,
+                              retry_reads=comps.retry_reads_dev,
+                              retry_writes=comps.retry_writes_dev,
+                              transient=comps.transient)
 
         # 2) fresh probe: lines this token submitted may since have been
         #    filled by another token's wait (cross-op coalescing), written
@@ -1099,21 +1192,36 @@ class BamArray:
         pr2 = C.probe(st.cache, ukeys, uvalid, tenant=ctx.tenant,
                       impl=self.kernel_impl)
         pend = pr2.hit & pr2.inflight              # resident, fill pending
+        # Resolve this token's command fates from the (device, ticket)
+        # stamps — the same pure function the drain accounting uses, so
+        # wait and drain can never disagree about which commands failed.
+        failed_u = jnp.zeros(ukeys.shape, bool)
+        ok_u = jnp.ones(ukeys.shape, bool)
+        if fault.enabled:
+            dev_u = device_of_block(ukeys, nd, sb, fd)
+            ok_u, _, _ = fault.command_status(dev_u, token.ticket)
+            failed_u = uvalid & ~ok_u
         if token.kind == "prefetch":
             # only materialise lines still awaiting their speculative fill
-            need = pend
+            need = pend & ~failed_u
         else:
             # fetch everything not gatherable from the cache: still-pending
-            # grants plus bypassed keys (read/write-through).
-            need = uvalid & (~pr2.hit | pend)
+            # grants plus bypassed keys (read/write-through) — minus rows
+            # whose own command errored: a failed fetch moves no data.
+            need = uvalid & (~pr2.hit | pend) & ~failed_u
 
         # 3) the deferred fetch DMA + completion fill.  Filling only lines
         #    that are *still* in flight makes completion idempotent across
         #    tokens: whoever waits first fills; later waiters see a filled
         #    resident line and never clobber newer data with a re-fetch.
+        #    Failed commands invalidate their pending line instead of
+        #    filling it (never garbage-filled, never left in-flight).
         store = self._store(st)
         lines = self._fetch_gated(store, jnp.where(need, ukeys, -1), need)
-        if self.fused_rounds:
+        if fault.enabled:
+            cache1 = C.fill_complete_status(st.cache, pr2.slot, pend, ok_u,
+                                            lines)
+        elif self.fused_rounds:
             cache1 = C.fill_complete(st.cache, pr2.slot, pend, lines)
         else:
             cache1 = C.fill(st.cache, pr2.slot, pend, lines)
@@ -1128,19 +1236,34 @@ class BamArray:
             ra_pr = C.probe(cache1, ra, ra >= 0, tenant=ctx.tenant,
                             impl=self.kernel_impl)
             ra_pend = ra_pr.hit & ra_pr.inflight
-            lines_ra = self._fetch_gated(store, jnp.where(ra_pend, ra, -1),
-                                         ra_pend)
-            if self.fused_rounds:
+            ra_need = ra_pend
+            ra_ok = jnp.ones(ra.shape, bool)
+            if fault.enabled and token.ra_ticket is not None:
+                dev_ra = device_of_block(ra, nd, sb, fd)
+                ra_ok, _, _ = fault.command_status(dev_ra, token.ra_ticket)
+                # a failed speculative fetch degrades silently: the line
+                # is invalidated, no lane errors (nothing demanded it yet)
+                ra_need = ra_pend & ((ra < 0) | ra_ok)
+            lines_ra = self._fetch_gated(store, jnp.where(ra_need, ra, -1),
+                                         ra_need)
+            if fault.enabled:
+                cache1 = C.fill_complete_status(cache1, ra_pr.slot, ra_pend,
+                                                ra_ok, lines_ra)
+            elif self.fused_rounds:
                 cache1 = C.fill_complete(cache1, ra_pr.slot, ra_pend,
                                          lines_ra)
             else:
                 cache1 = C.fill(cache1, ra_pr.slot, ra_pend, lines_ra)
                 cache1 = C.clear_inflight(
                     cache1, jnp.where(ra_pend, ra_pr.slot, -1))
-            n_fetch = n_fetch + jnp.sum(ra_pend.astype(jnp.int32))
+            n_fetch = n_fetch + jnp.sum(ra_need.astype(jnp.int32))
 
         # 4) op-specific completion.
         u = token.inverse
+        # Lanes whose unique line's own command errored: they read 0, their
+        # write payloads are withheld, and the caller sees them in the
+        # returned error_mask.  Constant False with the fault disabled.
+        err_lane = valid & failed_u[u]
         if token.kind == "read":
             # Gather the hit lanes through the kernel dispatch layer
             # (Pallas scalar-prefetch line gather on TPU — the BlockSpec
@@ -1152,31 +1275,43 @@ class BamArray:
                 impl=self.kernel_impl)
             vals = jnp.where(hit_u, hit_vals, lines[u, off])
             vals = jnp.where(valid, vals, 0).astype(self.dtype)
+            if fault.enabled:
+                # errored pend rows were invalidated, not filled — the
+                # stale probe still says hit, so mask their lanes to 0
+                vals = jnp.where(err_lane, jnp.zeros((), self.dtype), vals)
             cache_f = cache1
         elif token.kind == "write":
             values = token.values
             assert values is not None   # write tokens carry their payload
             # scatter the new element values into resident lines...
+            # (errored lanes excluded: their line was invalidated, their
+            # write did not happen — no torn lines, no phantom dirty bits)
+            wr_lane = valid & ~err_lane if fault.enabled else valid
             slot_r = jnp.where(pr2.hit[u], pr2.slot[u], -1)
             in_cache = slot_r >= 0
-            rows = jnp.where(valid & in_cache, slot_r, cache1.num_lines)
-            cols = jnp.where(valid & in_cache, off, 0)
+            rows = jnp.where(wr_lane & in_cache, slot_r, cache1.num_lines)
+            cols = jnp.where(wr_lane & in_cache, off, 0)
             data = cache1.data.at[rows, cols].set(
                 values.astype(self.dtype), mode="drop")
             cache_f = C._replace_data(cache1, data=data)
             cache_f = C.mark_dirty(cache_f,
-                                   jnp.where(valid & in_cache, slot_r, -1))
-            # ...and write through the lines that have no slot (bypass).
-            byp_u = (~pr2.hit[u]) & valid
+                                   jnp.where(wr_lane & in_cache, slot_r, -1))
+            # ...and write through the lines that have no slot (bypass);
+            # a bypass row whose fetch errored wrote nothing (its RMW
+            # background line never arrived — skipping beats corrupting
+            # storage with a zero-filled line).
+            byp_u = (~pr2.hit[u]) & wr_lane
             byp_rows = jnp.where(byp_u, u, lines.shape[0])
             byp_lines = lines.at[byp_rows, jnp.where(byp_u, off, 0)].set(
                 values.astype(self.dtype), mode="drop")
-            bt_keys = jnp.where(uvalid & ~pr2.hit, ukeys, -1)
+            bt_keys = jnp.where(uvalid & ~pr2.hit & ~failed_u, ukeys, -1)
             if self.storage is None:
                 new_storage = new_storage.write_blocks(bt_keys, byp_lines)
             else:
                 self.storage.write_blocks(bt_keys, byp_lines)
             vals = jnp.where(valid, values, 0).astype(self.dtype)
+            if fault.enabled:
+                vals = jnp.where(err_lane, jnp.zeros((), self.dtype), vals)
         else:                                       # prefetch: no values
             vals = jnp.zeros(off.shape, self.dtype)
             cache_f = cache1
@@ -1188,35 +1323,99 @@ class BamArray:
         #    device busy time (max over channels gates the batch).
         mt = st.metrics
         tok_done = jnp.any(valid).astype(mt.requests.dtype)
+        fault_kw = {}
+        if fstats is not None:
+            n_err = fstats["err_reads"] + fstats["err_writes"]
+            n_retry = fstats["retry_reads"] + fstats["retry_writes"]
+            fault_kw = dict(
+                transient_errors=mt.transient_errors + fstats["transient"],
+                retries=mt.retries + jnp.sum(n_retry),
+                failed_commands=mt.failed_commands + jnp.sum(n_err),
+                degraded_reads=mt.degraded_reads
+                    + jnp.sum(err_lane.astype(jnp.int32)),
+                dev_errors=mt.dev_errors + n_err,
+            )
         metrics = dataclasses.replace(
             mt,
             bytes_from_storage=mt.bytes_from_storage
                 + n_fetch * self.block_bytes,
             tokens_waited=mt.tokens_waited + tok_done,
             tokens_in_flight=mt.tokens_in_flight - tok_done,
-            **self._charge_wait(mt, st.queues, reads_charge, writes_charge),
+            **self._charge_wait(mt, st.queues, reads_charge, writes_charge,
+                                fstats=fstats),
+            **fault_kw,
         )
         return BamState(cache=cache_f, queues=qs2, metrics=metrics,
-                        storage=new_storage), vals
+                        storage=new_storage), vals, err_lane
+
+    def _token_fault_stats(self, token: IOToken) -> dict:
+        """Fault accounting from a token's OWN command tickets (deferred
+        drain: the shared rings are not drained here, so the whole-batch
+        receipt does not exist yet).  Read commands only — write-backs are
+        not ticket-stamped on the token."""
+        fault = self.ssd.fault
+        nd = self.ssd.n_devices
+        sb = self.ssd.stripe_blocks
+        fd = fault.failed_devices
+        devs = jnp.arange(nd, dtype=jnp.int32)
+
+        def _per_dev(dev, w):
+            oh = (dev[:, None] == devs[None, :]).astype(jnp.int32)
+            return jnp.sum(oh * w[:, None].astype(jnp.int32),
+                           axis=0).astype(jnp.int32)
+
+        dev_u = device_of_block(token.ukeys, nd, sb, fd)
+        ok_u, retry_u, trans_u = fault.command_status(dev_u, token.ticket)
+        err_reads = _per_dev(dev_u, ~ok_u)
+        retry_reads = _per_dev(dev_u, retry_u)
+        transient = jnp.sum(trans_u).astype(jnp.int32)
+        if token.ra_ticket is not None:
+            dev_ra = device_of_block(token.ra_keys, nd, sb, fd)
+            ra_ok, ra_retry, ra_trans = fault.command_status(
+                dev_ra, token.ra_ticket)
+            err_reads = err_reads + _per_dev(dev_ra, ~ra_ok)
+            retry_reads = retry_reads + _per_dev(dev_ra, ra_retry)
+            transient = transient + jnp.sum(ra_trans).astype(jnp.int32)
+        zero = jnp.zeros((nd,), jnp.int32)
+        return dict(err_reads=err_reads, err_writes=zero,
+                    retry_reads=retry_reads, retry_writes=zero,
+                    transient=transient)
 
     def _charge_wait(self, mt: IOMetrics, qs: Q.QueueState,
-                     reads_hist: jax.Array, writes_hist: jax.Array) -> dict:
+                     reads_hist: jax.Array, writes_hist: jax.Array,
+                     fstats: dict | None = None) -> dict:
         """Device-time charge for a drain: each channel retires its share at
-        its own Little's-law rate, the straggler gates the batch."""
+        its own Little's-law rate, the straggler gates the batch.
+
+        With fault accounting (``fstats``) the retry/backoff cost lands on
+        the device clocks — every re-issue is charged as
+        ``tail_latency_mult`` extra commands' worth of service time on its
+        device — while the data counters (``dev_reads``/``dev_writes``/
+        ``dev_bytes``) count only commands that *completed*: an errored
+        command burned time but moved no data.  ``fstats=None`` (fault
+        disabled) is the exact pre-fault charge."""
         group_limit = qs.group_size * qs.depth
+        t_reads, t_writes = reads_hist, writes_hist
+        ok_reads, ok_writes = reads_hist, writes_hist
+        if fstats is not None:
+            mult = self.ssd.fault.tail_latency_mult
+            t_reads = reads_hist + mult * fstats["retry_reads"]
+            t_writes = writes_hist + mult * fstats["retry_writes"]
+            ok_reads = reads_hist - fstats["err_reads"]
+            ok_writes = writes_hist - fstats["err_writes"]
         t_read, t_read_dev = self.ssd.service_time_per_device_traced(
-            reads_hist, self.block_bytes, queue_depth_limit=group_limit)
+            t_reads, self.block_bytes, queue_depth_limit=group_limit)
         t_write, t_write_dev = self.ssd.service_time_per_device_traced(
-            writes_hist, self.block_bytes, write=True,
+            t_writes, self.block_bytes, write=True,
             queue_depth_limit=group_limit)
         return dict(
             sim_time_s=mt.sim_time_s + t_read + t_write,
             read_time_s=mt.read_time_s + t_read,
             write_time_s=mt.write_time_s + t_write,
-            dev_reads=mt.dev_reads + reads_hist,
-            dev_writes=mt.dev_writes + writes_hist,
+            dev_reads=mt.dev_reads + ok_reads,
+            dev_writes=mt.dev_writes + ok_writes,
             dev_bytes=mt.dev_bytes
-                + (reads_hist + writes_hist) * self.block_bytes,
+                + (ok_reads + ok_writes) * self.block_bytes,
             dev_time_s=mt.dev_time_s + t_read_dev + t_write_dev,
         )
 
@@ -1286,6 +1485,8 @@ class BamArray:
         ctx = self.tenant_ctx
         nd = self.ssd.n_devices
         sb = self.ssd.stripe_blocks
+        fault = self.ssd.fault
+        fd = fault.failed_devices
         tags = st.cache.tags.reshape(-1)
         dirty = st.cache.dirty.reshape(-1)
         mine = st.cache.owner.reshape(-1) == jnp.int32(ctx.tenant)
@@ -1300,23 +1501,41 @@ class BamArray:
         # submission window), whose device time lands here, on the
         # barrier; their own waits then drain an empty ring.  Ring-dropped
         # flush write-backs are still persisted, so they are charged too.
+        fstats = None
         if self.defer_drain:
             qs2 = qs1
             reads_charge = jnp.zeros((nd,), jnp.int32)
-            writes_charge = device_histogram(keys, nd, stripe_blocks=sb)
+            writes_charge = device_histogram(keys, nd, stripe_blocks=sb,
+                                             failed_devices=fd)
         elif self.fused_rounds:
-            qs2, dr = Q.drain_accounting(qs1, impl=self.kernel_impl)
+            qs2, dr = Q.drain_accounting(
+                qs1, impl=self.kernel_impl,
+                fault=fault if fault.enabled else None)
             reads_charge = dr.reads_dev
             writes_charge = dr.writes_dev \
-                + device_histogram(keys, nd, ~rec_w.accepted, sb)
+                + device_histogram(keys, nd, ~rec_w.accepted, sb, fd)
+            if fault.enabled:
+                fstats = dict(err_reads=dr.err_reads_dev,
+                              err_writes=dr.err_writes_dev,
+                              retry_reads=dr.retry_reads_dev,
+                              retry_writes=dr.retry_writes_dev,
+                              transient=dr.transient_errors)
         else:
-            qs2, comps = Q.service_all(qs1)
+            qs2, comps = Q.service_all(
+                qs1, fault=fault if fault.enabled else None)
             cvalid = comps.valid
             reads_charge = device_histogram(comps.keys, nd,
-                                            cvalid & ~comps.is_write, sb)
+                                            cvalid & ~comps.is_write, sb, fd)
             writes_charge = device_histogram(comps.keys, nd,
-                                             cvalid & comps.is_write, sb) \
-                + device_histogram(keys, nd, ~rec_w.accepted, sb)
+                                             cvalid & comps.is_write,
+                                             sb, fd) \
+                + device_histogram(keys, nd, ~rec_w.accepted, sb, fd)
+            if fault.enabled:
+                fstats = dict(err_reads=comps.err_reads_dev,
+                              err_writes=comps.err_writes_dev,
+                              retry_reads=comps.retry_reads_dev,
+                              retry_writes=comps.retry_writes_dev,
+                              transient=comps.transient)
         store = self._store(st)
         new_storage = st.storage
         if self.storage is None:
@@ -1327,6 +1546,19 @@ class BamArray:
         flushed = (keys >= 0).reshape(st.cache.dirty.shape)
         cache = C._replace_data(st.cache, dirty=st.cache.dirty & ~flushed)
         mt = st.metrics
+        fault_kw = {}
+        if fstats is not None:
+            # Errored flush commands are accounting-only degradation: the
+            # barrier's host write persists every dirty line regardless,
+            # so no data is lost — the counters record the burned attempts.
+            n_err = fstats["err_reads"] + fstats["err_writes"]
+            n_retry = fstats["retry_reads"] + fstats["retry_writes"]
+            fault_kw = dict(
+                transient_errors=mt.transient_errors + fstats["transient"],
+                retries=mt.retries + jnp.sum(n_retry),
+                failed_commands=mt.failed_commands + jnp.sum(n_err),
+                dev_errors=mt.dev_errors + n_err,
+            )
         metrics = dataclasses.replace(
             mt,
             write_ops=mt.write_ops + n_wb,
@@ -1337,7 +1569,9 @@ class BamArray:
                                         depth_now.astype(jnp.int32)),
             dev_max_depth=jnp.maximum(mt.dev_max_depth,
                                       depth_dev.astype(jnp.int32)),
-            **self._charge_wait(mt, st.queues, reads_charge, writes_charge),
+            **self._charge_wait(mt, st.queues, reads_charge, writes_charge,
+                                fstats=fstats),
+            **fault_kw,
         )
         # A flush can retire pending tokens' commands mid-window; re-check
         # the in-flight-token watermark so interleaved flush+wait sequences
@@ -1663,7 +1897,8 @@ class BamRuntime:
             queues=Q.make_queues(num_queues, queue_depth,
                                  n_devices=ssd.n_devices,
                                  stripe_blocks=ssd.stripe_blocks,
-                                 n_tenants=nt, tenant_weights=weights),
+                                 n_tenants=nt, tenant_weights=weights,
+                                 failed_devices=ssd.fault.failed_devices),
             metrics=IOMetrics.zeros(ssd.n_devices),
             tenant_metrics=tuple(IOMetrics.zeros(ssd.n_devices)
                                  for _ in specs),
@@ -1837,6 +2072,18 @@ class BamRuntime:
                                            token)
         return self.absorb(rst, name, st), vals
 
+    def wait_ex(self, rst: RuntimeState, name: str, token: IOToken
+                ) -> Tuple[RuntimeState, jax.Array, jax.Array]:
+        """:meth:`wait` returning the per-lane ``error_mask`` as well (see
+        :meth:`BamArray.wait_ex`).  The errored token's fault counters
+        land in the tenant's own :class:`IOMetrics` first and flow into
+        the global view through :meth:`absorb`'s delta accumulation, so
+        per-tenant error counters keep summing exactly to the global
+        ones."""
+        st, vals, err = self.tenants[name].wait_ex(
+            self.tenant_view(rst, name), token)
+        return self.absorb(rst, name, st), vals, err
+
     def prefetch(self, rst: RuntimeState, name: str, idx: jax.Array,
                  valid: jax.Array | None = None) -> RuntimeState:
         st = self.tenants[name].prefetch(self.tenant_view(rst, name),
@@ -1858,8 +2105,15 @@ class BamRuntime:
         barrier).  The returned :class:`~repro.core.queues.Completions`
         stream is priority-major and weighted-fair across tenants — the
         observable arbitration order.  A no-op on already-empty rings
-        (per-op mode), so callers may drain unconditionally."""
-        qs, comps = Q.service_all(rst.queues)
+        (per-op mode), so callers may drain unconditionally.
+
+        The completion stream carries per-command ``status`` codes when
+        the tenants' shared :class:`~repro.core.ssd.FaultModel` is
+        enabled (all tenants share one ``ArrayOfSSDs``, so any tenant's
+        model is *the* model)."""
+        fault = next(iter(self.tenants.values())).ssd.fault
+        qs, comps = Q.service_all(
+            rst.queues, fault=fault if fault.enabled else None)
         return RuntimeState(cache=rst.cache, queues=qs,
                             metrics=rst.metrics,
                             tenant_metrics=rst.tenant_metrics,

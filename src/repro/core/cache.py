@@ -518,6 +518,72 @@ def fill_complete(cache: CacheState, slots: jax.Array, ok: jax.Array,
     return _replace_data(cache, data=data, inflight=infl)
 
 
+def invalidate_failed(cache: CacheState, slots: jax.Array,
+                      mask: jax.Array) -> CacheState:
+    """Graceful degradation: evict granted-but-never-filled lines whose
+    fetch command errored out past its retry budget.
+
+    The line's tag is freed (so a later access re-allocates and re-fetches
+    it), its in-flight and speculative bits clear, and its dirty bit
+    clears — the data store is **not** touched: a line is never filled
+    from a failed fetch, and a freed tag can never be gathered.  Pins are
+    left to the normal :func:`release` pairing (a still-pinned invalid
+    slot cannot be re-allocated — victim eligibility requires
+    ``refcount == 0`` — so riders holding the pin stay safe and fall back
+    to read-through).
+    """
+    live = mask & (slots >= 0)
+    idx = jnp.where(live, slots, cache.num_lines)        # OOB -> dropped
+    shape2 = (cache.num_sets, cache.ways)
+    tags = cache.tags.reshape(-1).at[idx].set(-1, mode="drop")
+    infl = cache.inflight.reshape(-1).at[idx].set(False, mode="drop")
+    spec = cache.speculative.reshape(-1).at[idx].set(False, mode="drop")
+    dirty = cache.dirty.reshape(-1).at[idx].set(False, mode="drop")
+    return _replace_data(
+        cache, tags=tags.reshape(shape2), inflight=infl.reshape(shape2),
+        speculative=spec.reshape(shape2), dirty=dirty.reshape(shape2))
+
+
+def fill_complete_status(cache: CacheState, slots: jax.Array,
+                         pend: jax.Array, ok: jax.Array,
+                         lines: jax.Array) -> CacheState:
+    """Status-aware fused completion: :func:`fill` the ``pend & ok`` slots,
+    :func:`clear_inflight` every ``pend`` slot, and
+    :func:`invalidate_failed` the ``pend & ~ok`` slots, in ONE
+    :class:`CacheState` construction.
+
+    The fault-enabled counterpart of :func:`fill_complete` (which is the
+    ``ok == True`` special case): failed fetches never reach the data
+    store — their lines leave the wait un-inflighted, tag-free and
+    clean, exactly as :func:`invalidate_failed` documents.  Gated on any
+    pending slot, like the helpers it fuses.
+    """
+    def _commit():
+        good = pend & ok & (slots >= 0)
+        bad = pend & ~ok & (slots >= 0)
+        live = pend & (slots >= 0)
+        idx_g = jnp.where(good, slots, cache.num_lines)  # OOB -> dropped
+        idx_p = jnp.where(live, slots, cache.num_lines)
+        idx_b = jnp.where(bad, slots, cache.num_lines)
+        data = cache.data.at[idx_g].set(lines.astype(cache.data.dtype),
+                                        mode="drop")
+        infl = cache.inflight.reshape(-1).at[idx_p].set(False, mode="drop")
+        tags = cache.tags.reshape(-1).at[idx_b].set(-1, mode="drop")
+        spec = cache.speculative.reshape(-1).at[idx_b].set(False,
+                                                          mode="drop")
+        dirty = cache.dirty.reshape(-1).at[idx_b].set(False, mode="drop")
+        shape2 = (cache.num_sets, cache.ways)
+        return (data, infl.reshape(shape2), tags.reshape(shape2),
+                spec.reshape(shape2), dirty.reshape(shape2))
+
+    data, infl, tags, spec, dirty = jax.lax.cond(
+        jnp.any(pend), _commit,
+        lambda: (cache.data, cache.inflight, cache.tags, cache.speculative,
+                 cache.dirty))
+    return _replace_data(cache, data=data, inflight=infl, tags=tags,
+                         speculative=spec, dirty=dirty)
+
+
 def mark_dirty(cache: CacheState, slots: jax.Array) -> CacheState:
     ok = slots >= 0
     idx = jnp.where(ok, slots, cache.num_lines)          # OOB -> dropped

@@ -48,11 +48,17 @@ class IOMetrics:
     cross_op_coalesced: jax.Array  # line requests merged with a *pending*
     #                                token's in-flight fetch (saved commands)
     max_tokens_in_flight: jax.Array  # high-watermark of the in-flight window
+    # Fault-injection accounting (all zero with the FaultModel disabled).
+    transient_errors: jax.Array  # attempt-level failures (incl. recovered)
+    retries: jax.Array           # command re-issues (bounded by retry_budget)
+    failed_commands: jax.Array   # commands retired with an error status
+    degraded_reads: jax.Array    # element lanes redeemed with error_mask set
     # Per-device channel breakdown, all shape (n_devices,).
     dev_reads: jax.Array         # lines fetched per device (demand + readahead)
     dev_writes: jax.Array        # lines written back per device
     dev_bytes: jax.Array         # bytes moved per device (both directions)
     dev_time_s: jax.Array        # per-device busy time (the straggler signal)
+    dev_errors: jax.Array        # failed commands per device
     dev_max_depth: jax.Array     # per-device in-flight high-watermark, int32
 
     @staticmethod
@@ -70,10 +76,13 @@ class IOMetrics:
             prefetch_issued=f(), prefetch_hits=f(),
             tokens_submitted=f(), tokens_waited=f(), tokens_in_flight=f(),
             cross_op_coalesced=f(), max_tokens_in_flight=i(),
+            transient_errors=f(), retries=f(), failed_commands=f(),
+            degraded_reads=f(),
             dev_reads=jnp.zeros((n_devices,), ftype),
             dev_writes=jnp.zeros((n_devices,), ftype),
             dev_bytes=jnp.zeros((n_devices,), ftype),
             dev_time_s=jnp.zeros((n_devices,), ftype),
+            dev_errors=jnp.zeros((n_devices,), ftype),
             dev_max_depth=jnp.zeros((n_devices,), jnp.int32),
         )
 
@@ -146,11 +155,16 @@ class IOMetrics:
             "tokens_in_flight": float(self.tokens_in_flight),
             "cross_op_coalesced": float(self.cross_op_coalesced),
             "max_tokens_in_flight": int(self.max_tokens_in_flight),
+            "transient_errors": float(self.transient_errors),
+            "retries": float(self.retries),
+            "failed_commands": float(self.failed_commands),
+            "degraded_reads": float(self.degraded_reads),
             "n_devices": self.n_devices,
             "dev_reads": [float(x) for x in jax.device_get(self.dev_reads)],
             "dev_writes": [float(x) for x in jax.device_get(self.dev_writes)],
             "dev_bytes": [float(x) for x in jax.device_get(self.dev_bytes)],
             "dev_time_s": [float(x) for x in jax.device_get(self.dev_time_s)],
+            "dev_errors": [float(x) for x in jax.device_get(self.dev_errors)],
             "dev_max_depth": [int(x)
                               for x in jax.device_get(self.dev_max_depth)],
             "straggler_gap": self.straggler_gap(),

@@ -68,7 +68,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.ssd import device_of_block
+from repro.core.ssd import _alive_devices, device_of_block
 from repro.kernels import ops as _ops
 from repro.utils import pytree_dataclass
 
@@ -83,7 +83,7 @@ PRIO_READAHEAD = 1   # speculative readahead fills (drain last, drop first)
 
 @pytree_dataclass(meta_fields=("num_queues", "depth", "n_devices",
                                 "stripe_blocks", "n_tenants",
-                                "tenant_weights"))
+                                "tenant_weights", "failed_devices"))
 class QueueState:
     """A pool of NVMe submission/completion queue pairs living "in HBM".
 
@@ -94,6 +94,13 @@ class QueueState:
     ``n_tenants``/``tenant_weights`` configure the shared-runtime
     arbitration: commands carry their tenant id and the drain interleaves
     tenants weighted-fair within each priority class.
+
+    ``failed_devices`` (static, normally mirroring the SSD array's
+    :class:`~repro.core.ssd.FaultModel`) lists hard-failed channels:
+    routing remaps their blocks across the surviving groups (see
+    :func:`~repro.core.ssd.device_of_block`), so a dead device's ring
+    group simply stops receiving commands and its load amplifies the
+    survivors' back-pressure.
     """
 
     num_queues: int
@@ -102,12 +109,15 @@ class QueueState:
     stripe_blocks: int
     n_tenants: int
     tenant_weights: tuple   # per-tenant service weights (floats), len n_tenants
+    failed_devices: tuple   # hard-failed device ids (static; usually empty)
     # Submission-queue entries. key < 0 means the slot is free.
     sq_key: jax.Array        # (num_queues, depth) int32 — block key of the command
     sq_dst: jax.Array        # (num_queues, depth) int32 — destination cache slot (or -1)
     sq_is_write: jax.Array   # (num_queues, depth) bool  — write command?
     sq_prio: jax.Array       # (num_queues, depth) int32 — PRIO_DEMAND / PRIO_READAHEAD
     sq_tenant: jax.Array     # (num_queues, depth) int32 — issuing tenant id
+    sq_ticket: jax.Array     # (num_queues, depth) int32 — per-device command
+    #                          ordinal (the fault-hash counter), -1 when free
     # Monotonic virtual pointers (never wrapped; slot = ptr % depth).
     sq_tail: jax.Array       # (num_queues,) int32
     sq_head: jax.Array       # (num_queues,) int32
@@ -133,7 +143,8 @@ class QueueState:
 
 def make_queues(num_queues: int, depth: int, n_devices: int = 1,
                 stripe_blocks: int = 1, n_tenants: int = 1,
-                tenant_weights: tuple | None = None) -> QueueState:
+                tenant_weights: tuple | None = None,
+                failed_devices=()) -> QueueState:
     if n_devices < 1:
         raise ValueError(f"n_devices must be >= 1, got {n_devices}")
     if stripe_blocks < 1:
@@ -153,6 +164,9 @@ def make_queues(num_queues: int, depth: int, n_devices: int = 1,
             f"n_tenants={n_tenants}")
     if any(w <= 0 for w in tenant_weights):
         raise ValueError(f"tenant_weights must be positive: {tenant_weights}")
+    if failed_devices:
+        _alive_devices(n_devices, failed_devices)   # range / all-dead check
+    failed_devices = tuple(sorted({int(d) for d in failed_devices}))
     z = lambda: jnp.zeros((), jnp.int32)
     return QueueState(
         num_queues=num_queues,
@@ -161,11 +175,13 @@ def make_queues(num_queues: int, depth: int, n_devices: int = 1,
         stripe_blocks=stripe_blocks,
         n_tenants=n_tenants,
         tenant_weights=tenant_weights,
+        failed_devices=failed_devices,
         sq_key=jnp.full((num_queues, depth), -1, jnp.int32),
         sq_dst=jnp.full((num_queues, depth), -1, jnp.int32),
         sq_is_write=jnp.zeros((num_queues, depth), bool),
         sq_prio=jnp.zeros((num_queues, depth), jnp.int32),
         sq_tenant=jnp.zeros((num_queues, depth), jnp.int32),
+        sq_ticket=jnp.full((num_queues, depth), -1, jnp.int32),
         sq_tail=jnp.zeros((num_queues,), jnp.int32),
         sq_head=jnp.zeros((num_queues,), jnp.int32),
         rr_ptr=jnp.zeros((n_devices,), jnp.int32),
@@ -186,6 +202,8 @@ class SubmitReceipt:
     queue: jax.Array      # (n,) int32 — queue each request landed in (-1 dropped/invalid)
     vslot: jax.Array      # (n,) int32 — virtual slot (monotonic) in that queue
     accepted: jax.Array   # (n,) bool
+    ticket: jax.Array     # (n,) int32 — per-device command ordinal (the
+    #                       fault-hash counter), -1 when not accepted
     n_accepted: jax.Array  # () int32
     n_dropped: jax.Array   # () int32 — valid requests rejected by back-pressure
     n_doorbells: jax.Array  # () int32 — distinct queues rung by this wavefront
@@ -234,7 +252,8 @@ def enqueue(
             f"tenant {tenant} out of range for n_tenants={qs.n_tenants}")
 
     # --- device routing + ticket assignment (per-device exclusive cumsum) --
-    dev = device_of_block(keys, nd, qs.stripe_blocks)       # (n,)
+    dev = device_of_block(keys, nd, qs.stripe_blocks,
+                          qs.failed_devices)                # (n,)
     onehot = (dev[:, None] == jnp.arange(nd, dtype=jnp.int32)[None, :]) \
         & valid[:, None]                                    # (n, nd)
     onehot = onehot.astype(jnp.int32)
@@ -257,6 +276,15 @@ def enqueue(
     # accepted commands remain contiguous from each tail — ring stays dense.
 
     slot = (vslot % depth).astype(jnp.int32)
+    # Per-device *accepted* ordinal: the command's lifetime-unique fault
+    # ticket.  Base is the cumulative accepted counter (``dev_enqueued``),
+    # so the ordinal is stable across wavefronts and across back-pressure
+    # drops — wait() recomputes a command's fate from (device, ticket)
+    # alone and must see exactly what the drain stamped.
+    acc_oh = onehot * accepted.astype(jnp.int32)[:, None]   # (n, nd)
+    arank = jnp.take_along_axis(
+        jnp.cumsum(acc_oh, axis=0) - acc_oh, dev[:, None], axis=1)[:, 0]
+    ticket_id = (qs.dev_enqueued[dev] + arank).astype(jnp.int32)
     # rejected rows scatter out of bounds and are dropped (never clobber a
     # live slot — the GPU analogue is "thread spins without writing").
     qidx = jnp.where(accepted, queue, nq)
@@ -267,6 +295,7 @@ def enqueue(
     sq_prio = qs.sq_prio.at[qidx, sidx].set(prio, mode="drop")
     sq_tenant = qs.sq_tenant.at[qidx, sidx].set(jnp.int32(tenant),
                                                 mode="drop")
+    sq_ticket = qs.sq_ticket.at[qidx, sidx].set(ticket_id, mode="drop")
 
     # New tails: per queue, number of accepted commands assigned to it.
     per_q = jnp.zeros((nq,), jnp.int32).at[queue].add(accepted.astype(jnp.int32))
@@ -281,6 +310,7 @@ def enqueue(
         queue=jnp.where(accepted, queue, -1).astype(jnp.int32),
         vslot=jnp.where(accepted, vslot, -1).astype(jnp.int32),
         accepted=accepted,
+        ticket=jnp.where(accepted, ticket_id, -1).astype(jnp.int32),
         n_accepted=n_accepted,
         n_dropped=n_dropped,
         n_doorbells=n_doorbells,
@@ -294,8 +324,9 @@ def enqueue(
         num_queues=nq, depth=depth, n_devices=nd,
         stripe_blocks=qs.stripe_blocks,
         n_tenants=qs.n_tenants, tenant_weights=qs.tenant_weights,
+        failed_devices=qs.failed_devices,
         sq_key=sq_key, sq_dst=sq_dst, sq_is_write=sq_is_write,
-        sq_prio=sq_prio, sq_tenant=sq_tenant,
+        sq_prio=sq_prio, sq_tenant=sq_tenant, sq_ticket=sq_ticket,
         sq_tail=sq_tail, sq_head=qs.sq_head,
         rr_ptr=(qs.rr_ptr + k_dev) % gsize,
         ticket_total=qs.ticket_total + k,
@@ -361,15 +392,16 @@ def enqueue_segments(
         prio_l.append(prio)
         bounds.append((off, off + n))
         off += n
-    (sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant, sq_tail, rr_ptr,
-     queue, vslot, accepted, per_seg) = _ops.sq_enqueue(
+    (sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant, sq_ticket, sq_tail,
+     rr_ptr, queue, vslot, accepted, ticket_id, per_seg) = _ops.sq_enqueue(
         qs.sq_key, qs.sq_dst, qs.sq_is_write, qs.sq_prio, qs.sq_tenant,
-        qs.sq_tail, qs.sq_head, qs.rr_ptr,
+        qs.sq_ticket, qs.sq_tail, qs.sq_head, qs.rr_ptr, qs.dev_enqueued,
         jnp.concatenate(keys_l), jnp.concatenate(dst_l),
         jnp.concatenate(w_l), jnp.concatenate(prio_l),
         jnp.concatenate(valid_l),
         seg_bounds=tuple(bounds), n_devices=nd,
-        stripe_blocks=qs.stripe_blocks, tenant=tenant, impl=impl)
+        stripe_blocks=qs.stripe_blocks, tenant=tenant,
+        failed_devices=qs.failed_devices, impl=impl)
 
     receipts = []
     for i, (s, e) in enumerate(bounds):
@@ -378,6 +410,7 @@ def enqueue_segments(
             queue=jnp.where(acc, queue[s:e], -1).astype(jnp.int32),
             vslot=jnp.where(acc, vslot[s:e], -1).astype(jnp.int32),
             accepted=acc,
+            ticket=jnp.where(acc, ticket_id[s:e], -1).astype(jnp.int32),
             n_accepted=per_seg["n_accepted"][i],
             n_dropped=per_seg["n_dropped"][i],
             n_doorbells=per_seg["n_doorbells"][i],
@@ -387,8 +420,9 @@ def enqueue_segments(
         num_queues=nq, depth=depth, n_devices=nd,
         stripe_blocks=qs.stripe_blocks,
         n_tenants=qs.n_tenants, tenant_weights=qs.tenant_weights,
+        failed_devices=qs.failed_devices,
         sq_key=sq_key, sq_dst=sq_dst, sq_is_write=sq_is_write,
-        sq_prio=sq_prio, sq_tenant=sq_tenant,
+        sq_prio=sq_prio, sq_tenant=sq_tenant, sq_ticket=sq_ticket,
         sq_tail=sq_tail, sq_head=qs.sq_head,
         rr_ptr=rr_ptr,
         ticket_total=qs.ticket_total + jnp.sum(per_seg["n_tickets"]),
@@ -424,12 +458,27 @@ class Completions:
     prio: jax.Array      # (num_queues*depth,) int32
     tenant: jax.Array    # (num_queues*depth,) int32 — issuing tenant id
     valid: jax.Array     # (num_queues*depth,) bool
+    status: jax.Array    # (num_queues*depth,) int32 — 0 OK, 1 error (all
+    #                      zero when the drain ran without a fault model)
     count: jax.Array     # () int32
     count_dev: jax.Array  # (n_devices,) int32 — drained per device channel
     count_tenant: jax.Array  # (n_tenants,) int32 — drained per tenant
+    # Fault accounting over this drain (zeros when fault is disabled).
+    error_dev: jax.Array     # (n_devices,) int32 — errored commands
+    error_tenant: jax.Array  # (n_tenants,) int32
+    retries_dev: jax.Array   # (n_devices,) int32 — re-issued attempts
+    transient: jax.Array     # () int32 — attempt-level transient failures
+    # Direction split of the error/retry counts: reads and writes charge
+    # different device clocks, so the caller needs both sides separately
+    # (error_dev == err_reads_dev + err_writes_dev, same for retries).
+    err_reads_dev: jax.Array    # (n_devices,) int32
+    err_writes_dev: jax.Array   # (n_devices,) int32
+    retry_reads_dev: jax.Array  # (n_devices,) int32
+    retry_writes_dev: jax.Array  # (n_devices,) int32
 
 
-def service_all(qs: QueueState) -> Tuple[QueueState, Completions]:
+def service_all(qs: QueueState, fault=None
+                ) -> Tuple[QueueState, Completions]:
     """The simulated NVMe controller: consume every pending SQ entry.
 
     Returns the drained command list; the caller performs the actual block
@@ -451,13 +500,23 @@ def service_all(qs: QueueState) -> Tuple[QueueState, Completions]:
     ``(i+1)/weight[t]`` for the i-th pending command of tenant ``t``
     *within that class*), the per-tenant analogue of NVMe
     weighted-round-robin arbitration.
+
+    ``fault`` (a :class:`~repro.core.ssd.FaultModel`, static) resolves
+    each pending command's bounded retry loop from its ``(device,
+    ticket)`` stamp: the per-command ``status`` codes ride the completion
+    stream through the arbitration sort, and the per-device/per-tenant
+    error and retry counts come back order-free.  Errored commands still
+    *drain* (they consumed their ring slot and their attempts' device
+    time); what they never do is deliver data — the caller must not fill
+    a cache line from a status != 0 completion.  ``fault=None`` (or a
+    disabled model) keeps every pre-existing output bit-identical.
     """
     pending = qs.sq_key >= 0
+    nd, gsize = qs.n_devices, qs.group_size
     count = jnp.sum(pending.astype(jnp.int32))
     # Queues [d*group, (d+1)*group) belong to device d.
     count_dev = jnp.sum(
-        pending.reshape(qs.n_devices, qs.group_size * qs.depth)
-        .astype(jnp.int32), axis=1)
+        pending.reshape(nd, gsize * qs.depth).astype(jnp.int32), axis=1)
     flat_pend = pending.reshape(-1)
     flat_prio = qs.sq_prio.reshape(-1)
     flat_tenant = qs.sq_tenant.reshape(-1)
@@ -466,8 +525,47 @@ def service_all(qs: QueueState) -> Tuple[QueueState, Completions]:
     count_tenant = jnp.sum(
         (flat_tenant[:, None] == tclasses[None, :]) & flat_pend[:, None],
         axis=0).astype(jnp.int32)
+    # bamlint: ignore[BAM104] -- fault is static config, not a traced value
+    if fault is not None and fault.enabled:
+        # Entry device is positional: queue // group_size.  The retry loop
+        # is closed-form over (device, ticket) — see command_status.
+        dev_of_entry = (jnp.arange(qs.num_queues, dtype=jnp.int32)
+                        // gsize)[:, None]
+        ok_e, retries_e, transient_e = fault.command_status(
+            dev_of_entry, qs.sq_ticket)
+        err_e = pending & ~ok_e
+        flat_status = jnp.where(err_e, jnp.int32(1),
+                                jnp.int32(0)).reshape(-1)
+        error_dev = jnp.sum(err_e.reshape(nd, gsize * qs.depth)
+                            .astype(jnp.int32), axis=1)
+        error_tenant = jnp.sum(
+            (flat_tenant[:, None] == tclasses[None, :])
+            & (err_e.reshape(-1))[:, None], axis=0).astype(jnp.int32)
+        retries_dev = jnp.sum(
+            jnp.where(pending, retries_e, 0).reshape(nd, gsize * qs.depth),
+            axis=1).astype(jnp.int32)
+        transient = jnp.sum(jnp.where(pending, transient_e,
+                                      0)).astype(jnp.int32)
+
+        def _dir_dev(mask, w):
+            m = jnp.where(mask, w, 0).reshape(nd, gsize * qs.depth)
+            return jnp.sum(m, axis=1).astype(jnp.int32)
+
+        err_writes_dev = _dir_dev(err_e & qs.sq_is_write, 1)
+        err_reads_dev = error_dev - err_writes_dev
+        retry_writes_dev = _dir_dev(pending & qs.sq_is_write, retries_e)
+        retry_reads_dev = retries_dev - retry_writes_dev
+    else:
+        flat_status = jnp.zeros_like(flat_prio)
+        error_dev = jnp.zeros((nd,), jnp.int32)
+        error_tenant = jnp.zeros((nt,), jnp.int32)
+        retries_dev = jnp.zeros((nd,), jnp.int32)
+        transient = jnp.zeros((), jnp.int32)
+        err_reads_dev = err_writes_dev = jnp.zeros((nd,), jnp.int32)
+        retry_reads_dev = retry_writes_dev = jnp.zeros((nd,), jnp.int32)
     flat = (qs.sq_key.reshape(-1), qs.sq_dst.reshape(-1),
-            qs.sq_is_write.reshape(-1), flat_prio, flat_tenant, flat_pend)
+            qs.sq_is_write.reshape(-1), flat_prio, flat_tenant, flat_pend,
+            flat_status)
 
     # Demand first, readahead second, empty slots last; stable keeps
     # queue-major order within each class.  When every pending command is
@@ -476,16 +574,15 @@ def service_all(qs: QueueState) -> Tuple[QueueState, Completions]:
     # arbitration sort (an argsort over all num_queues*depth slots) only
     # runs when readahead or genuine tenant contention is in flight.
     def _arbitrate(f):
-        keys, dst, is_write, prio, ten, pend = f
+        pend, prio = f[5], f[3]
         sort_key = jnp.where(pend, prio, jnp.int32(jnp.iinfo(jnp.int32).max))
         order = jnp.argsort(sort_key, stable=True)
-        return (keys[order], dst[order], is_write[order], prio[order],
-                ten[order], pend[order])
+        return tuple(x[order] for x in f)
 
     if nt == 1:
         has_ra = jnp.any(flat_pend & (flat_prio != PRIO_DEMAND))
-        keys_o, dst_o, is_write_o, prio_o, ten_o, pend_o = jax.lax.cond(
-            has_ra, _arbitrate, lambda f: f, flat)
+        (keys_o, dst_o, is_write_o, prio_o, ten_o, pend_o,
+         status_o) = jax.lax.cond(has_ra, _arbitrate, lambda f: f, flat)
     else:
         # Weighted-fair queuing across tenants.  Within each priority
         # class, the i-th pending command of tenant t (in ring order)
@@ -495,7 +592,7 @@ def service_all(qs: QueueState) -> Tuple[QueueState, Completions]:
         # backlog never delays its own readahead relative to other
         # tenants' readahead — WFQ orders strictly *within* a class.
         def _wfq(f):
-            keys, dst, is_write, prio, ten, pend = f
+            prio, ten, pend = f[3], f[4], f[5]
             w = jnp.asarray(qs.tenant_weights, jnp.float32)
             cls = ten * 2 + jnp.clip(prio, 0, 1)         # (tenant, prio)
             cids = jnp.arange(2 * nt, dtype=jnp.int32)
@@ -512,22 +609,30 @@ def service_all(qs: QueueState) -> Tuple[QueueState, Completions]:
 
         has_ra = jnp.any(flat_pend & (flat_prio != PRIO_DEMAND))
         multi = jnp.sum((count_tenant > 0).astype(jnp.int32)) > 1
-        keys_o, dst_o, is_write_o, prio_o, ten_o, pend_o = jax.lax.cond(
-            has_ra | multi, _wfq, lambda f: f, flat)
+        (keys_o, dst_o, is_write_o, prio_o, ten_o, pend_o,
+         status_o) = jax.lax.cond(has_ra | multi, _wfq, lambda f: f, flat)
     comps = Completions(
         keys=keys_o, dst=dst_o, is_write=is_write_o, prio=prio_o,
-        tenant=ten_o, valid=pend_o, count=count, count_dev=count_dev,
+        tenant=ten_o, valid=pend_o, status=status_o,
+        count=count, count_dev=count_dev,
         count_tenant=count_tenant,
+        error_dev=error_dev, error_tenant=error_tenant,
+        retries_dev=retries_dev, transient=transient,
+        err_reads_dev=err_reads_dev, err_writes_dev=err_writes_dev,
+        retry_reads_dev=retry_reads_dev,
+        retry_writes_dev=retry_writes_dev,
     )
     qs2 = QueueState(
         num_queues=qs.num_queues, depth=qs.depth, n_devices=qs.n_devices,
         stripe_blocks=qs.stripe_blocks,
         n_tenants=nt, tenant_weights=qs.tenant_weights,
+        failed_devices=qs.failed_devices,
         sq_key=jnp.full_like(qs.sq_key, -1),
         sq_dst=jnp.full_like(qs.sq_dst, -1),
         sq_is_write=jnp.zeros_like(qs.sq_is_write),
         sq_prio=jnp.zeros_like(qs.sq_prio),
         sq_tenant=jnp.zeros_like(qs.sq_tenant),
+        sq_ticket=jnp.full_like(qs.sq_ticket, -1),
         sq_tail=qs.sq_tail,
         sq_head=qs.sq_tail,           # all consumed
         rr_ptr=qs.rr_ptr,
@@ -562,9 +667,17 @@ class DrainReceipt:
     count_tenant: jax.Array  # (n_tenants,) int32
     reads_dev: jax.Array     # (n_devices,) int32 — read commands per device
     writes_dev: jax.Array    # (n_devices,) int32 — write commands per device
+    # Fault accounting (zeros when the drain ran without a fault model).
+    errors_dev: jax.Array       # (n_devices,) int32 — errored commands
+    errors_tenant: jax.Array    # (n_tenants,) int32
+    err_reads_dev: jax.Array    # (n_devices,) int32 — errored read commands
+    err_writes_dev: jax.Array   # (n_devices,) int32 — errored write commands
+    retry_reads_dev: jax.Array  # (n_devices,) int32 — read re-issues
+    retry_writes_dev: jax.Array  # (n_devices,) int32 — write re-issues
+    transient_errors: jax.Array  # () int32 — attempt-level failures
 
 
-def drain_accounting(qs: QueueState, impl: str = "auto"
+def drain_accounting(qs: QueueState, impl: str = "auto", fault=None
                      ) -> Tuple[QueueState, DrainReceipt]:
     """Drain every pending SQ entry, returning accounting only.
 
@@ -581,19 +694,28 @@ def drain_accounting(qs: QueueState, impl: str = "auto"
     every command in device *d*'s ring group has
     ``device_of_block(key) == d``, so group-reshaped sums equal the
     key-striped histograms over the drained stream.
+
+    ``fault`` (static) adds order-free error/retry accounting from the
+    ``sq_ticket`` stamps, exactly matching what :func:`service_all` would
+    report over the same rings; disabled, the receipt's fault fields are
+    zeros and every pre-existing output stays bit-identical.
     """
-    count, count_dev, count_tenant, reads_dev, writes_dev = _ops.wfq_drain(
-        qs.sq_key, qs.sq_is_write, qs.sq_tenant,
-        n_devices=qs.n_devices, n_tenants=qs.n_tenants, impl=impl)
+    (count, count_dev, count_tenant, reads_dev, writes_dev,
+     fstats) = _ops.wfq_drain(
+        qs.sq_key, qs.sq_is_write, qs.sq_tenant, qs.sq_ticket,
+        n_devices=qs.n_devices, n_tenants=qs.n_tenants, fault=fault,
+        impl=impl)
     qs2 = QueueState(
         num_queues=qs.num_queues, depth=qs.depth, n_devices=qs.n_devices,
         stripe_blocks=qs.stripe_blocks,
         n_tenants=qs.n_tenants, tenant_weights=qs.tenant_weights,
+        failed_devices=qs.failed_devices,
         sq_key=jnp.full_like(qs.sq_key, -1),
         sq_dst=jnp.full_like(qs.sq_dst, -1),
         sq_is_write=jnp.zeros_like(qs.sq_is_write),
         sq_prio=jnp.zeros_like(qs.sq_prio),
         sq_tenant=jnp.zeros_like(qs.sq_tenant),
+        sq_ticket=jnp.full_like(qs.sq_ticket, -1),
         sq_tail=qs.sq_tail,
         sq_head=qs.sq_tail,           # all consumed
         rr_ptr=qs.rr_ptr,
@@ -611,7 +733,8 @@ def drain_accounting(qs: QueueState, impl: str = "auto"
     )
     return qs2, DrainReceipt(count=count, count_dev=count_dev,
                              count_tenant=count_tenant,
-                             reads_dev=reads_dev, writes_dev=writes_dev)
+                             reads_dev=reads_dev, writes_dev=writes_dev,
+                             **fstats)
 
 
 def in_flight(qs: QueueState) -> jax.Array:

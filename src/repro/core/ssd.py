@@ -90,7 +90,21 @@ SSD_PRESETS: dict[str, SSDSpec] = {
 
 
 # --- block -> device striping ------------------------------------------------
-def device_of_block(keys, n_devices: int, stripe_blocks: int = 1):
+def _alive_devices(n_devices: int, failed_devices) -> tuple:
+    """Surviving device ids, in order, after masking out hard failures."""
+    failed = frozenset(int(d) for d in failed_devices)
+    bad = [d for d in failed if d < 0 or d >= n_devices]
+    if bad:
+        raise ValueError(f"failed_devices {sorted(bad)} out of range for "
+                         f"n_devices={n_devices}")
+    alive = tuple(d for d in range(n_devices) if d not in failed)
+    if not alive:
+        raise ValueError("all devices marked failed: nothing left to route to")
+    return alive
+
+
+def device_of_block(keys, n_devices: int, stripe_blocks: int = 1,
+                    failed_devices=()):
     """Stripe block keys across the array's devices (round-robin by stripe).
 
     ``stripe_blocks`` is the striping unit: device = ``(key // stripe) %
@@ -99,22 +113,44 @@ def device_of_block(keys, n_devices: int, stripe_blocks: int = 1):
     channels); coarse stripes model shard/column-aligned placement, where a
     hot region lives on one device and shows up as a straggler.
 
+    ``failed_devices`` lists hard-failed device ids: blocks whose home
+    stripe lands on a dead channel remap deterministically across the
+    survivors (``alive[(key // stripe) % n_alive]``), so a device dropout
+    degrades into amplified load on the remaining stripes instead of lost
+    commands.  Empty (the default) leaves the routing bit-identical to the
+    fault-free path.
+
     Works on Python ints and on traced int arrays; invalid keys (< 0) map to
     device 0 so they can be masked downstream without out-of-range scatters.
     The same function routes SQ commands (:mod:`repro.core.queues`) and
     charges per-device service time, so the two can never disagree.
     """
     if isinstance(keys, int):
-        return (keys // stripe_blocks) % n_devices if keys >= 0 else 0
+        if keys < 0:
+            return 0
+        dev = (keys // stripe_blocks) % n_devices
+        if failed_devices:
+            alive = _alive_devices(n_devices, failed_devices)
+            if dev not in alive:
+                dev = alive[(keys // stripe_blocks) % len(alive)]
+        return dev
     import jax.numpy as jnp
 
     k = jnp.asarray(keys)
-    return jnp.where(k >= 0, (k // stripe_blocks) % n_devices,
-                     0).astype(jnp.int32)
+    dev = ((k // stripe_blocks) % n_devices).astype(jnp.int32)
+    if failed_devices:
+        alive = _alive_devices(n_devices, failed_devices)
+        alive_t = jnp.asarray(alive, dtype=jnp.int32)
+        remap = alive_t[((k // stripe_blocks) % len(alive)).astype(jnp.int32)]
+        dead = jnp.zeros(dev.shape, dtype=bool)
+        for d in failed_devices:
+            dead = dead | (dev == int(d))
+        dev = jnp.where(dead, remap, dev)
+    return jnp.where(k >= 0, dev, 0).astype(jnp.int32)
 
 
 def device_histogram(keys, n_devices: int, mask=None,
-                     stripe_blocks: int = 1):
+                     stripe_blocks: int = 1, failed_devices=()):
     """Count valid block keys per device: (n_devices,) int32 (jit-safe)."""
     import jax.numpy as jnp
 
@@ -122,7 +158,7 @@ def device_histogram(keys, n_devices: int, mask=None,
     valid = k >= 0
     if mask is not None:
         valid = valid & mask
-    dev = device_of_block(k, n_devices, stripe_blocks)
+    dev = device_of_block(k, n_devices, stripe_blocks, failed_devices)
     # one-hot reduction, not a scatter-add: integer sums are order-free
     # (bit-identical) and XLA:CPU vectorizes the (m, n_devices) sum where
     # it would serialize m scattered updates
@@ -130,6 +166,147 @@ def device_histogram(keys, n_devices: int, mask=None,
         & valid[..., None]
     return jnp.sum(onehot, axis=tuple(range(onehot.ndim - 1)),
                    dtype=jnp.int32)
+
+
+# --- fault injection ---------------------------------------------------------
+_FAULT_PROB_BITS = 24   # error rates quantize to multiples of 2^-24 (exact)
+
+
+def _fmix32(h):
+    """murmur3 finalizer over uint32 — avalanches the counter hash so the
+    per-(device, ticket, attempt) failure decisions are statistically
+    uniform while staying a pure function of the inputs (bit-reproducible,
+    no host RNG, safe under jit/donation/bucketing)."""
+    import jax.numpy as jnp
+
+    h = jnp.asarray(h).astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Deterministic fault injection for an :class:`ArrayOfSSDs`.
+
+    * ``transient_error_rate`` — per-command-attempt failure probability,
+      decided by a counter-based hash of ``(device, ticket, attempt)``;
+      quantized to multiples of ``2^-24`` so the threshold compare is an
+      exact integer test.
+    * ``tail_latency_mult`` — service-time multiplier charged for each
+      retried attempt (backoff: a retry costs more than a first issue).
+    * ``failed_devices`` — hard-failed device ids; their blocks remap
+      across survivors (see :func:`device_of_block`) and any command that
+      still reaches them errors immediately.
+    * ``retry_budget`` — bounded re-issues per command before the command
+      retires with an error status and the read degrades.
+    * ``seed`` — hash salt; different seeds give independent fault
+      schedules, the same seed is bit-reproducible.
+
+    The model is **static configuration** (hashable, compared by value):
+    the traced fault computation is only built when :attr:`enabled`, so a
+    disabled model leaves every compiled graph bit-identical to the
+    fault-free path.
+    """
+
+    transient_error_rate: float = 0.0
+    tail_latency_mult: float = 1.0
+    failed_devices: tuple = ()
+    retry_budget: int = 3
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.transient_error_rate <= 1.0:
+            raise ValueError("transient_error_rate must be in [0, 1]")
+        if self.tail_latency_mult < 1.0:
+            raise ValueError("tail_latency_mult must be >= 1 (a retry can "
+                             "not be cheaper than a first issue)")
+        if self.retry_budget < 0:
+            raise ValueError("retry_budget must be >= 0")
+        object.__setattr__(
+            self, "failed_devices",
+            tuple(sorted({int(d) for d in self.failed_devices})))
+
+    @property
+    def threshold(self) -> int:
+        """Integer failure threshold: P(attempt fails) = threshold / 2^24."""
+        return int(round(self.transient_error_rate * (1 << _FAULT_PROB_BITS)))
+
+    @property
+    def enabled(self) -> bool:
+        return self.threshold > 0 or bool(self.failed_devices)
+
+    def attempt_failed(self, dev, ticket, attempt: int):
+        """Did attempt #``attempt`` of command ``ticket`` on ``dev`` fail?
+
+        Pure counter-based decision (jit-safe, order-free): hash the three
+        counters with the static seed, compare the low 24 bits against the
+        quantized rate.  ``dev``/``ticket`` may be traced int arrays;
+        ``attempt`` is a static Python int (the retry loop is unrolled).
+        """
+        import jax.numpy as jnp
+
+        d = jnp.asarray(dev).astype(jnp.uint32)
+        t = jnp.asarray(ticket).astype(jnp.uint32)
+        h = (d * jnp.uint32(0x9E3779B1)) \
+            ^ (t * jnp.uint32(0x85EBCA77)) \
+            ^ jnp.uint32((attempt * 0xC2B2AE3D) & 0xFFFFFFFF) \
+            ^ jnp.uint32((self.seed * 0x27D4EB2F) & 0xFFFFFFFF)
+        h = _fmix32(h)
+        mask = jnp.uint32((1 << _FAULT_PROB_BITS) - 1)
+        return (h & mask) < jnp.uint32(self.threshold)
+
+    def command_status(self, dev, ticket):
+        """Resolve a command's bounded retry loop in closed form.
+
+        Returns ``(ok, retries, transient)`` elementwise over ``dev`` /
+        ``ticket`` (broadcast together):
+
+        * ``ok`` — bool, the command eventually completed (some attempt
+          ``<= retry_budget`` succeeded on a live device);
+        * ``retries`` — int32, re-issues actually made (leading failed
+          attempts, capped at the budget — the final failure of an
+          exhausted command is not re-issued);
+        * ``transient`` — int32, attempt-level transient failures
+          (including the ones a retry later recovered).
+
+        Rows with ``ticket < 0`` carry no command and report
+        ``(True, 0, 0)``; a hard-failed device errors immediately without
+        burning retries (the controller knows the channel is dead).  The
+        retry loop is **statically unrolled** over ``retry_budget + 1``
+        attempts, so the result is a pure jit-safe function of the inputs
+        — ``wait`` and the drain recompute it independently and agree by
+        construction.
+        """
+        import jax.numpy as jnp
+
+        d = jnp.asarray(dev)
+        t = jnp.asarray(ticket)
+        d, t = jnp.broadcast_arrays(d, t)
+        has_cmd = t >= 0
+        if self.threshold == 0:
+            all_failed = jnp.zeros(t.shape, dtype=bool)
+            transient = jnp.zeros(t.shape, dtype=jnp.int32)
+        else:
+            prefix = jnp.ones(t.shape, dtype=bool)
+            transient = jnp.zeros(t.shape, dtype=jnp.int32)
+            for attempt in range(self.retry_budget + 1):
+                prefix = prefix & self.attempt_failed(d, t, attempt)
+                transient = transient + prefix.astype(jnp.int32)
+            all_failed = prefix
+        hard = jnp.zeros(t.shape, dtype=bool)
+        for fd in self.failed_devices:
+            hard = hard | (d == int(fd))
+        live = has_cmd & ~hard
+        ok = ~has_cmd | (live & ~all_failed)
+        retries = jnp.where(
+            live, jnp.minimum(transient, jnp.int32(self.retry_budget)),
+            0).astype(jnp.int32)
+        transient = jnp.where(live, transient, 0).astype(jnp.int32)
+        return ok, retries, transient
 
 
 # --- Little's law ------------------------------------------------------------
@@ -166,13 +343,16 @@ class ArrayOfSSDs:
 
     ``stripe_blocks`` sets the block→device striping unit (see
     :func:`device_of_block`): 1 = cache-line interleave (BaM's layout),
-    larger = shard-aligned placement.
+    larger = shard-aligned placement.  ``fault`` injects deterministic
+    command errors / device dropout (see :class:`FaultModel`); the default
+    model is disabled and leaves every path bit-identical.
     """
 
     spec: SSDSpec
     n_devices: int = 1
     accel_link_bw: float = PCIE_GEN4_X16_BW  # GPU/TPU-side ingest bound
     stripe_blocks: int = 1
+    fault: FaultModel = FaultModel()
 
     def peak_read_iops(self, block_bytes: int) -> float:
         dev = self.n_devices * min(

@@ -95,10 +95,11 @@ def cache_probe(tags, keys, *, owner=None, tenant=0, block_m=512,
                               block_m=block_m, interpret=itp)
 
 
-def sq_enqueue(sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant,
-               sq_tail, sq_head, rr_ptr,
+def sq_enqueue(sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant, sq_ticket,
+               sq_tail, sq_head, rr_ptr, dev_enqueued,
                keys, dst, is_write, prio, valid, *,
                seg_bounds, n_devices, stripe_blocks, tenant,
+               failed_devices=(),
                impl: Impl = "auto", interpret: bool | None = None):
     """Fused multi-segment SQ enqueue (one scatter round per ring field)
     — see :func:`repro.kernels.ref.sq_enqueue_ref` for exact semantics.
@@ -110,21 +111,25 @@ def sq_enqueue(sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant,
     """
     del impl, interpret
     return _ref.sq_enqueue_ref(
-        sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant,
-        sq_tail, sq_head, rr_ptr, keys, dst, is_write, prio, valid,
+        sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant, sq_ticket,
+        sq_tail, sq_head, rr_ptr, dev_enqueued,
+        keys, dst, is_write, prio, valid,
         seg_bounds=seg_bounds, n_devices=n_devices,
-        stripe_blocks=stripe_blocks, tenant=tenant)
+        stripe_blocks=stripe_blocks, tenant=tenant,
+        failed_devices=failed_devices)
 
 
-def wfq_drain(sq_key, sq_is_write, sq_tenant, *, n_devices, n_tenants,
+def wfq_drain(sq_key, sq_is_write, sq_tenant, sq_ticket=None, *,
+              n_devices, n_tenants, fault=None,
               impl: Impl = "auto", interpret: bool | None = None):
     """Closed-form drain accounting (no completion-stream sort) — see
     :func:`repro.kernels.ref.wfq_drain_ref`.  Reduction-only; all backends
     share the jnp oracle (same rationale as :func:`sq_enqueue`).
     """
     del impl, interpret
-    return _ref.wfq_drain_ref(sq_key, sq_is_write, sq_tenant,
-                              n_devices=n_devices, n_tenants=n_tenants)
+    return _ref.wfq_drain_ref(sq_key, sq_is_write, sq_tenant, sq_ticket,
+                              n_devices=n_devices, n_tenants=n_tenants,
+                              fault=fault)
 
 
 def probe_allocate(tags, owner, refcount, dirty, speculative, clock_hand,

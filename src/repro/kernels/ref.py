@@ -359,9 +359,10 @@ def probe_allocate_ref(tags, owner, refcount, dirty, speculative, clock_hand,
 
 
 def sq_enqueue_ref(sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant,
-                   sq_tail, sq_head, rr_ptr,
+                   sq_ticket, sq_tail, sq_head, rr_ptr, dev_enqueued,
                    keys, dst, is_write, prio, valid, *,
-                   seg_bounds, n_devices, stripe_blocks, tenant):
+                   seg_bounds, n_devices, stripe_blocks, tenant,
+                   failed_devices=()):
     """Fused multi-segment SQ enqueue — one scatter round for a whole
     submission (demand reads + write-backs + bypass writes + readahead).
 
@@ -379,13 +380,21 @@ def sq_enqueue_ref(sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant,
     pairs are distinct across segments and scatter order cannot matter;
     rejected commands scatter out of bounds and drop.
 
-    Returns ``(sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant, sq_tail,
-    rr_ptr, queue, vslot, accepted, per_seg)`` where ``queue``/``vslot``/
-    ``accepted`` are concatenated per-command routing results (unmasked —
-    the caller builds receipts) and ``per_seg`` is a dict of stacked
-    per-segment statistics: ``n_accepted``, ``n_dropped``, ``n_doorbells``,
-    ``n_tickets`` (each ``(S,)``) and ``dev_dropped``, ``dev_accepted``
-    (each ``(S, n_devices)``).
+    Returns ``(sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant, sq_ticket,
+    sq_tail, rr_ptr, queue, vslot, accepted, ticket_id, per_seg)`` where
+    ``queue``/``vslot``/``accepted``/``ticket_id`` are concatenated
+    per-command routing results (unmasked — the caller builds receipts)
+    and ``per_seg`` is a dict of stacked per-segment statistics:
+    ``n_accepted``, ``n_dropped``, ``n_doorbells``, ``n_tickets`` (each
+    ``(S,)``) and ``dev_dropped``, ``dev_accepted`` (each
+    ``(S, n_devices)``).
+
+    ``ticket_id`` is the command's per-device *accepted* ordinal
+    (``dev_enqueued`` base plus a running in-submission rank) — the
+    counter the :class:`~repro.core.ssd.FaultModel` hashes; it is stamped
+    into the ``sq_ticket`` ring alongside the other five fields (the
+    packed scatter grows to six lanes).  ``failed_devices`` routes around
+    hard-failed channels exactly as the sequential enqueue does.
     """
     from repro.core.ssd import device_of_block
     nq, depth = sq_key.shape
@@ -393,12 +402,13 @@ def sq_enqueue_ref(sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant,
     nd = n_devices
     tail = sq_tail
     rr = rr_ptr
-    q_parts, v_parts, a_parts = [], [], []
+    dev_base = dev_enqueued
+    q_parts, v_parts, a_parts, t_parts = [], [], [], []
     n_acc, n_drop, n_db, n_tick = [], [], [], []
     dev_drop, dev_acc = [], []
     for (s, e) in seg_bounds:
         k_s, v_s = keys[s:e], valid[s:e]
-        dev = device_of_block(k_s, nd, stripe_blocks)
+        dev = device_of_block(k_s, nd, stripe_blocks, failed_devices)
         onehot = ((dev[:, None] == jnp.arange(nd, dtype=jnp.int32)[None, :])
                   & v_s[:, None]).astype(jnp.int32)
         ticket = jnp.take_along_axis(
@@ -419,6 +429,15 @@ def sq_enqueue_ref(sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant,
         tail = tail + per_q
         rr = (rr + k_dev) % gsize
         drops = v_s & ~fits
+        # per-device accepted ordinal with a running cross-segment base —
+        # bit-identical to the per-call `dev_enqueued[dev] + rank` of the
+        # sequential enqueue path
+        acc_oh = onehot * acc_i[:, None]
+        arank = jnp.take_along_axis(
+            jnp.cumsum(acc_oh, axis=0) - acc_oh, dev[:, None], axis=1)[:, 0]
+        dev_acc_seg = jnp.sum(acc_oh, axis=0)
+        t_parts.append((dev_base[dev] + arank).astype(jnp.int32))
+        dev_base = dev_base + dev_acc_seg
         q_parts.append(queue)
         v_parts.append(vslot)
         a_parts.append(accepted)
@@ -428,46 +447,50 @@ def sq_enqueue_ref(sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant,
         n_tick.append(jnp.sum(k_dev))
         dev_drop.append(jnp.sum(onehot * drops.astype(jnp.int32)[:, None],
                                 axis=0))
-        dev_acc.append(jnp.sum(onehot * acc_i[:, None], axis=0))
+        dev_acc.append(dev_acc_seg)
 
     queue = jnp.concatenate(q_parts)
     vslot = jnp.concatenate(v_parts)
     accepted = jnp.concatenate(a_parts)
+    ticket_id = jnp.concatenate(t_parts)
     qidx = jnp.where(accepted, queue, nq)
     sidx = jnp.where(accepted, (vslot % depth).astype(jnp.int32), 0)
 
     def _commit(rings):
-        rk, rd, rw, rp, rt = rings
-        # ONE packed scatter, not five: the ring fields share the same
-        # (queue, slot) indices, so stacking them into a (nq, depth, 5)
-        # view turns five n-update scatters into one whose updates are
-        # contiguous 5-lane windows — XLA:CPU processes scattered updates
+        rk, rd, rw, rp, rt, rtk = rings
+        # ONE packed scatter, not six: the ring fields share the same
+        # (queue, slot) indices, so stacking them into a (nq, depth, 6)
+        # view turns six n-update scatters into one whose updates are
+        # contiguous 6-lane windows — XLA:CPU processes scattered updates
         # serially, so update *count* is the cost.  The int32 round-trip
         # of the bool field and the unpack slices are bit-exact.
         packed = jnp.stack(
-            [rk, rd, rw.astype(jnp.int32), rp, rt], axis=-1)
+            [rk, rd, rw.astype(jnp.int32), rp, rt, rtk], axis=-1)
         upd = jnp.stack(
             [keys, dst, is_write.astype(jnp.int32), prio,
-             jnp.broadcast_to(jnp.int32(tenant), keys.shape)], axis=-1)
+             jnp.broadcast_to(jnp.int32(tenant), keys.shape),
+             ticket_id], axis=-1)
         packed = packed.at[qidx, sidx].set(upd, mode="drop")
         return (packed[..., 0], packed[..., 1], packed[..., 2] != 0,
-                packed[..., 3], packed[..., 4])
+                packed[..., 3], packed[..., 4], packed[..., 5])
 
     # Hit fast path: a wavefront that enqueues nothing (every demand lane
     # was a cache hit) drops every update, so the rings pass through
-    # bit-identical — skip the five full-ring scatters entirely.
-    sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant = jax.lax.cond(
-        jnp.any(accepted), _commit, lambda rings: rings,
-        (sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant))
+    # bit-identical — skip the six full-ring scatters entirely.
+    sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant, sq_ticket = \
+        jax.lax.cond(
+            jnp.any(accepted), _commit, lambda rings: rings,
+            (sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant, sq_ticket))
     per_seg = dict(
         n_accepted=jnp.stack(n_acc), n_dropped=jnp.stack(n_drop),
         n_doorbells=jnp.stack(n_db), n_tickets=jnp.stack(n_tick),
         dev_dropped=jnp.stack(dev_drop), dev_accepted=jnp.stack(dev_acc))
-    return (sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant, tail, rr,
-            queue, vslot, accepted, per_seg)
+    return (sq_key, sq_dst, sq_is_write, sq_prio, sq_tenant, sq_ticket,
+            tail, rr, queue, vslot, accepted, ticket_id, per_seg)
 
 
-def wfq_drain_ref(sq_key, sq_is_write, sq_tenant, *, n_devices, n_tenants):
+def wfq_drain_ref(sq_key, sq_is_write, sq_tenant, sq_ticket=None, *,
+                  n_devices, n_tenants, fault=None):
     """Closed-form drain accounting — the reduction half of
     :func:`repro.core.queues.service_all` without materialising (or
     sorting) the completion stream.
@@ -477,9 +500,17 @@ def wfq_drain_ref(sq_key, sq_is_write, sq_tenant, *, n_devices, n_tenants):
     pending SQ entries, and the read/write split per device falls out of
     the ``sq_is_write`` ring field — no 32k-lane histogram over a sorted
     ``Completions`` vector.  Returns ``(count, count_dev, count_tenant,
-    reads_dev, writes_dev)``, bit-identical to counting ``service_all``'s
-    completions (the WFQ/priority *ordering* permutes the stream but every
-    reduction here is order-free).
+    reads_dev, writes_dev, fstats)``, bit-identical to counting
+    ``service_all``'s completions (the WFQ/priority *ordering* permutes
+    the stream but every reduction here is order-free).
+
+    ``fstats`` carries the fault accounting keyed like the extra
+    :class:`~repro.core.queues.DrainReceipt` fields.  With ``fault``
+    enabled it resolves each pending command's closed-form retry loop from
+    its ``(device, sq_ticket)`` stamp (same pure
+    :meth:`~repro.core.ssd.FaultModel.command_status` function the waiter
+    applies to its token tickets — the two agree by construction);
+    otherwise it is all zeros and no fault computation is traced.
     """
     nq, depth = sq_key.shape
     gsize = nq // n_devices
@@ -495,4 +526,40 @@ def wfq_drain_ref(sq_key, sq_is_write, sq_tenant, *, n_devices, n_tenants):
     count_tenant = jnp.sum(
         (flat_t[:, None] == jnp.arange(n_tenants, dtype=jnp.int32)[None, :])
         & flat_p[:, None], axis=0).astype(jnp.int32)
-    return count, count_dev, count_tenant, reads_dev, writes_dev
+
+    def _group_sum(x_i32):
+        return jnp.sum(x_i32.reshape(n_devices, gsize * depth),
+                       axis=1).astype(jnp.int32)
+
+    if fault is not None and fault.enabled:
+        dev_of_entry = (jnp.arange(nq, dtype=jnp.int32) // gsize)[:, None]
+        ok_e, retries_e, transient_e = fault.command_status(
+            dev_of_entry, sq_ticket)
+        err = pending & ~ok_e
+        errors_dev = _group_sum(err.astype(jnp.int32))
+        errors_tenant = jnp.sum(
+            (flat_t[:, None]
+             == jnp.arange(n_tenants, dtype=jnp.int32)[None, :])
+            & err.reshape(-1)[:, None], axis=0).astype(jnp.int32)
+        err_writes_dev = _group_sum((err & sq_is_write).astype(jnp.int32))
+        fstats = dict(
+            errors_dev=errors_dev,
+            errors_tenant=errors_tenant,
+            err_reads_dev=errors_dev - err_writes_dev,
+            err_writes_dev=err_writes_dev,
+            retry_reads_dev=_group_sum(
+                jnp.where(pending & ~sq_is_write, retries_e, 0)),
+            retry_writes_dev=_group_sum(
+                jnp.where(pending & sq_is_write, retries_e, 0)),
+            transient_errors=jnp.sum(
+                jnp.where(pending, transient_e, 0)).astype(jnp.int32),
+        )
+    else:
+        zd = jnp.zeros((n_devices,), jnp.int32)
+        fstats = dict(
+            errors_dev=zd, errors_tenant=jnp.zeros((n_tenants,), jnp.int32),
+            err_reads_dev=zd, err_writes_dev=zd,
+            retry_reads_dev=zd, retry_writes_dev=zd,
+            transient_errors=jnp.zeros((), jnp.int32),
+        )
+    return count, count_dev, count_tenant, reads_dev, writes_dev, fstats

@@ -24,6 +24,8 @@ SMOKE_ARGS = {
     "serve_lm": ["--requests", "2", "--slots", "2", "--max-seq", "64",
                  "--new-tokens", "4", "--hot-window", "16"],
     "train_lm": ["--steps", "3", "--seq", "32", "--batch", "2"],
+    "fault_tolerant_io": ["--elems", "65536", "--steps", "12",
+                          "--wavefront", "256", "--error-rate", "0.004"],
 }
 
 
@@ -31,8 +33,8 @@ SMOKE_ARGS = {
 def test_example_smokes(name, monkeypatch, capsys, tmp_path):
     path = EXAMPLES_DIR / f"{name}.py"
     argv = [str(path)] + SMOKE_ARGS[name]
-    if name == "train_lm":
-        argv += ["--workdir", str(tmp_path / "train_demo")]
+    if name in ("train_lm", "fault_tolerant_io"):
+        argv += ["--workdir", str(tmp_path / f"{name}_demo")]
     monkeypatch.setattr(sys, "argv", argv)
     runpy.run_path(str(path), run_name="__main__")
     out = capsys.readouterr().out

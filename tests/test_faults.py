@@ -1,0 +1,405 @@
+"""Fault-injection coverage: the degradation contract under injected errors.
+
+A :class:`~repro.core.ssd.FaultModel` makes commands fail deterministically
+(counter-based hash of ``(device, ticket, attempt)``).  The contract this
+file pins down:
+
+* values **never** degrade silently — an errored read lane returns 0 *and*
+  its lane is flagged in the ``error_mask`` from ``wait_ex``; an errored
+  write lane withholds its payload (storage keeps the old bytes);
+* a cache line is never filled from a failed fetch — the line is
+  invalidated, and cache bookkeeping (pins, inflight bits, refcounts)
+  returns to zero after every token is waited even when *every* command
+  fails (``rate=1.0``);
+* per-lane ``dropped_mask`` on the token flags ring back-pressure drops at
+  submit time (satellite of the same robustness PR);
+* per-tenant error counters sum exactly to the global ones through the
+  shared :class:`~repro.core.BamRuntime`;
+* the fused and legacy drain paths agree bit-for-bit under faults, the
+  schedule is a pure function of the seed, and a *disabled* model (rate 0,
+  no failed devices) is bit-identical to the default fault-free build.
+
+Same engine as ``test_oracle.py``: hypothesis drives the search when
+installed; fixed-seed examples keep the coverage in the tier-1 suite.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import BamArray, BamRuntime, IORequest, TenantSpec
+from repro.core.ssd import ArrayOfSSDs, FaultModel, INTEL_OPTANE_P5800X
+
+AOPS = ("read", "write", "flush")
+
+
+def _tree_equal(a, b, where=""):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb), f"{where}: leaf count {len(la)} != {len(lb)}"
+    for i, (x, y) in enumerate(zip(la, lb)):
+        xa, ya = np.asarray(jax.device_get(x)), np.asarray(jax.device_get(y))
+        assert xa.shape == ya.shape and xa.dtype == ya.dtype, \
+            f"{where}: leaf {i} {xa.shape}/{xa.dtype} vs {ya.shape}/{ya.dtype}"
+        assert np.array_equal(xa, ya), f"{where}: leaf {i} differs"
+
+
+def _cache_quiescent(cache):
+    assert not bool(np.asarray(cache.refcount).any()), "pins leaked"
+    assert not bool(np.asarray(cache.inflight).any()), "inflight bit leaked"
+
+
+def run_fault_ops(num_sets, ways, block_elems, n_devices, queue_depth,
+                  seed, op_kinds, *, rate=0.3, retry_budget=1,
+                  fault_seed=0):
+    """Random op sequence vs the numpy oracle, with injected faults.
+
+    The oracle is maintained through the per-lane ``error_mask`` that
+    ``wait_ex`` reports: an errored read lane must be exactly 0, an
+    errored write lane must *not* land in the oracle (nor, transitively,
+    in storage after flush).  Every surviving lane must be exact.
+    """
+    rng = np.random.default_rng(seed)
+    size = int(rng.integers(block_elems, 6 * block_elems * max(num_sets, 1)))
+    data = rng.standard_normal(size).astype(np.float32)
+    oracle = data.copy()
+    fault = FaultModel(transient_error_rate=rate, tail_latency_mult=2.0,
+                       retry_budget=retry_budget, seed=fault_seed)
+    arr, st_ = BamArray.build(
+        data, block_elems=block_elems, num_sets=num_sets, ways=ways,
+        num_queues=2 * n_devices, queue_depth=queue_depth,
+        ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, n_devices, fault=fault))
+
+    def check_storage():
+        flat = np.asarray(arr.storage.data).reshape(-1)[:size]
+        np.testing.assert_array_equal(flat, oracle)
+
+    for kind in op_kinds:
+        m = int(rng.integers(1, 25))
+        idx = rng.integers(-2, size + 3, m).astype(np.int32)
+        valid = (idx >= 0) & (idx < size)
+        if kind == "read":
+            st_, tok = arr.submit(st_, IORequest.read(jnp.asarray(idx)))
+            st_, vals, err = arr.wait_ex(st_, tok)
+            err = np.asarray(err)
+            vals = np.asarray(vals)
+            assert not err[~valid].any(), "error_mask set on invalid lanes"
+            expect = np.where(valid, oracle[np.clip(idx, 0, size - 1)], 0.0)
+            ok = valid & ~err
+            np.testing.assert_array_equal(vals[ok], expect[ok])
+            np.testing.assert_array_equal(vals[err], 0.0)
+        elif kind == "write":
+            uidx = np.unique(idx)
+            wvals = rng.standard_normal(len(uidx)).astype(np.float32)
+            st_, tok = arr.submit(
+                st_, IORequest.write(jnp.asarray(uidx), jnp.asarray(wvals)))
+            st_, _, err = arr.wait_ex(st_, tok)
+            err = np.asarray(err)
+            landed = (uidx >= 0) & (uidx < size) & ~err
+            oracle[uidx[landed]] = wvals[landed]
+        elif kind == "flush":
+            st_ = arr.flush(st_)
+            assert not bool(st_.cache.dirty.any()), "flush left dirty lines"
+            check_storage()
+
+    # closing barrier: everything persists (flush's host write-back keeps
+    # every surviving dirty line), pins and inflight bits are all released.
+    st_ = arr.flush(st_)
+    assert not bool(st_.cache.dirty.any())
+    check_storage()
+    _cache_quiescent(st_.cache)
+    # queue conservation survives faults: every accepted command drains.
+    np.testing.assert_array_equal(np.asarray(st_.queues.dev_enqueued),
+                                  np.asarray(st_.queues.dev_completed))
+    mt = st_.metrics
+    assert int(mt.failed_commands) == int(np.asarray(mt.dev_errors).sum())
+
+
+@given(st.integers(1, 8),                   # num_sets
+       st.integers(1, 4),                   # ways
+       st.sampled_from([2, 4, 8]),          # block_elems
+       st.integers(1, 2),                   # n_devices
+       st.sampled_from([2, 8, 64]),         # queue_depth (2 forces drops)
+       st.integers(0, 2 ** 31 - 1),         # data / wavefront seed
+       st.lists(st.sampled_from(AOPS), min_size=1, max_size=8),
+       st.sampled_from([0.05, 0.3, 1.0]),   # transient error rate
+       st.integers(0, 3))                   # retry budget
+@settings(max_examples=25, deadline=None)
+def test_faulty_bam_array_matches_numpy_oracle(num_sets, ways, block_elems,
+                                               n_devices, queue_depth, seed,
+                                               op_kinds, rate, budget):
+    run_fault_ops(num_sets, ways, block_elems, n_devices, queue_depth,
+                  seed, op_kinds, rate=rate, retry_budget=budget,
+                  fault_seed=seed & 0xFFFF)
+
+
+_EXAMPLES = [
+    # (num_sets, ways, block_elems, n_devices, depth, seed, ops,
+    #  rate, retry_budget)
+    (4, 2, 4, 1, 64, 0, ["read", "write", "read", "flush", "read"],
+     0.3, 1),
+    (1, 1, 2, 1, 2, 1, ["write", "read", "write", "flush", "read"],
+     0.5, 0),
+    (8, 4, 8, 2, 8, 2, ["read", "write", "read", "write", "flush"],
+     0.05, 3),
+    (2, 3, 4, 2, 4, 3, ["write", "flush", "write", "read", "flush",
+                        "read", "read"], 1.0, 1),
+    (5, 2, 2, 1, 8, 4, ["read"] * 3 + ["write"] * 2 + ["flush", "read"],
+     0.3, 2),
+]
+
+
+@pytest.mark.parametrize("case", _EXAMPLES,
+                         ids=[f"seed{c[5]}_rate{c[7]}" for c in _EXAMPLES])
+def test_fault_oracle_examples(case):
+    (num_sets, ways, block_elems, n_devices, depth, seed, ops,
+     rate, budget) = case
+    run_fault_ops(num_sets, ways, block_elems, n_devices, depth, seed, ops,
+                  rate=rate, retry_budget=budget, fault_seed=seed)
+
+
+# =========================================== total failure: rate = 1.0
+def test_every_command_fails_leaves_state_clean():
+    """rate=1.0, budget=0: every fetch errors.  No line may be filled, no
+    pin or inflight bit may leak, every read lane is (0, error), and
+    storage is untouched by the withheld writes."""
+    rng = np.random.default_rng(11)
+    data = rng.standard_normal(512).astype(np.float32)
+    fault = FaultModel(transient_error_rate=1.0, retry_budget=0)
+    arr, st_ = BamArray.build(
+        data, block_elems=8, num_sets=8, ways=2, num_queues=4,
+        queue_depth=64, ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, 2, fault=fault))
+
+    idx = jnp.asarray(rng.integers(0, 512, 48), jnp.int32)
+    st_, t1 = arr.submit(st_, IORequest.read(idx))
+    widx = np.unique(rng.integers(0, 512, 20)).astype(np.int32)
+    st_, t2 = arr.submit(st_, IORequest.write(
+        jnp.asarray(widx), jnp.zeros((len(widx),), jnp.float32)))
+    st_, vals, err1 = arr.wait_ex(st_, t1)
+    st_, _, err2 = arr.wait_ex(st_, t2)
+
+    np.testing.assert_array_equal(np.asarray(vals), 0.0)
+    assert bool(np.asarray(err1).all()), \
+        "rate=1.0 must error every valid read lane"
+    # no fill ever happened: every tag is still invalid, nothing dirty
+    assert bool((np.asarray(st_.cache.tags) == -1).all())
+    assert not bool(np.asarray(st_.cache.dirty).any())
+    _cache_quiescent(st_.cache)
+    st_ = arr.flush(st_)
+    np.testing.assert_array_equal(
+        np.asarray(arr.storage.data).reshape(-1)[:512], data)
+    mt = st_.metrics
+    assert int(mt.failed_commands) > 0
+    assert int(mt.degraded_reads) == int(np.asarray(err1).sum()) \
+        + int(np.asarray(err2).sum())
+    np.testing.assert_array_equal(np.asarray(st_.queues.dev_enqueued),
+                                  np.asarray(st_.queues.dev_completed))
+
+
+def test_retry_budget_recovers_transients():
+    """A generous retry budget turns a moderate transient rate into zero
+    failed commands — and charges the backoff as extra device time."""
+    rng = np.random.default_rng(5)
+    data = rng.standard_normal(1024).astype(np.float32)
+    idx = jnp.asarray(rng.integers(0, 1024, 64), jnp.int32)
+
+    def run(fault):
+        arr, st_ = BamArray.build(
+            data, block_elems=8, num_sets=16, ways=2, num_queues=4,
+            queue_depth=128,
+            ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, 2, fault=fault))
+        vals, st_ = arr.read(st_, idx)
+        return np.asarray(vals), st_.metrics
+
+    clean_vals, clean_mt = run(FaultModel())
+    vals, mt = run(FaultModel(transient_error_rate=0.25, retry_budget=8,
+                              tail_latency_mult=4.0, seed=3))
+    np.testing.assert_array_equal(vals, clean_vals)
+    assert int(mt.failed_commands) == 0
+    assert int(mt.degraded_reads) == 0
+    assert int(mt.retries) > 0
+    assert int(mt.transient_errors) >= int(mt.retries)
+    assert float(mt.sim_time_s) > float(clean_mt.sim_time_s), \
+        "retry backoff must charge extra device service time"
+
+
+# ====================================================== dropped_mask
+def test_dropped_mask_flags_ring_drops():
+    """Satellite: per-lane drop visibility at submit.  A depth-2 ring pool
+    cannot hold a 40-miss wavefront; the overflow lanes are flagged on the
+    token and still served read-through at wait (exact values)."""
+    rng = np.random.default_rng(9)
+    data = rng.standard_normal(4096).astype(np.float32)
+    arr, st_ = BamArray.build(
+        data, block_elems=4, num_sets=64, ways=4, num_queues=2,
+        queue_depth=2, ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, 1))
+    # 40 distinct lines >> 2*2 ring slots
+    idx = jnp.asarray(np.arange(40) * 4, jnp.int32)
+    st_, tok = arr.submit(st_, IORequest.read(idx))
+    dropped = np.asarray(tok.dropped_mask)
+    assert dropped.any(), "depth-2 rings must drop most of a 40-line burst"
+    assert not dropped.all(), "the first ring slots must accept"
+    st_, vals, err = arr.wait_ex(st_, tok)
+    np.testing.assert_array_equal(np.asarray(vals), data[np.asarray(idx)])
+    assert not np.asarray(err).any(), \
+        "fault model disabled: dropped lanes are read-through, not errors"
+
+    # deep rings: nothing dropped
+    arr2, st2 = BamArray.build(
+        data, block_elems=4, num_sets=64, ways=4, num_queues=2,
+        queue_depth=1024, ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, 1))
+    st2, tok2 = arr2.submit(st2, IORequest.read(idx))
+    assert not np.asarray(tok2.dropped_mask).any()
+    # ticket stamps: accepted rows get distinct per-device ordinals
+    tick = np.asarray(tok2.ticket)
+    acc = tick[tick >= 0]
+    assert len(np.unique(acc)) == len(acc)
+
+
+# ==================================== dead device: remap + zero errors
+def test_hard_failed_device_remaps_cleanly():
+    rng = np.random.default_rng(21)
+    data = rng.standard_normal(2048).astype(np.float32)
+    fault = FaultModel(failed_devices=(1,))
+    arr, st_ = BamArray.build(
+        data, block_elems=8, num_sets=32, ways=2, num_queues=4,
+        queue_depth=256,
+        ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, 2, fault=fault))
+    idx = jnp.asarray(rng.integers(0, 2048, 96), jnp.int32)
+    st_, tok = arr.submit(st_, IORequest.read(idx))
+    st_, vals, err = arr.wait_ex(st_, tok)
+    np.testing.assert_array_equal(np.asarray(vals),
+                                  data[np.asarray(idx)])
+    assert not np.asarray(err).any(), \
+        "remapped traffic must not error"
+    mt = st_.metrics
+    assert int(mt.failed_commands) == 0
+    assert int(np.asarray(mt.dev_reads)[1]) == 0, \
+        "no command may reach the hard-failed device"
+    assert int(np.asarray(mt.dev_reads)[0]) > 0
+
+
+# ===================================== fused == legacy under faults
+def test_fused_legacy_parity_under_fault():
+    rng = np.random.default_rng(17)
+    data = rng.standard_normal(4096).astype(np.float32)
+    fault = FaultModel(transient_error_rate=0.3, retry_budget=1,
+                       tail_latency_mult=2.0, seed=7)
+    kw = dict(block_elems=16, num_sets=16, ways=4, num_queues=4,
+              queue_depth=64,
+              ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, 2, fault=fault))
+    arr, st_f = BamArray.build(data, **kw)
+    _, st_l = BamArray.build(data, **kw)
+    leg = dataclasses.replace(arr, fused_rounds=False,
+                              _jit_ops={}, _trace_counts={})
+
+    for rnd in range(4):
+        idx = jnp.asarray(rng.integers(0, 4096, 40), jnp.int32)
+        st_f, tf = arr.submit(st_f, IORequest.read(idx))
+        st_l, tl = leg.submit(st_l, IORequest.read(idx))
+        _tree_equal(tf.ticket, tl.ticket, f"round {rnd} ticket")
+        _tree_equal(tf.dropped_mask, tl.dropped_mask,
+                    f"round {rnd} dropped_mask")
+        st_f, vf, ef = arr.wait_ex(st_f, tf)
+        st_l, vl, el = leg.wait_ex(st_l, tl)
+        _tree_equal(vf, vl, f"round {rnd} values")
+        _tree_equal(ef, el, f"round {rnd} error_mask")
+        _tree_equal(st_f.metrics, st_l.metrics, f"round {rnd} metrics")
+    _tree_equal(st_f.cache, st_l.cache, "final CacheState")
+
+
+# ================================ determinism + disabled bit-identity
+def _one_faulty_round(fault, seed=23):
+    rng = np.random.default_rng(seed)
+    data = rng.standard_normal(2048).astype(np.float32)
+    arr, st_ = BamArray.build(
+        data, block_elems=8, num_sets=16, ways=2, num_queues=4,
+        queue_depth=32,
+        ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, 2, fault=fault))
+    idx = jnp.asarray(rng.integers(0, 2048, 64), jnp.int32)
+    st_, tok = arr.submit(st_, IORequest.read(idx))
+    st_, vals, err = arr.wait_ex(st_, tok)
+    uw = np.unique(rng.integers(0, 2048, 32)).astype(np.int32)
+    st_, tw = arr.submit(st_, IORequest.write(
+        jnp.asarray(uw), jnp.asarray(rng.standard_normal(len(uw)),
+                                     dtype=jnp.float32)))
+    st_, _, errw = arr.wait_ex(st_, tw)
+    st_ = arr.flush(st_)
+    return vals, err, errw, st_
+
+
+def test_fault_schedule_is_deterministic():
+    f = FaultModel(transient_error_rate=0.4, retry_budget=1, seed=42)
+    a = _one_faulty_round(f)
+    b = _one_faulty_round(f)
+    _tree_equal(a[0], b[0], "values")
+    _tree_equal(a[1], b[1], "read error_mask")
+    _tree_equal(a[2], b[2], "write error_mask")
+    _tree_equal(a[3].metrics, b[3].metrics, "metrics")
+    # a different seed gives an independent schedule
+    c = _one_faulty_round(dataclasses.replace(f, seed=43))
+    assert not np.array_equal(np.asarray(a[1]), np.asarray(c[1])) or \
+        not np.array_equal(np.asarray(a[2]), np.asarray(c[2])), \
+        "different fault seeds produced identical error masks"
+
+
+def test_disabled_fault_model_is_bit_identical():
+    """threshold=0 and no failed devices => `enabled` is False and the
+    whole round — values, metrics, cache, queues — is bit-identical to the
+    default build, even with non-default latency/seed knobs set."""
+    a = _one_faulty_round(FaultModel())
+    b = _one_faulty_round(FaultModel(transient_error_rate=0.0,
+                                     tail_latency_mult=8.0, seed=99,
+                                     retry_budget=7))
+    _tree_equal(a[0], b[0], "values")
+    assert not np.asarray(a[1]).any() and not np.asarray(b[1]).any()
+    _tree_equal(a[3].metrics, b[3].metrics, "metrics")
+    _tree_equal(a[3].cache, b[3].cache, "cache")
+    _tree_equal(a[3].queues, b[3].queues, "queues")
+
+
+# =========================== runtime: per-tenant error conservation
+@pytest.mark.parametrize("drain", ["per_op", "deferred"])
+def test_runtime_tenant_error_counters_sum_exactly(drain):
+    rng = np.random.default_rng(31)
+    da = rng.standard_normal(1024).astype(np.float32)
+    db = rng.standard_normal(1024).astype(np.float32)
+    fault = FaultModel(transient_error_rate=0.35, retry_budget=1, seed=13)
+    rt, rst = BamRuntime.build(
+        [TenantSpec("a", da, block_elems=8, weight=1.0),
+         TenantSpec("b", db, block_elems=8, weight=2.0)],
+        num_sets=16, ways=4, num_queues=4, queue_depth=64,
+        ssd=ArrayOfSSDs(INTEL_OPTANE_P5800X, 2, fault=fault),
+        drain=drain)
+
+    seen = {"a": 0, "b": 0}
+    toks = []
+    for rnd in range(3):
+        for name, base in (("a", da), ("b", db)):
+            idx = jnp.asarray(rng.integers(0, 1024, 32), jnp.int32)
+            rst, tok = rt.submit(rst, name, IORequest.read(idx))
+            toks.append((name, base, idx, tok))
+        while toks:
+            name, base, idx, tok = toks.pop()
+            rst, vals, err = rt.wait_ex(rst, name, tok)
+            err = np.asarray(err)
+            seen[name] += int(err.sum())
+            ok = ~err
+            np.testing.assert_array_equal(np.asarray(vals)[ok],
+                                          base[np.asarray(idx)][ok])
+            np.testing.assert_array_equal(np.asarray(vals)[err], 0.0)
+        if drain == "deferred":
+            rst, _ = rt.drain(rst)
+
+    # the tentpole invariant, now including the fault counters
+    rt.assert_metrics_consistent(rst)
+    for name in ("a", "b"):
+        mt = rt.tenant_view(rst, name).metrics
+        assert int(mt.degraded_reads) == seen[name], \
+            f"tenant {name}: degraded_reads != observed errored lanes"
+    glob = rst.metrics
+    assert int(glob.degraded_reads) == seen["a"] + seen["b"]
+    _cache_quiescent(rst.cache)

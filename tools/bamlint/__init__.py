@@ -1,6 +1,6 @@
 """bamlint — repo-native static analysis for the BaM reproduction.
 
-Five AST passes, stdlib-only (no JAX import, no execution of the checked
+Six AST passes, stdlib-only (no JAX import, no execution of the checked
 code), runnable as ``python -m tools.bamlint src benchmarks examples``:
 
 1. ``hostsync``       host-sync / retrace hazards in jit-reachable code
@@ -8,6 +8,7 @@ code), runnable as ``python -m tools.bamlint src benchmarks examples``:
 3. ``kernel_safety``  Pallas grid/BlockSpec geometry, ref aliasing, f64
 4. ``metrics_pass``   IOMetrics additive-vs-watermark conservation
 5. ``donation``       state used after a donating ``*_jit(donate=True)``
+6. ``receipts``       discarded SubmitReceipt/DrainReceipt accounting
 
 See docs/static_analysis.md for the rule catalogue, suppression syntax
 (``# bamlint: ignore[RULE]``) and the baseline workflow.
@@ -15,10 +16,12 @@ See docs/static_analysis.md for the rule catalogue, suppression syntax
 from __future__ import annotations
 
 from tools.bamlint import (
-    core, donation, hostsync, kernel_safety, metrics_pass, tokens,
+    core, donation, hostsync, kernel_safety, metrics_pass, receipts,
+    tokens,
 )
 
-PASSES = [hostsync, tokens, kernel_safety, metrics_pass, donation]
+PASSES = [hostsync, tokens, kernel_safety, metrics_pass, donation,
+          receipts]
 
 ALL_RULES = dict(core.RULES)   # framework rules (unused suppressions)
 for _p in PASSES:

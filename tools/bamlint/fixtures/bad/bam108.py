@@ -1,0 +1,20 @@
+# bamlint-fixture: expect BAM108
+# Three discard shapes: the bare statement loses the queue state AND the
+# receipt; the '_' binding and the [0] subscript keep the state but make
+# the drop/error accounting unreadable.
+import repro.core.queues as Q
+
+
+def bare_statement(qs, keys):
+    Q.enqueue(qs, keys)
+    return qs
+
+
+def underscore_binding(qs, keys):
+    qs, _ = Q.enqueue(qs, keys)
+    return qs
+
+
+def subscript_peel(qs):
+    qs = Q.drain_accounting(qs)[0]
+    return qs

@@ -1,0 +1,90 @@
+"""Pass 6 — receipt visibility: drop/error accounting must be readable.
+
+The queue layer reports back-pressure and fault accounting *only* through
+its return values: ``enqueue``/``enqueue_segments`` return a
+``SubmitReceipt`` (``accepted`` mask, per-device drop counts, command
+tickets) and ``drain_accounting`` returns a ``DrainReceipt`` (completed /
+errored / retried commands per device).  A call site that throws the
+receipt away cannot tell a served wavefront from one the rings silently
+dropped or the fault model failed — exactly the blindness the robustness
+PR removed.  The fix is one binding: read the receipt (or at least its
+``accepted``/error fields), or carry it into the token like
+``BamArray.submit`` does.
+
+Deliberate discards suppress with ``# bamlint: ignore[BAM108]`` and a
+justification.
+
+Rules
+-----
+BAM108  a ``SubmitReceipt``/``DrainReceipt``-returning call whose receipt
+        is provably discarded: the bare-statement form ``Q.enqueue(...)``,
+        the underscore form ``qs, _ = Q.enqueue(...)``, and the
+        subscript form ``qs = Q.enqueue(...)[0]``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.bamlint.core import Finding, ModuleInfo
+from tools.bamlint.reach import dotted, tail
+
+RULES = {
+    "BAM108": "SubmitReceipt/DrainReceipt discarded: drop/error "
+              "accounting is unreadable at this call site",
+}
+
+# Calls returning ``(queue_state, receipt)`` (or ``(qs, [receipts])``).
+RECEIPT_TAILS = ("enqueue", "enqueue_segments", "drain_accounting")
+
+
+def _is_receipt_call(node: ast.AST) -> bool:
+    return isinstance(node, ast.Call) and \
+        tail(dotted(node.func)) in RECEIPT_TAILS
+
+
+def _is_discard_name(node: ast.expr) -> bool:
+    return isinstance(node, ast.Name) and node.id.lstrip("_") == ""
+
+
+def check(mod: ModuleInfo) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        # bare statement: the whole (qs, receipt) result vanishes
+        if isinstance(node, ast.Expr) and _is_receipt_call(node.value):
+            call = node.value
+            out.append(mod.finding(
+                "BAM108", node,
+                f"result of {dotted(call.func)}(...) discarded — the "
+                f"receipt carries the drop/error accounting"))
+            continue
+        if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+            continue
+        value = node.value
+        targets = node.targets if isinstance(node, ast.Assign) \
+            else ([node.target] if node.value is not None else [])
+        # subscript form: ``qs = Q.enqueue(...)[0]`` peels the state and
+        # drops the receipt in the same expression
+        if isinstance(value, ast.Subscript) and \
+                _is_receipt_call(value.value):
+            idx = value.slice
+            if isinstance(idx, ast.Constant) and idx.value == 0:
+                out.append(mod.finding(
+                    "BAM108", node,
+                    f"[0]-subscript keeps only the state from "
+                    f"{dotted(value.value.func)}(...) — the receipt "
+                    f"is dropped unread"))
+            continue
+        if not _is_receipt_call(value):
+            continue
+        # underscore form: ``qs, _ = Q.enqueue(...)``
+        for tgt in targets:
+            if isinstance(tgt, (ast.Tuple, ast.List)) and \
+                    len(tgt.elts) >= 2 and \
+                    all(_is_discard_name(e) for e in tgt.elts[1:]):
+                out.append(mod.finding(
+                    "BAM108", node,
+                    f"receipt from {dotted(value.func)}(...) bound to "
+                    f"'_' and never read"))
+                break
+    return out
